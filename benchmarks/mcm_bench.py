@@ -1,0 +1,66 @@
+"""MCM benchmark (paper §IV): pipeline vs wavefront vs blocked-semiring,
+step counts validating the O(n²)-steps-with-n-threads claim."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocked_mcm, mcm
+
+SIZES = [32, 64, 128]
+
+
+def time_call(fn, *args, reps: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def run(report=print):
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in SIZES:
+        dims = rng.integers(1, 60, size=n + 1).astype(np.float64)
+        p32 = jnp.asarray(dims, jnp.float32)
+        t = mcm.build_pipeline_tables(dims, order="safe")
+        tl, tr = jnp.asarray(t.left), jnp.asarray(t.right)
+        tw, tk = jnp.asarray(t.weight, jnp.float32), jnp.asarray(t.k)
+
+        t_wave = time_call(mcm.solve_wavefront, p32, n)
+        t_pipe = time_call(mcm.solve_pipeline, tl, tr, tw, tk, n)
+        t_blk = time_call(blocked_mcm.solve_blocked, p32, n, 16)
+
+        t0 = time.perf_counter()
+        ref = mcm.reference_linear(dims)
+        t_seq = (time.perf_counter() - t0) * 1e6
+
+        got_w = np.asarray(mcm.solve_wavefront(p32, n))
+        got_p = np.asarray(mcm.solve_pipeline(tl, tr, tw, tk, n))
+        got_b = blocked_mcm.blocked_to_linear(
+            np.asarray(blocked_mcm.solve_blocked(p32, n, 16)))
+        for name, got in (("wave", got_w), ("pipe", got_p), ("blk", got_b)):
+            np.testing.assert_allclose(got, ref, rtol=1e-4, err_msg=name)
+
+        steps = {"seq": n ** 3 // 6, "wave": n - 1,
+                 "pipe": mcm.pipeline_num_steps(n),
+                 "gemm_frac": round(blocked_mcm.gemm_fraction(n, 16), 3)}
+        report(f"mcm,n={n},SEQ={t_seq:.0f}us,WAVEFRONT={t_wave:.0f}us,"
+               f"PIPELINE={t_pipe:.0f}us,BLOCKED={t_blk:.0f}us,steps={steps}")
+        rows.append(dict(n=n, t_seq=t_seq, t_wave=t_wave, t_pipe=t_pipe,
+                         t_blk=t_blk, steps=steps))
+    # O(n²) pipeline-step scaling claim: steps quadruple when n doubles
+    s = [r["steps"]["pipe"] for r in rows]
+    assert 3.5 < s[1] / s[0] < 4.5 and 3.5 < s[2] / s[1] < 4.5
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Render results/dryrun.jsonl into the EXPERIMENTS.md §Roofline table
+(between the <!-- ROOFLINE TABLE --> marker and §Perf)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import load
+
+
+def md_table(recs, mesh: str) -> str:
+    rows = sorted((r for r in recs if r["mesh"] == mesh),
+                  key=lambda r: (r["arch"], r["cell"]))
+    out = [f"**Mesh {mesh}** ({rows[0]['devices']} chips)" if rows else "",
+           "",
+           "| arch | cell | µb | cache | fits | compute_s | memory_s | coll_s | dominant | roof% | useful% | MFU% | HBM GiB | note |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        note = ""
+        if r["cell"].startswith("prefill") or (r["arch"].startswith(("jamba", "rwkv"))
+                                               and r["cell"].startswith("train")):
+            note = "mem term overstates fused-kernel paths"
+        out.append(
+            "| {arch} | {cell} | {mb} | {cd} | {fit} | {c:.3f} | {m:.2f} | {k:.2f} "
+            "| {dom} | {rf:.1f} | {ur:.1f} | {mfu:.2f} | {hbm:.1f} | {note} |".format(
+                arch=r["arch"], cell=r["cell"], mb=r.get("microbatches", 1),
+                cd=r.get("cache_dtype", "") or "-",
+                fit="✓" if r.get("fits_hbm") else "✗",
+                c=r["compute_s"], m=r["memory_s"], k=r["collective_s"],
+                dom=r["dominant"], rf=100 * r["roofline_frac"],
+                ur=100 * r["useful_ratio"], mfu=100 * r["mfu_bound"],
+                hbm=r["hbm_per_device"] / 2**30, note=note))
+    return "\n".join(out)
+
+
+def inject(path: str = "EXPERIMENTS.md"):
+    recs = load()
+    block = (md_table(recs, "16x16") + "\n\n" + md_table(recs, "2x16x16")
+             + "\n\nSkipped cells: `long_500k` for the eight full-attention "
+               "archs (sub-quadratic-only shape; DESIGN.md §5).\n")
+    text = open(path).read()
+    marker = "<!-- ROOFLINE TABLE -->"
+    pre, _, post = text.partition(marker)
+    # drop anything previously injected up to the next section header
+    tail = post
+    idx = tail.find("\n## §Perf")
+    tail = tail[idx:] if idx >= 0 else tail
+    open(path, "w").write(pre + marker + "\n\n" + block + tail)
+    print(f"injected {len(recs)} records into {path}")
+
+
+if __name__ == "__main__":
+    inject()

@@ -1,0 +1,116 @@
+"""Roofline analysis (deliverable g): three-term roofline per (arch × cell ×
+mesh) from the dry-run records in results/dryrun.jsonl.
+
+    compute_s    = per-device loop-aware HLO dot FLOPs / 197e12   (bf16 MXU)
+    memory_s     = per-device HLO-boundary HBM traffic / 819e9
+    collective_s = per-device collective output bytes (×2 for all-reduce,
+                   ring cost) / 50e9 ICI
+
+Byte models are documented in EXPERIMENTS.md §Roofline: FLOPs count dots with
+while-loops unrolled by known trip counts; HBM traffic sums operand+output
+bytes at HLO op (fusion-boundary) granularity; collective bytes are the SPMD
+module's per-device payloads.
+
+Derived:
+    bound_s         = max of the three (step-time lower bound)
+    dominant        = argmax
+    roofline_frac   = compute_s / bound_s (1.0 ⇔ compute-bound ⇔ at roofline)
+    model_flops     = 6·N·D (dense) or 6·N_active·D (MoE), fwd+bwd; 2·N·D fwd
+    mfu_bound       = model_flops / chips / 197e12 / bound_s
+    useful_ratio    = model_flops / (chips · HLO_FLOPs) — remat/overhead waste
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+AR_FACTOR = 2.0          # ring all-reduce moves ~2x payload per device
+
+
+def model_flops(rec: dict) -> float:
+    """6·N_active·D for train (fwd+bwd), 2·N_active·D for prefill/decode."""
+    n_act = rec["active_param_count"]
+    cell = rec["cell"]
+    if cell.startswith("train"):
+        tokens = 256 * 4096
+        return 6.0 * n_act * tokens
+    if cell.startswith("prefill"):
+        return 2.0 * n_act * 32 * 32768
+    # decode: one token per sequence
+    batch = 128 if cell == "decode_32k" else 1
+    return 2.0 * n_act * batch
+
+
+def terms(rec: dict) -> dict:
+    chips = rec["devices"]
+    comp = rec["flops"] / PEAK_FLOPS
+    mem = rec.get("hbm_traffic_bytes", 0.0) / HBM_BW
+    coll = rec["collectives"]
+    coll_bytes = (AR_FACTOR * coll.get("all-reduce", 0)
+                  + coll.get("all-gather", 0) + coll.get("reduce-scatter", 0)
+                  + coll.get("all-to-all", 0) + coll.get("collective-permute", 0))
+    ici = coll_bytes / ICI_BW
+    bound = max(comp, mem, ici, 1e-12)
+    dom = {comp: "compute", mem: "memory", ici: "collective"}[max(comp, mem, ici)]
+    mf = model_flops(rec)
+    return {
+        "compute_s": comp, "memory_s": mem, "collective_s": ici,
+        "bound_s": bound, "dominant": dom,
+        "roofline_frac": comp / bound,
+        "model_flops": mf,
+        "useful_ratio": mf / max(chips * rec["flops"], 1e-9),
+        "mfu_bound": mf / chips / PEAK_FLOPS / bound,
+    }
+
+
+def load(path: str = "results/dryrun.jsonl") -> list:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            rec = json.loads(line)
+            rec.update(terms(rec))
+            out.append(rec)
+    return out
+
+
+def table(recs: list, mesh: Optional[str] = "16x16") -> str:
+    rows = [r for r in recs if mesh is None or r["mesh"] == mesh]
+    hdr = (f"{'arch':<22}{'cell':<12}{'mb':>3} {'comp_s':>9} {'mem_s':>9} "
+           f"{'coll_s':>9} {'dom':<10} {'roof%':>6} {'MFU%':>6} {'useful%':>8} "
+           f"{'HBM GiB':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["cell"])):
+        lines.append(
+            f"{r['arch']:<22}{r['cell']:<12}{r.get('microbatches', 1):>3} "
+            f"{r['compute_s']:>9.4f} {r['memory_s']:>9.4f} {r['collective_s']:>9.4f} "
+            f"{r['dominant']:<10} {100 * r['roofline_frac']:>5.1f} "
+            f"{100 * r['mfu_bound']:>5.1f} {100 * r['useful_ratio']:>7.1f} "
+            f"{r['hbm_per_device'] / 2**30:>8.1f}")
+    return "\n".join(lines)
+
+
+def run(report=print, path: str = "results/dryrun.jsonl"):
+    recs = load(path)
+    if not recs:
+        report("roofline,SKIPPED (no results/dryrun.jsonl — run repro.launch.dryrun)")
+        return []
+    for r in recs:
+        report(f"roofline,{r['arch']},{r['cell']},{r['mesh']},"
+               f"compute_s={r['compute_s']:.4f},memory_s={r['memory_s']:.4f},"
+               f"collective_s={r['collective_s']:.4f},dominant={r['dominant']},"
+               f"roofline_frac={r['roofline_frac']:.3f},mfu_bound={r['mfu_bound']:.3f}")
+    return recs
+
+
+if __name__ == "__main__":
+    recs = load()
+    print(table(recs, "16x16"))
+    print()
+    print(table(recs, "2x16x16"))

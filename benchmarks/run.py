@@ -1,0 +1,20 @@
+"""Benchmark aggregator: one section per paper table/figure + the roofline.
+
+Prints ``name,...`` CSV lines; exits nonzero on correctness failures.
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import mcm_bench, roofline, table1_sdp
+
+    print("# Table I — S-DP implementations (paper §III-B)")
+    table1_sdp.run()
+    print("# MCM — pipeline vs wavefront vs blocked (paper §IV)")
+    mcm_bench.run()
+    print("# Roofline — dry-run derived terms (EXPERIMENTS.md §Roofline)")
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Example: DP planners as framework services — chain ordering for real
+attention/LoRA projection chains and DP-balanced pipeline stages.
+
+    PYTHONPATH=src python examples/mcm_planner.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.planner import partition_stages, plan_chain
+
+# --- 1. LoRA-chain ordering --------------------------------------------------
+# x (tokens × d) @ A (d × r) @ B (r × d) — MCM decides (xA)B vs x(AB)
+tokens, d, r = 8192, 4096, 16
+plan = plan_chain([(tokens, d), (d, r), (r, d)])
+print(f"LoRA chain: optimal={plan.flops:.3e} naive={plan.naive_flops:.3e} "
+      f"tree={plan.tree}")
+
+# --- 2. Attention-score chain for a small batch -----------------------------
+# q (s × dh) @ K^T (dh × s) @ v (s × dh): MCM picks the cheaper association
+for s, dh in [(128, 512), (4096, 64)]:
+    p = plan_chain([(s, dh), (dh, s), (s, dh)])
+    order = "(qK)v" if p.tree[1][0] == "mul" else "q(Kv)"
+    print(f"s={s} dh={dh}: {order} flops={p.flops:.3e} (naive {p.naive_flops:.3e})")
+
+# --- 3. Pipeline-stage partitioning over a real config -----------------------
+cfg = get_config("jamba-1.5-large-398b")
+costs = []
+for i in range(cfg.n_layers):
+    mixer = cfg.mixer_of(i)
+    mlp = cfg.mlp_of(i)
+    c = 1.0 if mixer == "attn" else 0.7           # relative per-layer cost
+    c += 3.0 if mlp == "moe" else 1.0
+    costs.append(c)
+bounds, bottleneck = partition_stages(costs, 8)
+sizes = np.diff([0, *bounds, len(costs)])
+print(f"jamba → 8 pipeline stages: layer counts {sizes.tolist()}, "
+      f"bottleneck stage cost {bottleneck:.1f} "
+      f"(uniform split would be {max(np.add.reduceat(costs, np.arange(0, 72, 9))):.1f})")

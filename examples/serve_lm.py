@@ -1,0 +1,10 @@
+"""End-to-end example: continuous-batching serving of a reduced qwen3 with
+batched requests (deliverable b).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen3-14b", "--requests", "10", "--max-new", "16",
+          "--max-batch", "4"])

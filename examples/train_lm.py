@@ -1,0 +1,15 @@
+"""End-to-end example: train the ~100M-param LM for a few hundred steps with
+checkpointing + fault-tolerant supervision (deliverable b).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    if not any(a.startswith("--steps") for a in args):
+        args += ["--steps", "300"]
+    main(["--preset", "lm100m", "--batch", "8", "--seq", "256",
+          "--ckpt-every", "100"] + args)

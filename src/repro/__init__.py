@@ -1,0 +1,2 @@
+"""repro: pipelined-DP (Matsumae & Miyazaki 2020) as a production JAX/TPU framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,126 @@
+"""Sharded checkpointing: per-leaf .npy blobs + a msgpack manifest, async
+writes, and reshard-on-restore.
+
+Layout:  <dir>/step_<N>/manifest.msgpack
+         <dir>/step_<N>/<leaf-id>.npy          (bf16 stored as uint16 views)
+
+Restore takes an *abstract* target tree (ShapeDtypeStructs with shardings) so
+a checkpoint written on one mesh can be loaded onto another — this is the
+mechanism behind elastic re-meshing (runtime/elastic.py) and restart-after-
+failure (runtime/fault_tolerance.py). Single-host here; multi-host would
+write per-process shards behind the same manifest format (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import os
+import re
+import shutil
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _leaf_id(path) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", jax.tree_util.keystr(path))[:180]
+
+
+def _to_numpy(x) -> tuple:
+    arr = np.asarray(x)
+    if str(arr.dtype) == _BF16:
+        return arr.view(np.uint16), _BF16
+    return arr, str(arr.dtype)
+
+
+def _from_numpy(arr: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == _BF16:
+        return arr.view(jnp.bfloat16.dtype)
+    return arr.astype(dtype, copy=False)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = cf.ThreadPoolExecutor(max_workers=4)
+        self._pending: Optional[cf.Future] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = False):
+        """Write asynchronously (unless blocking); returns a Future."""
+        # snapshot to host synchronously so training can mutate freely after
+        leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+        host = [( _leaf_id(p), *_to_numpy(jax.device_get(x))) for p, x in leaves]
+
+        def write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            manifest = []
+            for lid, arr, dtype in host:
+                np.save(os.path.join(tmp, lid + ".npy"), arr, allow_pickle=False)
+                manifest.append({"id": lid, "dtype": dtype, "shape": list(arr.shape)})
+            with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+                f.write(msgpack.packb({"step": step, "leaves": manifest}))
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+            return final
+
+        self.wait()
+        self._pending = self._pool.submit(write)
+        if blocking:
+            return self._pending.result()
+        return self._pending
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def steps(self) -> list:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "manifest.msgpack")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, like):
+        """Restore onto the structure/shardings of the abstract tree `like`."""
+        self.wait()
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        by_id = {m["id"]: m for m in manifest["leaves"]}
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        for path, proto in leaves:
+            lid = _leaf_id(path)
+            if lid not in by_id:
+                raise KeyError(f"checkpoint step {step} missing leaf {lid}")
+            raw = np.load(os.path.join(d, lid + ".npy"), allow_pickle=False)
+            arr = _from_numpy(raw, by_id[lid]["dtype"])
+            sharding = getattr(proto, "sharding", None)
+            if sharding is not None:
+                out.append(jax.device_put(arr, sharding))
+            else:
+                out.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,10 @@
+"""Core library: the paper's pipelined-DP contribution.
+
+  * ``sdp``         — Simplified DP problem solvers (Def. 1, Figs. 1-2)
+  * ``mcm``         — Matrix-chain multiplication pipeline (Fig. 8, Thm. 1)
+  * ``blocked_mcm`` — beyond-paper tropical-GEMM tiling
+  * ``schedule``    — the skewed pipeline schedule shared with the PP runtime
+  * ``planner``     — MCM/partition DPs as framework planning services
+  * ``semiring``    — the algebra underneath all of the above
+"""
+from repro.core import blocked_mcm, mcm, planner, schedule, sdp, semiring  # noqa: F401

@@ -1,0 +1,160 @@
+"""Beyond-paper: blocked MCM via weighted tropical (min,+) tile products.
+
+The paper's pipeline finalizes one cell per step — latency-optimal but
+bandwidth-bound (every step is a small gather/scatter). On TPU the winning
+transformation makes the combine *compute-bound*: for tiles of size T,
+the contribution of all splits ``s`` inside a *middle* tile ``S`` to block
+``(I, J)`` is a weighted (min,+) matrix product
+
+    C[i,j] = min_s ( m[i,s] + m[s+1,j] + p_i · p_{s+1} · p_{j+1} )
+           = min_s ( A[i,s] + B[s,j] + a_i · g_s · b_j )
+
+with ``A = m[tile I, tile S]``, ``B = m[tile S rows + 1, tile J]`` — exactly
+the shape of an MXU contraction in the tropical semiring (Pallas kernel
+``kernels/semiring_matmul.py``). Only the two *boundary* tiles (splits inside
+tile I or tile J) retain sequential structure; they are resolved by a local
+anti-diagonal wavefront of 2T-1 steps — the paper's pipeline idea applied at
+tile granularity.
+
+Work: O(n³) total; the GEMM fraction → 1 as n/T grows; depth O(n) wavefront
+steps — matching the paper's step bound while feeding the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["solve_blocked", "weighted_tropical_matmul", "gemm_fraction"]
+
+
+def weighted_tropical_matmul(a_tile, b_tile, av, gv, bv, acc=None):
+    """C[i,j] = min_s (A[i,s] + B[s,j] + av[i]*gv[s]*bv[j]), min-combined w/ acc.
+
+    Reference jnp implementation of the contraction; the Pallas kernel in
+    ``kernels/semiring_matmul.py`` computes the same thing tiled in VMEM.
+    """
+    t = (a_tile[:, :, None] + b_tile[None, :, :]
+         + (av[:, None, None] * gv[None, :, None]) * bv[None, None, :])
+    c = jnp.min(t, axis=1)
+    return c if acc is None else jnp.minimum(acc, c)
+
+
+def gemm_fraction(n: int, tile: int) -> float:
+    """Fraction of split-combine work performed as tropical GEMMs."""
+    nt = n // tile
+    gemm = sum(max(d - 1, 0) * (nt - d) for d in range(1, nt)) * tile**3
+    total = sum(d * (n - d) for d in range(1, n))  # total split evaluations
+    return gemm / max(total, 1)
+
+
+def _intra_block_wavefront(m, acc, I, J, p, T, n, diag: bool):
+    """Resolve boundary splits of block (I, J) by a 2T-1-step local wavefront.
+
+    acc: (T, T) GEMM partials (inf where no middle-tile contribution; for the
+    diagonal tiles: inf with a zero local diagonal). Reads: frozen ``m``
+    (earlier block-diagonals) + the block carry. Returns the finished block.
+    """
+    r0 = I * T
+    c0 = J * T
+    li = jnp.arange(T)
+
+    def step(l, blk):
+        off = l - (T - 1)
+        rows = li                                  # (T,) candidate local rows
+        cols = rows + off
+        valid = (cols >= 0) & (cols < T)
+        colsc = jnp.clip(cols, 0, T - 1)
+        i_g = r0 + rows                            # (T,) global rows
+        j_g = c0 + colsc                           # (T,) global cols (clipped)
+
+        # --- boundary splits in tile I: s ∈ [i, min((I+1)T, j)) ------------
+        sI = r0 + li[None, :]                      # (1, T) global split ids
+        okI = sI >= i_g[:, None]
+        if diag:
+            okI = okI & (sI < j_g[:, None])
+            a1 = blk[rows[:, None], jnp.clip(sI - r0, 0, T - 1)]
+        else:
+            a1 = m[i_g[:, None], jnp.clip(sI, 0, n - 1)]   # diag tile (I,I), frozen
+        srow = sI + 1 - r0                          # local row of s+1
+        in_blk = srow < T
+        b_in = blk[jnp.clip(srow, 0, T - 1), colsc[:, None]]
+        b_out = m[jnp.clip(sI + 1, 0, n - 1), j_g[:, None]]
+        b1 = jnp.where(in_blk, b_in, b_out)
+        w1 = p[i_g[:, None]] * p[jnp.clip(sI + 1, 0, n)] * p[jnp.clip(j_g[:, None] + 1, 0, n)]
+        c1 = jnp.where(okI, a1 + b1 + w1, jnp.inf)
+        best = jnp.min(c1, axis=1)
+
+        if not diag:
+            # --- boundary splits in tile J: s ∈ [JT, j) ---------------------
+            sJ = c0 + li[None, :]                   # (1, T)
+            okJ = sJ < j_g[:, None]
+            a2 = blk[rows[:, None], jnp.clip(sJ - c0, 0, T - 1)]
+            b2 = m[jnp.clip(sJ + 1, 0, n - 1), j_g[:, None]]  # diag tile (J,J), frozen
+            w2 = p[i_g[:, None]] * p[jnp.clip(sJ + 1, 0, n)] * p[jnp.clip(j_g[:, None] + 1, 0, n)]
+            c2 = jnp.where(okJ, a2 + b2 + w2, jnp.inf)
+            best = jnp.minimum(best, jnp.min(c2, axis=1))
+
+        cur = blk[rows, colsc]
+        new = jnp.where(valid, jnp.minimum(cur, best), cur)
+        return blk.at[rows, colsc].set(new)
+
+    return jax.lax.fori_loop(0, 2 * T - 1, step, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "tile"))
+def solve_blocked(p: jnp.ndarray, n: int, tile: int) -> jnp.ndarray:
+    """Blocked MCM. ``p``: (n+1,) dims, ``n % tile == 0``. Returns (n, n) table."""
+    if n % tile:
+        raise ValueError(f"n={n} must be divisible by tile={tile}")
+    T, nt = tile, n // tile
+    m = jnp.zeros((n, n), dtype=p.dtype)
+
+    # ---- D = 0: diagonal tiles, independent local wavefronts --------------
+    eye0 = jnp.where(jnp.eye(T, dtype=bool), 0.0, jnp.inf).astype(p.dtype)
+
+    def diag_tile(I):
+        return _intra_block_wavefront(m, eye0, I, I, p, T, n, diag=True)
+
+    diag_blocks = jax.vmap(diag_tile)(jnp.arange(nt))
+    for I in range(nt):
+        m = jax.lax.dynamic_update_slice(m, diag_blocks[I], (I * T, I * T))
+
+    # ---- D ≥ 1: GEMM-accumulate middle tiles, then boundary wavefront -----
+    for D in range(1, nt):
+        def block_result(I, m=m, D=D):
+            J = I + D
+            r0, c0 = I * T, J * T
+            av = jax.lax.dynamic_slice(p, (r0,), (T,))
+            bv = jax.lax.dynamic_slice(p, (c0 + 1,), (T,))
+
+            def gemm_acc(s_rel, acc):
+                S = I + s_rel
+                A = jax.lax.dynamic_slice(m, (r0, S * T), (T, T))
+                B = jax.lax.dynamic_slice(m, (S * T + 1, c0), (T, T))
+                gv = jax.lax.dynamic_slice(p, (S * T + 1,), (T,))
+                return weighted_tropical_matmul(A, B, av, gv, bv, acc=acc)
+
+            acc = jnp.full((T, T), jnp.inf, dtype=p.dtype)
+            if D >= 2:
+                acc = jax.lax.fori_loop(1, D, gemm_acc, acc)
+            return _intra_block_wavefront(m, acc, I, J, p, T, n, diag=False)
+
+        blocks = jax.vmap(block_result)(jnp.arange(nt - D))
+        for I in range(nt - D):
+            m = jax.lax.dynamic_update_slice(m, blocks[I], (I * T, (I + D) * T))
+    return m
+
+
+def blocked_to_linear(m: np.ndarray) -> np.ndarray:
+    """Flatten an (n, n) table to the paper's diagonal-major linear order."""
+    from repro.core.mcm import lin_index, num_cells
+
+    n = m.shape[0]
+    st = np.zeros(num_cells(n))
+    for d in range(n):
+        for i in range(n - d):
+            st[lin_index(i, d, n)] = m[i, i + d]
+    return st

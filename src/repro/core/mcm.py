@@ -1,0 +1,282 @@
+"""Matrix-chain multiplication (MCM) solvers — §IV of the paper.
+
+Cells ``(i, j)`` with ``0 ≤ i ≤ j < n`` (chain of ``n`` matrices; matrix ``t``
+has shape ``p[t] × p[t+1]``). Diagonal ``d = j - i``; diagonal-major
+linearization (paper Fig. 5/7):
+
+    lin(i, d) = d·n - d(d-1)/2 + i            (diagonal d holds n-d cells)
+
+Cell ``(i, j)``, ``d ≥ 1`` has ``k = d`` split candidates,
+
+    cand(s) = m[i, s] + m[s+1, j] + p[i]·p[s+1]·p[j+1],   reduced by ↓ = min.
+
+The paper's Fig.-8 pipeline assigns candidate slot ``j`` (executed at step
+``c + j``, 0-based) to split ``s = i + j`` — the "j-th element from the left"
+of Lemmas 1/2.
+
+**Finding (dependency hazard in the paper's schedule).** Theorem 1 proves
+*same-substep address distinctness* but not *operand finalization*. Slot 0's
+right operand is cell ``(i+1, j)`` on diagonal ``d-1``: it sits one position
+before ``c`` in linear order yet still needs ``d-2`` more candidates when the
+read happens. For any ``n ≥ 5`` random instances produce inflated results
+(see ``tests/test_mcm.py::test_paper_order_hazard``). S-DP does not suffer
+this because its offsets strictly decrease (``a_j ≥ a_k + (k-j)`` gives each
+stage a safety margin).
+
+**Repair (order="safe", the default).** Keep the paper's machinery — skewed
+head, one candidate/cell/step, cell ``c`` finalized at step ``c + k_c - 1`` —
+but permute each cell's candidates by *earliest operand-ready step*. A
+Hall-type argument (see DESIGN.md §2) shows the greedy assignment is always
+feasible (validated exhaustively in tests); the step count and the O(n²)
+complexity claim are unchanged. Write distinctness is preserved (cells per
+step stay distinct); *read* distinctness may be lost, which on a GPU would
+re-introduce serialization but on TPU a vector gather with duplicate
+addresses costs the same — a hardware adaptation recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "mcm_reference",
+    "reference_linear",
+    "num_cells",
+    "lin_index",
+    "diag_of",
+    "build_pipeline_tables",
+    "solve_wavefront",
+    "solve_pipeline",
+    "solve_pipeline_np",
+    "pipeline_num_steps",
+    "PipelineTables",
+]
+
+INF = jnp.inf
+
+
+def num_cells(n: int) -> int:
+    return n * (n + 1) // 2
+
+
+def lin_index(i, d, n):
+    """Diagonal-major linear index of cell (i, i+d) in an n-chain table."""
+    return d * n - (d * (d - 1)) // 2 + i
+
+
+def diag_of(c: int, n: int) -> int:
+    """Diagonal containing linear cell c (host-side helper)."""
+    d, off = 0, 0
+    while off + (n - d) <= c:
+        off += n - d
+        d += 1
+    return d
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle (CLRS 15.2)
+# ---------------------------------------------------------------------------
+def mcm_reference(dims) -> tuple[np.ndarray, np.ndarray]:
+    """O(n³) DP. Returns (m, split): m[i][j] = min cost of A_i..A_j."""
+    p = np.asarray(dims, dtype=np.float64)
+    n = len(p) - 1
+    m = np.zeros((n, n))
+    split = np.full((n, n), -1, dtype=np.int64)
+    for d in range(1, n):
+        for i in range(n - d):
+            j = i + d
+            best, bs = np.inf, -1
+            for s in range(i, j):
+                c = m[i, s] + m[s + 1, j] + p[i] * p[s + 1] * p[j + 1]
+                if c < best:
+                    best, bs = c, s
+            m[i, j] = best
+            split[i, j] = bs
+    return m, split
+
+
+def reference_linear(dims) -> np.ndarray:
+    """Oracle table flattened in the paper's diagonal-major order."""
+    p = np.asarray(dims)
+    n = len(p) - 1
+    m, _ = mcm_reference(dims)
+    st = np.zeros(num_cells(n))
+    for d in range(n):
+        for i in range(n - d):
+            st[lin_index(i, d, n)] = m[i, i + d]
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Pipeline index tables (the l/r/w maps of equation (2))
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PipelineTables:
+    """Per-(cell, slot) index maps. O(n³/2) entries — paper-scale only."""
+
+    n: int
+    order: str
+    left: np.ndarray    # (cells, n-1) linear index of the slot's left operand
+    right: np.ndarray   # (cells, n-1) linear index of the slot's right operand
+    weight: np.ndarray  # (cells, n-1) p_i * p_{s+1} * p_{j+1}
+    k: np.ndarray       # (cells,) candidate count (= diagonal of the cell)
+    feasible: bool      # every slot's operands finalized before its read step
+
+
+def build_pipeline_tables(dims, order: str = "safe") -> PipelineTables:
+    """order="paper": Fig.-8 slot j ↔ split i+j (has the hazard above).
+    order="safe": earliest-ready-first permutation (default, exact)."""
+    p = np.asarray(dims, dtype=np.float64)
+    n = len(p) - 1
+    cells = num_cells(n)
+    maxk = max(n - 1, 1)
+    left = np.zeros((cells, maxk), dtype=np.int64)
+    right = np.zeros((cells, maxk), dtype=np.int64)
+    weight = np.zeros((cells, maxk), dtype=np.float64)
+    kk = np.zeros((cells,), dtype=np.int64)
+
+    # finalize step of each cell: c + k_c - 1 (diag-0 cells are preset)
+    final = np.full(cells, -(10**9), dtype=np.int64)
+    for d in range(1, n):
+        for i in range(n - d):
+            c = lin_index(i, d, n)
+            final[c] = c + d - 1
+
+    feasible = True
+    for d in range(1, n):
+        for i in range(n - d):
+            c = lin_index(i, d, n)
+            kk[c] = d
+            cand = []
+            for e in range(d):  # split s = i + e; left diag e, right diag d-e-1
+                s = i + e
+                L = lin_index(i, e, n)
+                R = lin_index(s + 1, d - e - 1, n)
+                ready = max(final[L], final[R]) + 1
+                cand.append((ready, L, R, p[i] * p[s + 1] * p[i + d + 1]))
+            if order == "safe":
+                cand.sort(key=lambda x: x[0])
+            elif order != "paper":
+                raise ValueError(order)
+            for jc, (ready, L, R, w) in enumerate(cand):
+                if c + jc < ready:
+                    feasible = False
+                left[c, jc], right[c, jc], weight[c, jc] = L, R, w
+    return PipelineTables(n=n, order=order, left=left, right=right,
+                          weight=weight, k=kk, feasible=feasible)
+
+
+def pipeline_num_steps(n: int) -> int:
+    """Outer steps of Fig. 8: head sweeps cells n..cells-1 plus (n-2) drain."""
+    return num_cells(n) + (n - 1) - 1 - n
+
+
+# ---------------------------------------------------------------------------
+# Wavefront solver — arithmetic indexing, no tables; fori_loop over diagonals.
+# The standard parallelization the paper contrasts against (and the
+# throughput-optimal form on TPU: each step is a dense masked (n × n) combine).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n",))
+def solve_wavefront(p: jnp.ndarray, n: int) -> jnp.ndarray:
+    """p: (n+1,) dims. Returns the linearized table ST."""
+    cells = num_cells(n)
+    st = jnp.zeros((cells,), dtype=p.dtype)  # diagonal 0 preset to 0
+    ii = jnp.arange(n)[:, None]              # rows (padded)
+    ee = jnp.arange(max(n - 1, 1))[None, :]  # split offsets (padded)
+
+    def body(d, st):
+        valid = (ii < n - d) & (ee < d)
+        li = lin_index(ii, ee, n)                            # cell (i, i+e)
+        ri = lin_index(ii + ee + 1, d - ee - 1, n)           # cell (i+e+1, i+d)
+        w = p[ii] * p[jnp.clip(ii + ee + 1, 0, n)] * p[jnp.clip(ii + d + 1, 0, n)]
+        cand = jnp.where(valid,
+                         st[jnp.clip(li, 0, cells - 1)]
+                         + st[jnp.clip(ri, 0, cells - 1)] + w,
+                         INF)
+        out = jnp.min(cand, axis=1)                          # (n,)
+        widx = jnp.where(ii[:, 0] < n - d, lin_index(ii[:, 0], d, n), cells)
+        return st.at[widx].set(out, mode="drop", unique_indices=True)
+
+    return jax.lax.fori_loop(1, n, body, st)
+
+
+# ---------------------------------------------------------------------------
+# The paper's pipeline (Fig. 8) on the linearized table, vectorized over the
+# n-1 stages: one gather/gather/f/min-scatter per outer step.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n",))
+def solve_pipeline(left: jnp.ndarray, right: jnp.ndarray, weight: jnp.ndarray,
+                   k: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Run the pipeline given (possibly permuted) tables.
+
+    Substeps 1–4 of Fig. 8 map to: gather l, gather r, f = l+r+w, ↓-accumulate.
+    Write addresses are consecutive cells — unique by construction (Thm. 1).
+    """
+    cells = num_cells(n)
+    maxk = left.shape[1]
+    js = jnp.arange(maxk)
+    st = jnp.zeros((cells,), dtype=weight.dtype)
+
+    def body(t, st):
+        c = t - js                                           # (maxk,) cells
+        cc = jnp.clip(c, 0, cells - 1)
+        active = (c >= n) & (c < cells) & (js < k[cc])
+        v_l = st[jnp.clip(left[cc, js], 0, cells - 1)]       # substep 1
+        v_r = st[jnp.clip(right[cc, js], 0, cells - 1)]      # substep 2
+        v_s = v_l + v_r + weight[cc, js]                     # substep 3
+        new = jnp.where(js == 0, v_s, jnp.minimum(st[cc], v_s))  # substep 4
+        widx = jnp.where(active, c, cells)
+        return st.at[widx].set(new, mode="drop", unique_indices=True)
+
+    return jax.lax.fori_loop(n, cells + maxk - 1, body, st)
+
+
+def solve_mcm_pipeline(dims, order: str = "safe") -> np.ndarray:
+    """Convenience wrapper: tables + JAX pipeline -> linearized table."""
+    t = build_pipeline_tables(dims, order=order)
+    st = solve_pipeline(jnp.asarray(t.left), jnp.asarray(t.right),
+                        jnp.asarray(t.weight), jnp.asarray(t.k), t.n)
+    return np.asarray(st)
+
+
+def solve_pipeline_np(dims, order: str = "safe", check_conflicts: bool = False):
+    """Host-side step-by-step pipeline used by tests.
+
+    Returns (st, stats) with stats = dict(max_read_dup, max_write_dup,
+    dependency_violations) measured per substep — Theorem 1 says write dup
+    must be 1; the safe order may raise read dup (harmless on TPU).
+    """
+    t = build_pipeline_tables(dims, order=order)
+    n, cells = t.n, num_cells(t.n)
+    maxk = t.left.shape[1]
+    st = np.zeros(cells)
+    final = {lin_index(i, d, n): lin_index(i, d, n) + d - 1
+             for d in range(1, n) for i in range(n - d)}
+    stats = {"max_read_dup": 1, "max_write_dup": 1, "dependency_violations": 0}
+    for step in range(n, cells + maxk - 1):
+        js = np.arange(maxk)
+        c = step - js
+        ok = (c >= n) & (c < cells)
+        cc = np.where(ok, c, 0)
+        active = ok & (js < t.k[cc])
+        if check_conflicts and active.any():
+            for name, addr in (("read", t.left[cc, js][active]),
+                               ("read", t.right[cc, js][active]),
+                               ("write", c[active])):
+                _, counts = np.unique(addr, return_counts=True)
+                key = f"max_{name}_dup"
+                stats[key] = max(stats[key], int(counts.max()))
+            for src in (t.left[cc, js][active], t.right[cc, js][active]):
+                for a in src:
+                    if a in final and final[a] >= step:
+                        stats["dependency_violations"] += 1
+        snap = st.copy()
+        v = snap[t.left[cc, js]] + snap[t.right[cc, js]] + t.weight[cc, js]
+        for j in np.nonzero(active)[0]:
+            ci = c[j]
+            st[ci] = v[j] if j == 0 else min(st[ci], v[j])
+    return st, stats

@@ -1,0 +1,85 @@
+"""Semiring / semigroup algebra used by the DP solvers.
+
+The paper's S-DP problem (Def. 1) only requires a *semigroup* operator ``⊗``.
+Two of our beyond-paper solvers (companion-matrix scan, blocked semiring MCM)
+additionally exploit *semiring* structure: ``(add, mul)`` with identities, where
+``add`` plays the role of the paper's ``⊗``/``↓`` reduction and ``mul`` combines
+along a dependency path (e.g. tropical ``(min, +)`` for MCM).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Semigroup:
+    """The paper's ``⊗``: associative binary operator over integers/floats."""
+
+    name: str
+    op: Callable[[Array, Array], Array]
+    np_op: Callable[[np.ndarray, np.ndarray], np.ndarray]
+    # Absorbing-free identity used to mask inactive lanes in vectorized steps.
+    identity: float
+
+    def reduce(self, x: Array, axis: int = -1) -> Array:
+        """Tree reduction along ``axis`` (the tournament of §II-B)."""
+        n = x.shape[axis]
+        x = jnp.moveaxis(x, axis, 0)
+        while x.shape[0] > 1:
+            m = x.shape[0]
+            half = m // 2
+            head = self.op(x[:half], x[half : 2 * half])
+            x = jnp.concatenate([head, x[2 * half :]], axis=0) if m % 2 else head
+        return x[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """``(add, mul)`` with identities; ``add`` is the S-DP ``⊗`` / MCM ``↓``."""
+
+    name: str
+    add: Callable[[Array, Array], Array]
+    mul: Callable[[Array, Array], Array]
+    zero: float  # identity of add (absorbing for mul in tropical rings)
+    one: float  # identity of mul
+
+    def matmul(self, a: Array, b: Array) -> Array:
+        """Semiring matrix product: C[i,j] = add_k mul(A[i,k], B[k,j]).
+
+        Shapes: ``a: (..., m, k)``, ``b: (..., k, n)``. For the tropical ring this
+        is the (min,+) product at the heart of blocked MCM.
+        """
+        if self.name == "plus_times":
+            return a @ b  # fast path: ordinary linear algebra (MXU-mapped)
+        # (..., m, k, 1) x (..., 1, k, n) -> reduce over k
+        prod = self.mul(a[..., :, :, None], b[..., None, :, :])
+        if self.name == "min_plus":
+            return jnp.min(prod, axis=-2)
+        if self.name == "max_plus":
+            return jnp.max(prod, axis=-2)
+        raise NotImplementedError(self.name)
+
+    def matvec(self, a: Array, v: Array) -> Array:
+        return self.matmul(a, v[..., None])[..., 0]
+
+
+SEMIGROUPS = {
+    "min": Semigroup("min", jnp.minimum, np.minimum, identity=float("inf")),
+    "max": Semigroup("max", jnp.maximum, np.maximum, identity=float("-inf")),
+    "add": Semigroup("add", jnp.add, np.add, identity=0.0),
+}
+
+MIN_PLUS = Semiring("min_plus", add=jnp.minimum, mul=jnp.add, zero=float("inf"), one=0.0)
+MAX_PLUS = Semiring("max_plus", add=jnp.maximum, mul=jnp.add, zero=float("-inf"), one=0.0)
+PLUS_TIMES = Semiring("plus_times", add=jnp.add, mul=jnp.multiply, zero=0.0, one=1.0)
+
+SEMIRINGS = {"min_plus": MIN_PLUS, "max_plus": MAX_PLUS, "plus_times": PLUS_TIMES}
+
+#: semigroup name -> semiring whose ``add`` matches it (for the scan solver)
+SEMIGROUP_TO_SEMIRING = {"min": MIN_PLUS, "max": MAX_PLUS, "add": PLUS_TIMES}

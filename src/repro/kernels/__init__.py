@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute spots, each with a
+pure-jnp oracle in ``ref.py`` and a dispatching wrapper in ``ops.py``.
+
+  * ``semiring_matmul`` — weighted tropical (min,+) GEMM (blocked MCM core)
+  * ``sdp_pipeline``    — VMEM-resident blocked pipelined S-DP solver
+  * ``chunked_scan``    — gated linear recurrence (SSM/RWKV layers)
+  * ``flash_attention`` — causal online-softmax attention (prefill cells)
+"""
+from repro.kernels import ops, ref  # noqa: F401

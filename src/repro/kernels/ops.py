@@ -1,0 +1,131 @@
+"""Dispatch layer: jit'd public wrappers around the Pallas kernels.
+
+Policy (recorded in DESIGN.md §4): the Pallas path is taken on TPU backends;
+CPU (this container, incl. the 512-device dry-run) lowers the pure-jnp
+reference path — Mosaic kernels cannot lower to the CPU backend. Tests force
+the kernels through ``interpret=True`` to validate them against ``ref.py``.
+
+Set env ``REPRO_KERNELS=pallas|ref|interpret`` to override.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chunked_scan import chunked_scan_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sdp_pipeline import sdp_pipeline_pallas
+from repro.kernels.semiring_matmul import tropical_matmul_pallas
+
+
+def kernel_mode() -> str:
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env != "auto":
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------------------
+def tropical_matmul(a, b, av=None, gv=None, bv=None, **blocks):
+    mode = kernel_mode()
+    if mode == "pallas":
+        return tropical_matmul_pallas(a, b, av, gv, bv, **blocks)
+    if mode == "interpret":
+        return tropical_matmul_pallas(a, b, av, gv, bv, interpret=True, **blocks)
+    return ref.tropical_matmul_ref(a, b, av, gv, bv)
+
+
+def sdp_blocked(init, offsets: tuple, op: str, n: int, block: int = 512):
+    from repro.core.sdp import solve_blocked
+
+    mode = kernel_mode()
+    if mode == "pallas":
+        return sdp_pipeline_pallas(init, offsets, op, n, block=block)
+    if mode == "interpret":
+        return sdp_pipeline_pallas(init, offsets, op, n, block=block, interpret=True)
+    return solve_blocked(init, offsets, op, n, block=block)
+
+
+def linear_scan(x, decay, h0, chunk: int = 128):
+    """h_t = decay_t ⊙ h_{t-1} + x_t; returns (h_all, h_final)."""
+    mode = kernel_mode()
+    if mode == "pallas":
+        return chunked_scan_pallas(x, decay, h0, chunk=chunk)
+    if mode == "interpret":
+        return chunked_scan_pallas(x, decay, h0, chunk=chunk, interpret=True)
+    return ref.chunked_scan_ref(x, decay, h0)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention: (B, Hq, S, D) with GQA kv (B, Hkv, S, D)
+# ---------------------------------------------------------------------------
+def _gqa_broadcast(k, hq):
+    b, hkv, s, d = k.shape
+    rep = hq // hkv
+    return jnp.repeat(k, rep, axis=1) if rep > 1 else k
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "chunk"))
+def _flash_ref_chunked(q, k, v, causal: bool = True, chunk: int = 512):
+    """Memory-safe jnp flash attention: lax.scan over KV chunks with online
+    softmax. This is the path the CPU dry-run lowers for prefill cells."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    chunk = min(chunk, sk)
+    nk = sk // chunk
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(sq) + (sk - sq)
+
+    @jax.checkpoint
+    def step(carry, kv):
+        # remat'd: without this, scan-backward stacks the per-chunk (B,H,Sq,Kc)
+        # probability matrices in f32 — the full quadratic attention matrix.
+        acc, m, l = carry
+        kc, vc, k0 = kv
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc.astype(jnp.float32))
+        if causal:
+            k_pos = k0 + jnp.arange(chunk)
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1)
+        acc = alpha[..., None] * acc + jnp.einsum("bhqk,bhkd->bhqd", p, vc.astype(jnp.float32))
+        return (acc, m_new, l), None
+
+    ks = k.reshape(b, h, nk, chunk, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, h, nk, chunk, d).transpose(2, 0, 1, 3, 4)
+    k0s = jnp.arange(nk) * chunk
+    init = (jnp.zeros((b, h, sq, d), jnp.float32),
+            jnp.full((b, h, sq), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32))
+    (acc, m, l), _ = jax.lax.scan(step, init, (ks, vs, k0s))
+    return (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+
+
+def flash_attention(q, k, v, causal: bool = True, chunk: int = 512):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D). Returns (B, Hq, S, D)."""
+    from repro.runtime.sharding import hint
+
+    chunk = int(os.environ.get("REPRO_FLASH_CHUNK", chunk))
+
+    hq = q.shape[1]
+    k = _gqa_broadcast(k, hq)
+    v = _gqa_broadcast(v, hq)
+    # heads shard over model when divisible; else sequence takes the axis
+    # (first-fit in spec_for) — e.g. arctic's 56 heads don't divide 16
+    ax = ("act_batch", "act_heads", "act_seq_attn", None)
+    q, k, v = hint(q, ax), hint(k, ax), hint(v, ax)
+    mode = kernel_mode()
+    if mode in ("pallas", "interpret"):
+        b, h, s, d = q.shape
+        out = flash_attention_pallas(
+            q.reshape(b * h, s, d), k.reshape(b * h, s, d), v.reshape(b * h, s, d),
+            causal=causal, interpret=(mode == "interpret"))
+        return out.reshape(b, h, s, d)
+    return _flash_ref_chunked(q, k, v, causal=causal, chunk=chunk)

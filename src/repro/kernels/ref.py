@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth the kernels are swept against in
+``tests/test_kernels_*.py`` (interpret mode) and is also the path the CPU
+dry-run lowers (see ``ops.py`` dispatch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Weighted tropical (min,+) matmul — see core/blocked_mcm.py
+# ---------------------------------------------------------------------------
+def tropical_matmul_ref(a, b, av=None, gv=None, bv=None):
+    """C[i,j] = min_k (A[i,k] + B[k,j] + av[i]·gv[k]·bv[j])."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    t = a[:, :, None] + b[None, :, :]
+    if av is not None:
+        t = t + (av[:, None, None] * gv[None, :, None]) * bv[None, None, :]
+    return jnp.min(t, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Blocked pipelined S-DP — see core/sdp.py::solve_blocked
+# ---------------------------------------------------------------------------
+def sdp_pipeline_ref(st0, offsets, op, n, block):
+    from repro.core.sdp import solve_blocked
+
+    return solve_blocked(st0[: offsets[0]], tuple(offsets), op, n, block=block)
+
+
+# ---------------------------------------------------------------------------
+# Chunked gated linear scan: h_t = decay_t ⊙ h_{t-1} + x_t
+# ---------------------------------------------------------------------------
+def chunked_scan_ref(x, decay, h0):
+    """x, decay: (T, D); h0: (D,). Returns (h_all (T, D), h_final (D,))."""
+
+    def step(h, td):
+        d, xx = td
+        h = d * h + xx
+        return h, h
+
+    h_final, h_all = jax.lax.scan(step, h0, (decay, x))
+    return h_all, h_final
+
+
+# ---------------------------------------------------------------------------
+# Attention oracle (exact softmax; kernels are swept against this)
+# ---------------------------------------------------------------------------
+def attention_ref(q, k, v, causal=True, scale=None):
+    """q: (B, H, Sq, D); k, v: (B, H, Sk, D) (kv already GQA-broadcast)."""
+    *_, sq, d = q.shape
+    sk = k.shape[-2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(sq)[:, None] + (sk - sq)
+        ki = jnp.arange(sk)[None, :]
+        logits = jnp.where(qi >= ki, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)

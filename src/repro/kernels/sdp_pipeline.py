@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: blocked pipelined S-DP solver (the paper's Fig. 2 on TPU).
+
+The GPU pipeline finalizes 1 element/step with k threads; the TPU-native
+reading (DESIGN.md §2) finalizes a block of ``B = min(a_k, block)`` elements
+per step: all reads for block ``[t, t+B)`` use offsets ``≥ a_k ≥ B`` and hence
+touch only finalized elements, so each step is k static-offset VMEM slices +
+a tree-⊗ + one store — no gather, no conflicts, exactly the property Theorem 1
+buys on GPU.
+
+The whole table lives in VMEM (one f32 table of 2²⁰ elements = 4 MiB; VMEM is
+~16 MiB on v5e) and the block loop runs *inside* the kernel, so HBM traffic is
+one load + one store of the table regardless of k — versus O(nk) HBM touches
+for the naive form. Tables beyond VMEM would stream via double-buffered DMA
+windows; that variant is out of scope here and noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_OPS = {"min": jnp.minimum, "max": jnp.maximum, "add": jnp.add}
+
+
+def _make_kernel(offsets, op, B, num_blocks):
+    a1 = offsets[0]
+    combine = _OPS[op]
+
+    def kernel(st_ref, out_ref):
+        out_ref[...] = st_ref[...]
+
+        def body(b, _):
+            start = a1 + b * B
+            acc = out_ref[pl.ds(start - offsets[0], B)]
+            for aj in offsets[1:]:  # k unrolled static-offset slices
+                acc = combine(acc, out_ref[pl.ds(start - aj, B)])
+            out_ref[pl.ds(start, B)] = acc
+            return 0
+
+        jax.lax.fori_loop(0, num_blocks, body, 0)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "op", "n", "block", "interpret"))
+def sdp_pipeline_pallas(init, offsets: tuple, op: str, n: int,
+                        block: int = 512, interpret: bool = False):
+    """init: (a_1,) preset values. Returns ST[0..n-1]."""
+    a1, ak = offsets[0], offsets[-1]
+    B = max(1, min(ak, block))
+    num_blocks = -(-(n - a1) // B)
+    n_pad = a1 + num_blocks * B  # pad the tail so every block is full-width
+
+    st0 = jnp.zeros((n_pad,), dtype=init.dtype).at[:a1].set(init)
+    kernel = _make_kernel(offsets, op, B, num_blocks)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n_pad,), init.dtype),
+        interpret=interpret,
+    )(st0)
+    return out[:n]

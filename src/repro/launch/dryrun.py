@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax -----------------------------------------
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, cells, get_config, list_archs  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import batch_axes, make_production_mesh  # noqa: E402
+from repro.models import model  # noqa: E402
+from repro.models.transformer import cache_axes  # noqa: E402
+from repro.optim import adamw, schedules  # noqa: E402
+from repro.runtime import sharding as shd  # noqa: E402
+
+"""Multi-pod dry-run (deliverable e): ``lower().compile()`` every
+(arch × shape × mesh) cell on the production meshes, and extract the roofline
+terms (deliverable g) from the compiled artifact.
+
+No real allocation happens: params, optimizer state, batches and caches enter
+``lower`` as ShapeDtypeStructs with NamedShardings.
+"""
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+               "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+def abstract_params(cfg, mesh, rules):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def mk(d):
+        spec = shd.spec_for(d.shape, d.axes, rules, sizes)
+        dt = d.dtype or cfg.param_dtype
+        return jax.ShapeDtypeStruct(d.shape, dt, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(mk, model.param_defs(cfg),
+                        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"))
+
+
+def abstract_cache(cfg, batch, seq, mesh, rules, cache_dtype=jnp.bfloat16):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shapes = jax.eval_shape(lambda: model.empty_cache(cfg, batch, seq, cache_dtype))
+    axes = cache_axes(cfg)
+    axes = {k: {kk: vv for kk, vv in axes[k].items() if kk in shapes[k]}
+            for k in shapes}
+
+    def attach(s, ax):
+        spec = shd.spec_for(s.shape, ax, rules, sizes)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(attach, shapes, axes,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def input_specs(cfg, cell_name: str, mesh, rules, multi_pod: bool,
+                cache_dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cell = SHAPES[cell_name]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ba = batch_axes(multi_pod)
+    b, t = cell.global_batch, cell.seq_len
+
+    def arr(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+    bspec = ba if b % int(np.prod([sizes[a] for a in ba])) == 0 else \
+        (ba[-1] if b % sizes[ba[-1]] == 0 else None)
+    if cell.kind == "train":
+        batch = {"tokens": arr((b, t), jnp.int32, P(bspec, None)),
+                 "labels": arr((b, t), jnp.int32, P(bspec, None))}
+        if cfg.frontend != "none":
+            batch["frontend"] = arr((b, cfg.n_frontend_tokens, cfg.d_model),
+                                    jnp.bfloat16, P(bspec, None, None))
+        return {"batch": batch}
+    if cell.kind == "prefill":
+        out = {"tokens": arr((b, t), jnp.int32, P(bspec, None))}
+        if cfg.frontend != "none":
+            out["frontend"] = arr((b, cfg.n_frontend_tokens, cfg.d_model),
+                                  jnp.bfloat16, P(bspec, None, None))
+        return out
+    # decode: one new token against a seq_len cache
+    return {"token": arr((b, 1), jnp.int32, P(bspec, None)),
+            "cache": abstract_cache(cfg, b, t, mesh, rules, cache_dtype),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg, microbatches: int = 1, moment_dtype=jnp.float32,
+                    accum_dtype=jnp.float32):
+    """Gradient-accumulating train step: activation memory scales 1/microbatches
+    (the dry-run auto-escalates this until the cell fits per-device HBM)."""
+    opt_cfg = adamw.AdamWConfig(lr=schedules.warmup_cosine(3e-4, 100, 10_000),
+                                moment_dtype=moment_dtype)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, cfg, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, one):
+                g_acc, l_acc, a_acc = carry
+                (l, met), g = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, cfg, one)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (g_acc, l_acc + l, a_acc + met["aux"]), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (g_acc, l_sum, a_sum), _ = jax.lax.scan(
+                acc, (zeros, jnp.float32(0.0), jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: (g / microbatches), g_acc)
+            loss = l_sum / microbatches
+            metrics = {"xent": loss, "aux": a_sum / microbatches,
+                       "tokens": jnp.float32(0.0)}
+        params, opt_state, om = adamw.apply(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_step(cfg, cell_name: str, microbatches: int = 1,
+              moment_dtype=jnp.float32, accum_dtype=jnp.float32):
+    cell = SHAPES[cell_name]
+    if cell.kind == "train":
+        return make_train_step(cfg, microbatches, moment_dtype, accum_dtype)
+    if cell.kind == "prefill":
+        def prefill_step(params, tokens, frontend=None):
+            return model.prefill(params, cfg, tokens, frontend=frontend,
+                                 max_len=cell.seq_len)
+
+        return prefill_step
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cfg, token, cache, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+HBM_BUDGET = 15.0 * 2**30   # leave ~1 GiB headroom on a 16 GiB v5e
+# bf16 optimizer moments for the ≥100B archs (f32 moments alone overflow HBM)
+BF16_MOMENT_THRESHOLD = 1e11
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, donate: bool = True,
+             microbatches: int = 0, extra_tag: str = "",
+             cfg_overrides: dict = None, rule_overrides: dict = None) -> dict:
+    """microbatches=0 → auto-escalate 1,2,4,… until the cell fits HBM.
+
+    cfg_overrides: dataclasses.replace kwargs on the ModelConfig (perf knobs:
+    xent_chunk, remat, ssm=..., moe=...). rule_overrides: sharding-rule
+    entries merged over make_rules() (e.g. {"act_seq": ["model"]} turns on
+    sequence-parallel residuals). Used by the §Perf hillclimb."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = shd.make_rules(multi_pod=multi_pod)
+    if rule_overrides:
+        rules.update(rule_overrides)
+    n_dev = mesh.devices.size
+    rec = {"arch": arch, "cell": cell_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "devices": n_dev,
+           "tag": extra_tag}
+    kind = SHAPES[cell_name].kind
+    big = cfg.param_count() > BF16_MOMENT_THRESHOLD
+    moment_dtype = jnp.bfloat16 if big else jnp.float32
+    accum_dtype = jnp.bfloat16 if big else jnp.float32
+    rec["moment_dtype"] = str(jnp.dtype(moment_dtype))
+
+    # keep per-microbatch batch divisible by the data axes (an indivisible
+    # batch dim forces involuntary replication — measured 4x HBM at arctic)
+    data_ways = int(np.prod([s for a, s in zip(mesh.axis_names, mesh.devices.shape)
+                             if a != "model"]))
+    gb = SHAPES[cell_name].global_batch
+    cands = [m for m in (1, 2, 4, 8, 16, 32, 64)
+             if gb % m == 0 and (gb // m) % data_ways == 0]
+    if kind == "train" and not microbatches and cands:
+        # skip provably-too-small microbatch compiles: crude activation model
+        # (residual-stream boundaries x4 + mixer/FFN transients)
+        seq = SHAPES[cell_name].seq_len
+
+        def act_gib(m):
+            per_dev_tokens = gb // m // data_ways * seq
+            return cfg.n_layers * per_dev_tokens * cfg.d_model * 2 * 4 / 2**30
+
+        cands = [m for m in cands if act_gib(m) <= 10.0] or [cands[-1]]
+    mb_candidates = [microbatches] if microbatches else (cands or [1])
+    if kind != "train":
+        mb_candidates = [1]
+
+    # decode cells escalate KV-cache dtype (bf16 -> int8+scales) instead of µb
+    variants = [(mb, jnp.bfloat16) for mb in mb_candidates]
+    if kind == "decode":
+        variants = [(1, jnp.bfloat16), (1, jnp.int8)]
+
+    compiled = None
+    for mb, cache_dtype in variants:
+        t0 = time.time()
+        with shd.activate(mesh, rules):
+            params = abstract_params(cfg, mesh, rules)
+            specs = input_specs(cfg, cell_name, mesh, rules, multi_pod,
+                                cache_dtype=cache_dtype)
+            step = make_step(cfg, cell_name, microbatches=mb,
+                             moment_dtype=moment_dtype, accum_dtype=accum_dtype)
+            if kind == "train":
+                opt_state = adamw.abstract_state(params, moment_dtype)
+                jfn = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+                lowered = jfn.lower(params, opt_state, specs["batch"])
+            elif kind == "prefill":
+                jfn = jax.jit(step)
+                args = (params, specs["tokens"])
+                if cfg.frontend != "none":
+                    args = args + (specs["frontend"],)
+                lowered = jfn.lower(*args)
+            else:
+                jfn = jax.jit(step, donate_argnums=(1,) if donate else ())
+                lowered = jfn.lower(params, specs["cache"], specs["token"],
+                                    specs["pos"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        rec["microbatches"] = mb
+        rec["cache_dtype"] = str(jnp.dtype(cache_dtype)) if kind == "decode" else ""
+        mem = compiled.memory_analysis()
+        total = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+        rec["hbm_per_device"] = int(total)
+        if total <= HBM_BUDGET or (mb, cache_dtype) == variants[-1]:
+            break
+        print(f"  ... mb={mb}/{jnp.dtype(cache_dtype).name}: "
+              f"{total/2**30:.1f} GiB > budget, escalating", flush=True)
+    rec["fits_hbm"] = rec["hbm_per_device"] <= HBM_BUDGET
+
+    cost = compiled.cost_analysis() or {}
+    rec["flops_xla_body_once"] = float(cost.get("flops", -1))
+    rec["bytes_accessed_xla"] = float(cost.get("bytes accessed", -1))
+    mem = compiled.memory_analysis()
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        try:
+            rec[attr] = int(getattr(mem, attr))
+        except Exception:
+            rec[attr] = -1
+    hlo = hlo_analysis.analyze(compiled.as_text())
+    rec["flops"] = hlo["flops"]                      # per-device, loop-aware
+    rec["hbm_traffic_bytes"] = hlo["hbm_traffic_bytes"]
+    rec["collectives"] = hlo["collective_bytes"]     # per-device output bytes
+    rec["collective_bytes_total"] = hlo["collective_bytes_total"]
+    rec["collective_counts"] = hlo["collective_counts"]
+    rec["unknown_trip_counts"] = hlo["unknown_trip_counts"]
+    rec["param_count"] = cfg.param_count()
+    rec["active_param_count"] = cfg.active_param_count()
+    print(compiled.memory_analysis())
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["cell"], r["mesh"]))
+                except Exception:  # noqa: BLE001
+                    pass
+
+    n_ok, failures = 0, []
+    for arch in archs:
+        cell_list = cells(arch) if args.cell is None else [args.cell]
+        for cell_name in cell_list:
+            for mp in meshes:
+                tag = f"{arch}/{cell_name}/{'2x16x16' if mp else '16x16'}"
+                if (arch, cell_name, "2x16x16" if mp else "16x16") in done:
+                    print(f"[skip] {tag} (already recorded)", flush=True)
+                    continue
+                try:
+                    rec = run_cell(arch, cell_name, mp)
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+                    n_ok += 1
+                    print(f"[ok] {tag}: flops={rec['flops']:.3e} "
+                          f"compile={rec['compile_s']}s", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append({"tag": tag, "error": repr(e)})
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+                    traceback.print_exc()
+    print(f"\n{n_ok} ok, {len(failures)} failed")
+    for f_ in failures:
+        print("  FAIL:", f_["tag"], f_["error"])
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

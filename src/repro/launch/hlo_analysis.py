@@ -1,0 +1,280 @@
+"""Loop-aware HLO accounting for the dry-run roofline.
+
+``compiled.cost_analysis()`` counts each while-loop (scan) body ONCE — for a
+scan-over-layers model that undercounts FLOPs and collective bytes by the
+trip count (verified in tests/test_hlo_analysis.py). This module re-walks the
+compiled HLO text:
+
+  * computations are parsed into blocks with a per-block symbol table,
+  * ``while`` ops contribute their ``known_trip_count`` backend_config (XLA
+    CPU/TPU annotate statically-known trip counts; fallback: compare-constant
+    in the condition block, else 1 with a flag),
+  * a call-graph walk (ENTRY → body/condition/to_apply/calls/fusion) gives
+    every computation an execution multiplier,
+  * FLOPs = Σ mult(C) · Σ_dot 2·|out|·|contracted|      (matmul-dominated)
+  * collective bytes = Σ mult(C) · output bytes of each all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Bytes are *global* (sum over devices) for collectives and *per-device* for
+FLOPs iff the module is the SPMD-partitioned one (it is: we analyze
+``compiled.as_text()``), which is exactly what the per-chip roofline wants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+               "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_OP_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|[\w\[\]{},\/ ]+?)\s*([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_elems(shape_str: str):
+    """Yield (dtype, [dims]) for every array shape in the string."""
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        yield dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_elems(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    kind: str
+    rest: str
+
+
+def _logical_lines(text: str):
+    """Join wrapped op lines (long tuple types spill over) and strip /*..*/."""
+    out = []
+    for raw in text.splitlines():
+        line = re.sub(r"/\*.*?\*/", "", raw)
+        stripped = line.strip()
+        if not stripped:
+            continue
+        starts_new = (stripped.startswith("%") or stripped.startswith("ROOT ")
+                      or stripped.startswith("ENTRY ") or stripped == "}"
+                      or stripped.startswith("HloModule"))
+        if starts_new or not out:
+            out.append(line)
+        else:
+            out[-1] = out[-1].rstrip() + " " + stripped
+    return out
+
+
+def parse_computations(text: str) -> dict:
+    comps: dict = {}
+    cur = None
+    for line in _logical_lines(text):
+        stripped = line.strip()
+        m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$", stripped)
+        if m and (line.startswith("%") or line.startswith("ENTRY")):
+            cur = m.group(2)
+            comps[cur] = {"ops": [], "entry": bool(m.group(1))}
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            comps[cur]["ops"].append(Op(name=om.group(2), shape=om.group(3).strip(),
+                                        kind=om.group(4), rest=om.group(5)))
+    return comps
+
+
+def _refs(op: Op):
+    """(kind, computation) references made by this op."""
+    for key in ("body", "condition", "to_apply"):
+        for m in re.finditer(rf"{key}=%?([\w.\-]+)", op.rest):
+            yield key, m.group(1)
+    m = re.search(r"calls=\{([^}]*)\}", op.rest)
+    if m:
+        for name in m.group(1).split(","):
+            yield "calls", name.strip().lstrip("%")
+    else:
+        m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+        if m:
+            yield "calls", m.group(1)
+
+
+def _trip_count(op: Op, comps: dict) -> tuple:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+    if m:
+        return int(m.group(1)), True
+    # fallback: constant compare in the condition computation
+    cm = re.search(r"condition=%?([\w.\-]+)", op.rest)
+    if cm and cm.group(1) in comps:
+        for o in comps[cm.group(1)]["ops"]:
+            if o.kind == "constant":
+                c = re.search(r"constant\((\d+)\)", "constant(" + o.rest)
+                if c:
+                    return int(c.group(1)), True
+    return 1, False
+
+
+def multipliers(comps: dict) -> tuple:
+    entry = next((n for n, c in comps.items() if c["entry"]), None)
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    unknown_trips = []
+    # topological-ish: repeat until fixpoint (call graphs are DAGs; few passes)
+    for _ in range(64):
+        changed = False
+        snapshot = dict(mult)
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for cname, comp in comps.items():
+            cmult = snapshot.get(cname, 0.0)
+            if cmult == 0.0:
+                continue
+            for op in comp["ops"]:
+                for kind, ref in _refs(op):
+                    if ref not in comps:
+                        continue
+                    k = cmult
+                    if kind == "body":
+                        n, known = _trip_count(op, comps)
+                        if not known:
+                            unknown_trips.append(op.name)
+                        k = cmult * n
+                    elif kind == "to_apply" and op.kind in (
+                            "reduce", "all-reduce", "reduce-scatter", "reduce-window",
+                            "scatter", "select-and-scatter", "sort"):
+                        continue  # elementwise reducers: no dots/collectives inside
+                    new[ref] += k
+        if dict(new) != dict(snapshot):
+            changed = True
+        mult = new
+        if not changed:
+            break
+    return dict(mult), unknown_trips
+
+
+def _dot_flops(op: Op, symbols: dict) -> float:
+    out = 1
+    for _, dims in _shape_elems(op.shape):
+        for d in dims:
+            out *= d
+    lhs_m = re.match(r"\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", op.rest)
+    contract = 1
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if lhs_m and cd and lhs_m.group(1) in symbols:
+        lhs_shape = symbols[lhs_m.group(1)]
+        shapes = list(_shape_elems(lhs_shape))
+        if shapes:
+            dims = shapes[0][1]
+            for idx in (int(i) for i in cd.group(1).split(",") if i):
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2.0 * out * contract
+
+
+# ops that do not move HBM bytes themselves (aliases, metadata, control)
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+               "after-all", "partition-id", "replica-id", "opt-barrier",
+               "copy-start", "copy-done", "while", "conditional", "call"}
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _traffic_bytes(op: Op, symbols: dict) -> float:
+    """HBM traffic model: output + operand bytes at fusion/op granularity.
+
+    XLA materializes buffers at op boundaries (fusion internals stay in
+    registers/VMEM), so summing boundary bytes over the weighted call graph is
+    the natural HLO-level HBM-traffic estimate (documented in EXPERIMENTS.md)."""
+    total = _shape_bytes(op.shape)
+    # operands: %refs appearing before the attribute section
+    head = op.rest.split("), ")[0] if "), " in op.rest else op.rest
+    for m in _OPERAND_RE.finditer(head):
+        ref = m.group(1)
+        if ref in symbols:
+            total += _shape_bytes(symbols[ref])
+    return total
+
+
+def analyze(text: str) -> dict:
+    comps = parse_computations(text)
+    mult, unknown = multipliers(comps)
+    flops = 0.0
+    traffic = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    coll_n = {k: 0 for k in COLLECTIVES}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symbols = {op.name: op.shape for op in comp["ops"]}
+        for op in comp["ops"]:
+            base = op.kind.replace("-start", "")
+            if op.kind == "dot":
+                flops += m * _dot_flops(op, symbols)
+            elif base in COLLECTIVES and not op.kind.endswith("-done"):
+                coll[base] += m * _shape_bytes(op.shape)
+                coll_n[base] += 1
+            if op.kind not in _NO_TRAFFIC and not op.kind.endswith("-done"):
+                traffic += m * _traffic_bytes(op, symbols)
+    return {
+        "flops": flops,
+        "hbm_traffic_bytes": traffic,
+        "collective_bytes": coll,
+        "collective_bytes_total": sum(coll.values()),
+        "collective_counts": coll_n,
+        "unknown_trip_counts": len(unknown),
+        "n_computations": len(comps),
+    }
+
+
+def top_contributors(text: str, n: int = 15, what: str = "collective") -> list:
+    """Per-op attribution for the perf loop: the n largest trip-weighted
+    contributors to collective bytes ("collective"), HBM traffic ("traffic"),
+    or dot FLOPs ("flops"). Returns rows of
+    (weighted_value, mult, kind, shape, op_name_metadata)."""
+    comps = parse_computations(text)
+    mult, _ = multipliers(comps)
+    rows = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symbols = {op.name: op.shape for op in comp["ops"]}
+        for op in comp["ops"]:
+            base = op.kind.replace("-start", "")
+            if what == "collective":
+                if base not in COLLECTIVES or op.kind.endswith("-done"):
+                    continue
+                val = m * _shape_bytes(op.shape)
+            elif what == "flops":
+                if op.kind != "dot":
+                    continue
+                val = m * _dot_flops(op, symbols)
+            else:
+                if op.kind in _NO_TRAFFIC or op.kind.endswith("-done"):
+                    continue
+                val = m * _traffic_bytes(op, symbols)
+            md = re.search(r'op_name="([^"]*)"', op.rest)
+            rows.append((val, m, op.kind, op.shape[:60],
+                         (md.group(1) if md else "?")[-90:]))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]

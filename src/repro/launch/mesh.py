@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; only ``dryrun.py`` (which sets the 512-device XLA flag first) builds
+the production shapes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) data×model = 256 chips (v5e pod).
+    Multi-pod:  (2, 16, 16) pod×data×model = 512 chips; the `pod` axis joins
+    `data` for batch/FSDP sharding (compound axes in runtime/sharding.py)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(multi_pod: bool = False):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

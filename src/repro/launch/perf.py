@@ -1,0 +1,94 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+"""§Perf hillclimb driver: re-lower one cell under named variants and report
+the roofline-term deltas vs the recorded baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch arctic-480b \
+        --cell train_4k --variants seqpar,xent128
+
+Variants (composable with ','):
+    seqpar      sequence-parallel residual stream (act_seq -> model)
+    xent128/xent1024   chunked-xent chunk size
+    cap1        MoE capacity factor 1.0 (no slack)
+    noremat     disable layer-group remat (memory for compute)
+    flash256/flash1024 flash-attention kv chunk
+    mb<N>       pin gradient-accumulation microbatches
+"""
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+from benchmarks.roofline import terms
+
+
+def variant_kwargs(names):
+    cfg_o, rule_o, kw = {}, {}, {}
+    for name in names:
+        if not name:
+            continue
+        if name == "seqpar":
+            rule_o["act_seq"] = ["model"]
+        elif name.startswith("xent"):
+            cfg_o["xent_chunk"] = int(name[4:])
+        elif name == "cap1":
+            import dataclasses
+
+            from repro.configs import get_config
+            # resolved later per-arch in main (needs the arch's moe config)
+            kw["_cap1"] = True
+        elif name == "noremat":
+            cfg_o["remat"] = False
+        elif name.startswith("gla"):
+            kw["_gla_chunk"] = int(name[3:])
+        elif name.startswith("flash"):
+            os.environ["REPRO_FLASH_CHUNK"] = name[5:]
+        elif name.startswith("mb"):
+            kw["microbatches"] = int(name[2:])
+        else:
+            raise SystemExit(f"unknown variant {name}")
+    return cfg_o, rule_o, kw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--mesh", choices=["pod", "multipod"], default="pod")
+    ap.add_argument("--variants", default="")
+    ap.add_argument("--out", default="results/perf.jsonl")
+    args = ap.parse_args()
+
+    names = args.variants.split(",") if args.variants else []
+    cfg_o, rule_o, kw = variant_kwargs(names)
+    if kw.pop("_cap1", False):
+        import dataclasses
+
+        from repro.configs import get_config
+        moe = get_config(args.arch).moe
+        cfg_o["moe"] = dataclasses.replace(moe, capacity_factor=1.0)
+    gla = kw.pop("_gla_chunk", None)
+    if gla:
+        import dataclasses
+
+        from repro.configs import get_config
+        ssm = get_config(args.arch).ssm
+        cfg_o["ssm"] = dataclasses.replace(ssm, chunk=gla)
+
+    rec = run_cell(args.arch, args.cell, multi_pod=(args.mesh == "multipod"),
+                   cfg_overrides=cfg_o or None, rule_overrides=rule_o or None,
+                   extra_tag=args.variants, **kw)
+    rec.update({k: v for k, v in terms(rec).items()})
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(rec, default=str) + "\n")
+    print(json.dumps({k: rec[k] for k in
+                      ("arch", "cell", "mesh", "tag", "microbatches",
+                       "hbm_per_device", "fits_hbm", "compute_s", "memory_s",
+                       "collective_s", "dominant", "roofline_frac",
+                       "useful_ratio", "mfu_bound")}, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

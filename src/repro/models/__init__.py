@@ -1,0 +1,3 @@
+"""Model substrate: layers, attention, MoE, SSM/RWKV mixers, the periodic
+scan-over-groups stack, and the unified causal LM."""
+from repro.models import model  # noqa: F401

@@ -1,0 +1,111 @@
+"""Attention: GQA + optional qk-norm + RoPE; flash for train/prefill, and the
+mesh-level flash-decode path (sequence-sharded KV cache with online-softmax
+combine across shards — see DESIGN.md §4) for decode cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import ParamDef, rmsnorm, rope
+from repro.runtime.sharding import hint
+
+
+def attn_defs(cfg) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    defs = {
+        "wq": ParamDef((d, hq * hd), ("embed", "heads")),
+        "wk": ParamDef((d, hkv * hd), ("embed", "kv")),
+        "wv": ParamDef((d, hkv * hd), ("embed", "kv")),
+        "wo": ParamDef((hq * hd, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), "ones")
+        defs["k_norm"] = ParamDef((hd,), (None,), "ones")
+    return defs
+
+
+def _project_qkv(p, cfg, x, positions):
+    b, t, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = cfg.compute_dtype
+    q = (x @ p["wq"].astype(cd)).reshape(b, t, hq, hd)
+    k = (x @ p["wk"].astype(cd)).reshape(b, t, hkv, hd)
+    v = (x @ p["wv"].astype(cd)).reshape(b, t, hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, cfg, x, positions):
+    """Training/prefill attention. x: (B, T, d). Returns (out, (k, v))."""
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    q = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = ops.flash_attention(q, kt, vt, causal=True)      # (B, Hq, T, hd)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, -1)
+    out = o @ p["wo"].astype(cfg.compute_dtype)
+    return out, (k, v)
+
+
+def quantize_kv(x):
+    """x: (..., hd) -> (int8 values, per-vector bf16 scale (..., 1))."""
+    xf = x.astype(jnp.float32)
+    s = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(xf / jnp.maximum(s, 1e-8)).astype(jnp.int8)
+    return q, s.astype(jnp.bfloat16)
+
+
+def attn_decode(p, cfg, x, cache, pos):
+    """One decode step. x: (B, 1, d); cache dict with k, v (B, S, Hkv, hd)
+    (+ k_scale/v_scale (B, S, Hkv, 1) when int8-quantized); the S axis shards
+    over the model (and, for batch=1, data) mesh axes; ``pos``: scalar int32
+    or (B,) per-slot positions (continuous batching).
+
+    Softmax over the sharded S axis is computed directly; GSPMD turns the
+    max/sum reductions into cross-shard collectives (flash-decode on the
+    mesh). int8 caches dequantize by factoring the per-(b,s,h) scale out of
+    the score/value einsums — the cache is never materialized dequantized.
+    """
+    b, one, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = hq // hkv
+    quant = cache["k"].dtype == jnp.int8
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k, v = _project_qkv(p, cfg, x, positions=pos_vec[:, None])
+    bi = jnp.arange(b)
+    new = dict(cache)
+    if quant:
+        kq, ks = quantize_kv(k[:, 0])
+        vq, vs = quantize_kv(v[:, 0])
+        new["k"] = cache["k"].at[bi, pos_vec].set(kq)
+        new["v"] = cache["v"].at[bi, pos_vec].set(vq)
+        new["k_scale"] = cache["k_scale"].at[bi, pos_vec].set(ks)
+        new["v_scale"] = cache["v_scale"].at[bi, pos_vec].set(vs)
+    else:
+        new["k"] = cache["k"].at[bi, pos_vec].set(k[:, 0].astype(cache["k"].dtype))
+        new["v"] = cache["v"].at[bi, pos_vec].set(v[:, 0].astype(cache["v"].dtype))
+    ax = ("act_batch", "kv_seq", None, None)
+    new = {kk: hint(vv, ax) for kk, vv in new.items()}
+
+    s = new["k"].shape[1]
+    qh = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qh, new["k"].astype(jnp.float32))
+    if quant:
+        logits = logits * new["k_scale"].astype(jnp.float32)[:, :, :, 0].transpose(0, 2, 1)[:, :, None, :]
+    logits = logits / (hd ** 0.5)
+    mask = jnp.arange(s)[None, None, None, :] <= pos_vec[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    if quant:
+        w = w * new["v_scale"].astype(jnp.float32)[:, :, :, 0].transpose(0, 2, 1)[:, :, None, :]
+    o = jnp.einsum("bkgs,bskd->bkgd", w, new["v"].astype(jnp.float32))
+    o = o.reshape(b, 1, hq * hd).astype(cfg.compute_dtype)
+    out = o @ p["wo"].astype(cfg.compute_dtype)
+    return out, new

@@ -1,0 +1,77 @@
+"""Shared neural layers: RMSNorm, RoPE, SwiGLU, embeddings, param defs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Parameter definition tree — single source of truth for shapes, init AND
+# sharding axes; materialized by init_params, abstracted by the dry-run.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                   # logical axis names (see runtime/sharding.py)
+    init: str = "normal"          # normal | zeros | ones | small_normal
+    scale: float = 0.02
+    dtype: Optional[object] = None  # override cfg.param_dtype
+
+
+def materialize(defs, key, default_dtype):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = d.dtype or default_dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            s = d.scale if d.init == "normal" else d.scale * 0.1
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * s).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def stack_defs(defs, n: int, stack_axis_name: str = "layers"):
+    """Prepend a (n,)-leading 'layers' axis to every ParamDef in the tree."""
+    def f(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(d, shape=(n,) + d.shape, axes=(stack_axis_name,) + d.axes)
+
+    return jax.tree.map(f, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (n * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 1e4):
+    """x: (..., T, H, D); positions: (..., T) int. Rotates pairs (2i, 2i+1)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down, compute_dtype):
+    g = x @ w_gate.astype(compute_dtype)
+    u = x @ w_up.astype(compute_dtype)
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u) @ w_down.astype(compute_dtype)
+
+
+def dense_defs(d_in: int, d_out: int, axes: tuple, scale=0.02) -> ParamDef:
+    return ParamDef((d_in, d_out), axes, "normal", scale)

@@ -1,0 +1,156 @@
+"""Unified causal LM: param tree, forward, chunked loss, prefill, decode.
+
+Covers all ten assigned architectures through ``ModelConfig`` (dense / MoE /
+hybrid / SSM; VLM & audio via frontend-embedding stubs — the modality encoder
+is out of scope per the assignment, ``input_specs`` supplies precomputed
+patch/frame embeddings that overwrite the first ``n_frontend_tokens``
+positions and are masked out of the loss).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, materialize, rmsnorm
+from repro.models.transformer import (cache_axes, empty_cache, stack_forward,
+                                      stack_param_defs)
+from repro.runtime.sharding import hint
+
+AUX_COEF = 0.01  # MoE load-balance loss coefficient
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def param_defs(cfg) -> dict:
+    d = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "groups": stack_param_defs(cfg),
+        "ln_f": ParamDef((cfg.d_model,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        d["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return d
+
+
+def init_params(cfg, key):
+    return materialize(param_defs(cfg), key, cfg.param_dtype)
+
+
+def is_def(x):
+    return isinstance(x, ParamDef)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def embed_tokens(params, cfg, tokens, frontend=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if frontend is not None:
+        x = jax.lax.dynamic_update_slice(x, frontend.astype(x.dtype), (0, 0, 0))
+    return hint(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def forward(params, cfg, tokens, frontend=None, positions=None, mode="train",
+            cache=None, pos=None):
+    """tokens: (B, T) int32. Returns (hidden (B,T,d), aux, new_cache)."""
+    b, t = tokens.shape
+    if positions is None:
+        if mode == "decode":
+            positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    x = embed_tokens(params, cfg, tokens, frontend)
+    x, aux, new_cache = stack_forward(params["groups"], cfg, x, positions,
+                                      mode=mode, cache=cache, pos=pos)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux, new_cache
+
+
+def unembed(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy: logits are never materialized at (tokens, vocab)
+# ---------------------------------------------------------------------------
+def chunked_xent(hidden, w, labels, mask, chunk: int):
+    """hidden: (B, T, d); w: (d, V); labels, mask: (B, T).
+
+    Returns (sum_loss, sum_mask) — caller divides. lax.scan over T-chunks keeps
+    peak logits memory at (B, chunk, V)."""
+    b, t, d = hidden.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    hs = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        # remat'd: the (B, chunk, V) logits are recomputed in backward instead
+        # of being stacked across chunks as scan residuals.
+        tot, cnt = carry
+        h, lab, mk = xs
+        logits = (h @ w.astype(h.dtype)).astype(jnp.float32)      # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum((lse - gold) * mk)
+        cnt = cnt + jnp.sum(mk)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (hs, ls, ms))
+    return tot, cnt
+
+
+def loss_fn(params, cfg, batch):
+    """batch: tokens (B,T), labels (B,T), optional frontend (B,nf,d),
+    optional loss_mask (B,T). Returns (loss, metrics)."""
+    hidden, aux, _ = forward(params, cfg, batch["tokens"],
+                             frontend=batch.get("frontend"))
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(batch["labels"].shape, jnp.float32)
+        if cfg.n_frontend_tokens:
+            mask = mask.at[:, :cfg.n_frontend_tokens].set(0.0)
+    w = unembed(params, cfg)
+    tot, cnt = chunked_xent(hidden, w, batch["labels"], mask, cfg.xent_chunk)
+    xent = tot / jnp.maximum(cnt, 1.0)
+    loss = xent + AUX_COEF * aux
+    return loss, {"xent": xent, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+def prefill(params, cfg, tokens, frontend=None, max_len: Optional[int] = None,
+            cache_dtype=jnp.bfloat16):
+    """Process the prompt, build the cache. Returns (last_logits, cache)."""
+    b, t = tokens.shape
+    max_len = max_len or t
+    cache = empty_cache(cfg, b, max_len, dtype=cache_dtype)
+    hidden, _, cache = forward(params, cfg, tokens, frontend=frontend,
+                               mode="prefill", cache=cache)
+    w = unembed(params, cfg)
+    logits = (hidden[:, -1:] @ w.astype(hidden.dtype)).astype(jnp.float32)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg, token, cache, pos):
+    """token: (B, 1) int32; pos: scalar int32 (current write position).
+    Returns (logits (B, V), new_cache)."""
+    hidden, _, cache = forward(params, cfg, token, mode="decode",
+                               cache=cache, pos=pos)
+    w = unembed(params, cfg)
+    logits = (hidden[:, -1:] @ w.astype(hidden.dtype)).astype(jnp.float32)
+    return logits[:, 0], cache
+
+
+__all__ = ["param_defs", "init_params", "forward", "loss_fn", "chunked_xent",
+           "prefill", "decode_step", "empty_cache", "cache_axes", "unembed"]

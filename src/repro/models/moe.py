@@ -1,0 +1,100 @@
+"""Mixture-of-Experts: top-k routing with capacity, scatter dispatch, batched
+expert SwiGLU, weighted combine, and a load-balancing auxiliary loss.
+
+Dispatch avoids the (tokens × experts × capacity) one-hot combine tensor:
+positions-in-expert come from a cumsum over the (tokens, experts) assignment
+matrix, tokens scatter into an (E, C, d) buffer (unique destinations), and the
+combine is a gather. Experts shard over the `model` mesh axis (expert
+parallelism); when n_experts doesn't divide the axis (granite-moe's 40), the
+rule engine falls back to sharding the expert FFN dim — see
+runtime/sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef
+from repro.runtime.sharding import hint
+
+
+def moe_defs(cfg) -> dict:
+    m, d = cfg.moe, cfg.d_model
+    defs = {
+        "router": ParamDef((d, m.n_experts), ("embed", None)),
+        "w_gate": ParamDef((m.n_experts, d, m.d_ff), ("experts", "expert_embed", "expert_ffn")),
+        "w_up": ParamDef((m.n_experts, d, m.d_ff), ("experts", "expert_embed", "expert_ffn")),
+        "w_down": ParamDef((m.n_experts, m.d_ff, d), ("experts", "expert_ffn", "expert_embed")),
+    }
+    if m.dense_residual:
+        defs["res_gate"] = ParamDef((d, cfg.d_ff), ("embed", "ffn"))
+        defs["res_up"] = ParamDef((d, cfg.d_ff), ("embed", "ffn"))
+        defs["res_down"] = ParamDef((cfg.d_ff, d), ("ffn", "embed"))
+    return defs
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_forward(p, cfg, x):
+    """x: (B, T, d). Returns (out, aux_loss)."""
+    m = cfg.moe
+    b, t, d = x.shape
+    cd = cfg.compute_dtype
+    n = b * t
+    tokens = x.reshape(n, d)
+    e, k = m.n_experts, m.top_k
+    cap = capacity(n, cfg)
+
+    logits = (tokens @ p["router"].astype(cd)).astype(jnp.float32)     # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                             # (N, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style): E * Σ_e f_e · p̄_e
+    assign = jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32)         # primary
+    aux = e * jnp.sum(assign.mean(0) * probs.mean(0))
+
+    # positions within each expert via cumsum over the (N, k, E) one-hot,
+    # flattened so slot order is (token, k)-major — deterministic.
+    oh = jax.nn.one_hot(top_e.reshape(-1), e, dtype=jnp.int32)         # (N*k, E)
+    pos = jnp.cumsum(oh, axis=0) * oh - 1                              # (N*k, E)
+    pos = pos.max(axis=-1)                                             # (N*k,)
+    e_flat = top_e.reshape(-1)
+    keep = pos < cap
+    w_flat = jnp.where(keep, top_w.reshape(-1), 0.0)
+
+    tok_id = jnp.repeat(jnp.arange(n), k)
+    safe_pos = jnp.where(keep, pos, cap)                               # drop row
+    # Dispatch = int32 slot map + GATHER, not a payload scatter: GSPMD
+    # partitions a scatter-set of (N·k, d) updates into an f32 all-gather of
+    # the full token payload (~56 GB/device at arctic scale, measured); the
+    # index-gather form ships only int32 ids and lets the partitioner use the
+    # operand-pass-through strategy (masked gather + all-reduce over data).
+    slot_tok = jnp.full((e, cap + 1), n, jnp.int32)                    # n → zero row
+    slot_tok = slot_tok.at[e_flat, safe_pos].set(tok_id, mode="drop")
+    slot_tok = hint(slot_tok[:, :cap], ("act_experts", "act_moe_cap"))  # (E, C)
+    tok_pad = jnp.concatenate([tokens, jnp.zeros((1, d), cd)], axis=0)
+    buf = hint(tok_pad[slot_tok], ("act_experts", "act_moe_cap", None))  # (E, C, d)
+
+    g = hint(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(cd)),
+             ("act_experts", "act_moe_cap", None))
+    u = hint(jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(cd)),
+             ("act_experts", "act_moe_cap", None))
+    hdn = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", hdn, p["w_down"].astype(cd))
+    out_buf = hint(out_buf, ("act_experts", "act_moe_cap", None))
+
+    gathered = out_buf[e_flat, jnp.clip(safe_pos, 0, cap - 1)]         # (N*k, d)
+    gathered = hint(gathered, ("act_batch", None))
+    gathered = gathered * w_flat[:, None].astype(cd)
+    out = hint(jnp.zeros((n, d), cd).at[tok_id].add(gathered), ("act_batch", None))
+
+    if m.dense_residual:
+        gg = tokens @ p["res_gate"].astype(cd)
+        uu = tokens @ p["res_up"].astype(cd)
+        out = out + (jax.nn.silu(gg.astype(jnp.float32)).astype(cd) * uu) @ p["res_down"].astype(cd)
+    return out.reshape(b, t, d), aux

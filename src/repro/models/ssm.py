@@ -1,0 +1,260 @@
+"""SSM mixers: Mamba (SSD chunked form) and RWKV6 — the paper's blocked
+pipeline applied to model recurrences (DESIGN.md §3).
+
+Both mixers share :func:`chunked_gla` — a chunked gated-linear-attention
+evaluation of ``S_t = diag(decay_t) S_{t-1} + k_t v_tᵀ``:
+
+  * intra-chunk work is dense matmuls (MXU-aligned; ``kernels/chunked_scan``
+    is the Pallas realization of the carry),
+  * inter-chunk state propagates sequentially via ``lax.scan`` — chunk b+1's
+    intra compute overlaps chunk b's state application, exactly the skewed
+    pipeline of the paper's Fig. 2 at chunk granularity.
+
+Hardware-adaptation notes (recorded in DESIGN.md):
+  * Jamba's Mamba-1 mixer is implemented in the Mamba-2/SSD scalar-decay-
+    per-head form (MXU-native); no depthwise conv.
+  * RWKV6's data-dependent token-shift "LoRA" mixers are simplified to
+    learned static mix coefficients; decay uses the standard
+    ``w = exp(-exp(ŵ))`` parameterization with ŵ clamped for f32 stability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, rmsnorm
+
+_LCLIP = 30.0  # clamp on -L for the k-side factor (error ≤ e^-30 relative)
+
+
+# ---------------------------------------------------------------------------
+# Shared chunked GLA
+# ---------------------------------------------------------------------------
+def chunked_gla(q, k, v, log_decay, h0, *, chunk: int, mode: str, u=None):
+    """q, k: (B, T, H, K); v: (B, T, H, V); h0: (B, H, K, V) carried state.
+
+    log_decay: (B, T, H) scalar-per-head (mamba/SSD) or (B, T, H, K) vector
+    (rwkv6) — log of diag(decay_t); must be ≤ 0.
+
+    mode="inclusive": y_t = q_t·S_t        (current token in state; mamba)
+    mode="bonus":     y_t = q_t·S_{t-1} + (q_t ⊙ u ⊙ k_t)·v_t   (rwkv6)
+
+    Returns (y (B, T, H, V), h_last (B, H, K, V)). Decode is the T=1 case.
+    """
+    b, t, h, kk = q.shape
+    vv = v.shape[-1]
+    c = min(chunk, t)
+    t_pad = -(-t // c) * c
+    if t_pad != t:
+        # pad with identity steps: decay 1 (log 0), k=v=0 → state unchanged
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, t_pad - t)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, log_decay = pad(q), pad(k), pad(v), pad(log_decay)
+        y, h_last = chunked_gla(q, k, v, log_decay, h0, chunk=chunk, mode=mode, u=u)
+        return y[:, :t], h_last
+    nc = t // c
+    scalar = log_decay.ndim == 3
+    f32 = jnp.float32
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape((b, nc, c) + a.shape[2:]), 1, 0)
+
+    # keep chunk streams in input dtype; cast per-chunk inside the (remat'd)
+    # body — avoids materializing full (B, T, H, K) f32 copies.
+    qc, kc, vc = (to_chunks(a) for a in (q, k, v))
+    ld = to_chunks(log_decay)
+
+    tri = jnp.tril(jnp.ones((c, c), bool), k=0 if mode == "inclusive" else -1)
+
+    def expand(a):  # (B, C, H) -> (B, C, H, 1) for scalar decay broadcasting
+        return a[..., None] if scalar else a
+
+    @jax.checkpoint
+    def one_chunk(h_prev, xs):
+        qq, kk_, vv_, ldc = (x.astype(f32) for x in xs)  # (B, C, H, K/V[, K])
+        L = jnp.cumsum(ldc, axis=1)                 # inclusive within-chunk
+        if mode == "inclusive":
+            Lq = L
+        else:                                       # exclusive: L_{t-1}, L_0 = 0
+            Lq = jnp.pad(L[:, :-1], ((0, 0), (1, 0)) + ((0, 0),) * (L.ndim - 2))
+        qf = qq * jnp.exp(expand(Lq))
+        kf = kk_ * jnp.exp(jnp.minimum(expand(-L), _LCLIP))
+        A = jnp.einsum("bthk,bshk->bhts", qf, kf)
+        A = jnp.where(tri[None, None], A, 0.0)
+        y = jnp.einsum("bhts,bshv->bthv", A, vv_)
+        y = y + jnp.einsum("bthk,bhkv->bthv", qf, h_prev)
+        if mode == "bonus":
+            coef = jnp.sum(qq * u[None, None].astype(f32) * kk_, axis=-1)  # (B,C,H)
+            y = y + coef[..., None] * vv_
+        # state: h = e^{L_end} ⊙ h_prev + Σ_s (k_s ⊙ e^{L_end - L_s}) v_sᵀ
+        l_end = L[:, -1]                            # (B, H[, K])
+        kdec = kk_ * jnp.exp(expand(l_end[:, None] - L))
+        h_new = jnp.exp(l_end)[..., None] * h_prev if not scalar else \
+            jnp.exp(l_end)[..., None, None] * h_prev
+        h_new = h_new + jnp.einsum("bshk,bshv->bhkv", kdec, vv_)
+        return h_new, y.astype(v.dtype)
+
+    h_last, ys = jax.lax.scan(one_chunk, h0.astype(f32), (qc, kc, vc, ld))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, vv)
+    return y, h_last
+
+
+def gla_reference(q, k, v, log_decay, h0, *, mode: str, u=None):
+    """Step-by-step oracle for chunked_gla (tests)."""
+    b, t, h, kk = q.shape
+    scalar = log_decay.ndim == 3
+    f32 = jnp.float32
+    q, k, v, ld = (a.astype(f32) for a in (q, k, v, log_decay))
+
+    def step(hh, xs):
+        qt, kt, vt, lt = xs                        # (B, H, K/V[, K])
+        dec = jnp.exp(lt)[..., None, None] if scalar else jnp.exp(lt)[..., None]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        if mode == "inclusive":
+            hh = dec * hh + kv
+            yt = jnp.einsum("bhk,bhkv->bhv", qt, hh)
+        else:
+            yt = jnp.einsum("bhk,bhkv->bhv", qt, hh)
+            yt = yt + jnp.sum(qt * u[None].astype(f32) * kt, -1)[..., None] * vt
+            hh = dec * hh + kv
+        return hh, yt
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, ld))
+    h_last, ys = jax.lax.scan(step, h0.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba (SSD form)
+# ---------------------------------------------------------------------------
+def mamba_defs(cfg) -> dict:
+    s, d = cfg.ssm, cfg.d_model
+    hv, hk = s.n_heads * s.d_head, s.n_heads * s.d_state
+    return {
+        "w_in": ParamDef((d, 2 * hv), ("embed", "ssm_inner")),
+        "w_bc": ParamDef((d, 2 * hk), ("embed", "ssm_inner")),
+        "w_dt": ParamDef((d, s.n_heads), ("embed", None)),
+        "dt_bias": ParamDef((s.n_heads,), (None,), "zeros"),
+        "a_log": ParamDef((s.n_heads,), (None,), "zeros"),
+        "dskip": ParamDef((s.n_heads,), (None,), "ones"),
+        "norm": ParamDef((hv,), (None,), "ones"),
+        "w_out": ParamDef((hv, d), ("ssm_inner", "embed")),
+    }
+
+
+def mamba_empty_state(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    return {"h": jnp.zeros((batch, s.n_heads, s.d_state, s.d_head), dtype)}
+
+
+def mamba_forward(p, cfg, x, state=None):
+    """x: (B, T, d). Returns (out, new_state). T=1 with state = decode."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    H, K, V = s.n_heads, s.d_state, s.d_head
+    cd = cfg.compute_dtype
+    if state is None:
+        state = mamba_empty_state(cfg, b)
+    xg, z = jnp.split(x @ p["w_in"].astype(cd), 2, axis=-1)
+    xg = xg.reshape(b, t, H, V)
+    bb, cc = jnp.split(x @ p["w_bc"].astype(cd), 2, axis=-1)
+    bb = bb.reshape(b, t, H, K)
+    cc = cc.reshape(b, t, H, K)
+    dt = jax.nn.softplus((x @ p["w_dt"].astype(cd)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))          # (B,T,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    ld = dt * a[None, None]
+    v = (xg.astype(jnp.float32) * dt[..., None]).astype(cd)
+    y, h_last = chunked_gla(cc, bb, v, ld, state["h"],
+                            chunk=s.chunk, mode="inclusive")
+    y = y + p["dskip"].astype(cd)[None, None, :, None] * xg
+    y = rmsnorm(y.reshape(b, t, H * V), p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cd)
+    return y @ p["w_out"].astype(cd), {"h": h_last}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+def rwkv_defs(cfg) -> dict:
+    s, d = cfg.ssm, cfg.d_model
+    hk, hv = s.n_heads * s.d_state, s.n_heads * s.d_head
+    return {
+        "mix": ParamDef((5, d), (None, None), "zeros"),   # r,k,v,g,w shifts
+        "w_r": ParamDef((d, hk), ("embed", "ssm_inner")),
+        "w_k": ParamDef((d, hk), ("embed", "ssm_inner")),
+        "w_v": ParamDef((d, hv), ("embed", "ssm_inner")),
+        "w_g": ParamDef((d, hv), ("embed", "ssm_inner")),
+        "w_w": ParamDef((d, hk), ("embed", "ssm_inner"), "normal", 0.002),
+        "w_bias": ParamDef((hk,), (None,), "zeros"),
+        "u": ParamDef((s.n_heads, s.d_state), (None, None), "normal", 0.5),
+        "gn": ParamDef((hv,), (None,), "ones"),
+        "w_out": ParamDef((hv, d), ("ssm_inner", "embed")),
+    }
+
+
+def rwkv_empty_state(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    return {
+        "h": jnp.zeros((batch, s.n_heads, s.d_state, s.d_head), dtype),
+        "x_prev": jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype),
+    }
+
+
+def _token_shift(x, x_prev):
+    return jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def rwkv_forward(p, cfg, x, state=None):
+    """x: (B, T, d). Returns (out, new_state). T=1 with state = decode."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    H, K, V = s.n_heads, s.d_state, s.d_head
+    cd = cfg.compute_dtype
+    if state is None:
+        state = rwkv_empty_state(cfg, b)
+    xs = _token_shift(x, state["x_prev"])
+    mix = jax.nn.sigmoid(p["mix"].astype(jnp.float32)).astype(cd)     # (5, d)
+    xm = [x + mix[i][None, None] * (xs - x) for i in range(5)]
+    r = (xm[0] @ p["w_r"].astype(cd)).reshape(b, t, H, K)
+    k = (xm[1] @ p["w_k"].astype(cd)).reshape(b, t, H, K)
+    v = (xm[2] @ p["w_v"].astype(cd)).reshape(b, t, H, V)
+    g = xm[3] @ p["w_g"].astype(cd)
+    ww = (xm[4] @ p["w_w"].astype(cd)).astype(jnp.float32).reshape(b, t, H, K)
+    ww = ww + p["w_bias"].astype(jnp.float32).reshape(H, K)[None, None]
+    ld = -jnp.exp(jnp.clip(ww, -8.0, 1.0))                            # ≤ 0
+    y, h_last = chunked_gla(r, k, v, ld, state["h"],
+                            chunk=s.chunk, mode="bonus", u=p["u"])
+    # per-head group norm
+    y32 = y.astype(jnp.float32)
+    y32 = y32 * jax.lax.rsqrt(jnp.mean(y32 * y32, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = (y32.reshape(b, t, H * V) * p["gn"].astype(jnp.float32)[None, None]).astype(cd)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(cd)
+    out = y @ p["w_out"].astype(cd)
+    return out, {"h": h_last, "x_prev": x[:, -1:]}
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel mix (the FFN used by rwkv6 configs)
+# ---------------------------------------------------------------------------
+def rwkv_cm_defs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mix": ParamDef((2, d), (None, None), "zeros"),
+        "w_k": ParamDef((d, f), ("embed", "ffn")),
+        "w_v": ParamDef((f, d), ("ffn", "embed")),
+        "w_r": ParamDef((d, d), ("embed", None)),
+    }
+
+
+def rwkv_cm_forward(p, cfg, x, x_prev=None):
+    b, t, d = x.shape
+    cd = cfg.compute_dtype
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, d), cd)
+    xs = _token_shift(x, x_prev)
+    mix = jax.nn.sigmoid(p["mix"].astype(jnp.float32)).astype(cd)
+    xk = x + mix[0][None, None] * (xs - x)
+    xr = x + mix[1][None, None] * (xs - x)
+    kk = jnp.square(jax.nn.relu((xk @ p["w_k"].astype(cd)).astype(jnp.float32))).astype(cd)
+    rr = jax.nn.sigmoid((xr @ p["w_r"].astype(cd)).astype(jnp.float32)).astype(cd)
+    return rr * (kk @ p["w_v"].astype(cd)), x[:, -1:]

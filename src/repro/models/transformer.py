@@ -1,0 +1,209 @@
+"""Block assembly and the scan-over-layer-groups stack.
+
+The layer pattern is periodic (period = lcm of the hybrid attention period
+and the MoE period, see ``ModelConfig.scan_period``); parameters are stacked
+(n_groups, …) and the stack is one ``lax.scan`` whose body unrolls one
+period — this keeps the HLO size O(period) instead of O(n_layers), which is
+what makes 80-cell dry-run compiles tractable (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import attn_decode, attn_defs, attn_forward
+from repro.models.layers import ParamDef, rmsnorm, stack_defs, swiglu
+from repro.runtime.sharding import hint
+
+
+# ---------------------------------------------------------------------------
+# Definitions
+# ---------------------------------------------------------------------------
+def _mlp_defs(cfg, kind: str) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if kind == "moe":
+        return moe_mod.moe_defs(cfg)
+    if kind == "rwkv_cm":
+        return ssm_mod.rwkv_cm_defs(cfg)
+    return {
+        "w_gate": ParamDef((d, f), ("embed", "ffn")),
+        "w_up": ParamDef((d, f), ("embed", "ffn")),
+        "w_down": ParamDef((f, d), ("ffn", "embed")),
+    }
+
+
+def _mixer_defs(cfg, kind: str) -> dict:
+    if kind == "attn":
+        return attn_defs(cfg)
+    if kind == "mamba":
+        return ssm_mod.mamba_defs(cfg)
+    if kind == "rwkv6":
+        return ssm_mod.rwkv_defs(cfg)
+    raise ValueError(kind)
+
+
+def block_defs(cfg, j: int) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": ParamDef((d,), (None,), "ones"),
+        "mixer": _mixer_defs(cfg, cfg.mixer_of(j)),
+        "ln2": ParamDef((d,), (None,), "ones"),
+        "mlp": _mlp_defs(cfg, cfg.mlp_of(j)),
+    }
+
+
+def stack_param_defs(cfg) -> dict:
+    group = {f"b{j}": block_defs(cfg, j) for j in range(cfg.scan_period)}
+    return stack_defs(group, cfg.n_groups)
+
+
+# ---------------------------------------------------------------------------
+# Cache structure (decode/prefill): stacked (n_groups, …) per period position
+# ---------------------------------------------------------------------------
+def empty_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    """dtype=jnp.int8 enables the quantized KV cache (per-vector bf16 scales);
+    the 480B-class decode cells need it to fit 16 GiB/chip (EXPERIMENTS.md)."""
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    per_pos = {}
+    for j in range(cfg.scan_period):
+        kind = cfg.mixer_of(j)
+        if kind == "attn":
+            c = {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+                 "v": jnp.zeros((batch, max_len, hkv, hd), dtype)}
+            if dtype == jnp.int8:
+                c["k_scale"] = jnp.zeros((batch, max_len, hkv, 1), jnp.bfloat16)
+                c["v_scale"] = jnp.zeros((batch, max_len, hkv, 1), jnp.bfloat16)
+        elif kind == "mamba":
+            c = ssm_mod.mamba_empty_state(cfg, batch)
+        else:
+            c = ssm_mod.rwkv_empty_state(cfg, batch)
+        if cfg.mlp_of(j) == "rwkv_cm":
+            c["x_cm"] = jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype)
+        per_pos[f"b{j}"] = c
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_groups,) + a.shape), per_pos)
+
+
+def cache_axes(cfg) -> dict:
+    """Logical sharding axes mirroring empty_cache (for the dry-run specs)."""
+    per_pos = {}
+    for j in range(cfg.scan_period):
+        kind = cfg.mixer_of(j)
+        if kind == "attn":
+            kv_ax = ("layers", "act_batch", "kv_seq", None, None)
+            c = {"k": kv_ax, "v": kv_ax, "k_scale": kv_ax, "v_scale": kv_ax}
+        elif kind == "mamba":
+            c = {"h": ("layers", "act_batch", "act_heads", None, None)}
+        else:
+            c = {"h": ("layers", "act_batch", "act_heads", None, None),
+                 "x_prev": ("layers", "act_batch", None, None)}
+        if cfg.mlp_of(j) == "rwkv_cm":
+            c["x_cm"] = ("layers", "act_batch", None, None)
+        per_pos[f"b{j}"] = c
+    return per_pos
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _mlp_forward(p, cfg, kind, x, x_cm=None):
+    """Returns (out, aux_loss, new_x_cm)."""
+    if kind == "moe":
+        out, aux = moe_mod.moe_forward(p, cfg, x)
+        return out, aux, None
+    if kind == "rwkv_cm":
+        out, new_prev = ssm_mod.rwkv_cm_forward(p, cfg, x, x_cm)
+        return out, 0.0, new_prev
+    out = swiglu(x, p["w_gate"], p["w_up"], p["w_down"], cfg.compute_dtype)
+    return out, 0.0, None
+
+
+def _block_apply(p, cfg, j, x, positions, mode: str, cache=None, pos=None):
+    """One block. mode: "train" (no cache), "prefill" (fill cache buffers over
+    the whole prompt), "decode" (T=1 against the cache at position ``pos``)."""
+    kind = cfg.mixer_of(j)
+    mlp_kind = cfg.mlp_of(j)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    new_cache = {}
+    if kind == "attn":
+        if mode == "decode":
+            mix, nc = attn_decode(p["mixer"], cfg, h, cache, pos)
+            new_cache.update(nc)
+        else:
+            mix, (k, v) = attn_forward(p["mixer"], cfg, h, positions)
+            if mode == "prefill":
+                from repro.models.attention import quantize_kv
+
+                kv_ax = ("act_batch", "kv_seq", None, None)
+                if cache["k"].dtype == jnp.int8:
+                    kq, ks = quantize_kv(k)
+                    vq, vs = quantize_kv(v)
+                    for name, val in (("k", kq), ("v", vq),
+                                      ("k_scale", ks), ("v_scale", vs)):
+                        upd = jax.lax.dynamic_update_slice(
+                            cache[name], val.astype(cache[name].dtype), (0, 0, 0, 0))
+                        new_cache[name] = hint(upd, kv_ax)
+                else:
+                    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+                    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+                    new_cache.update(k=hint(ck, kv_ax), v=hint(cv, kv_ax))
+    elif kind == "mamba":
+        state = {"h": cache["h"]} if mode == "decode" else None
+        mix, st = ssm_mod.mamba_forward(p["mixer"], cfg, h, state)
+        if mode != "train":
+            new_cache.update(st)
+    else:  # rwkv6
+        state = {"h": cache["h"], "x_prev": cache["x_prev"]} if mode == "decode" else None
+        mix, st = ssm_mod.rwkv_forward(p["mixer"], cfg, h, state)
+        if mode != "train":
+            new_cache.update(st)
+    x = x + mix
+    h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x_cm = cache.get("x_cm") if (cache is not None and mode == "decode") else None
+    out, aux, new_cm = _mlp_forward(p["mlp"], cfg, mlp_kind, h2, x_cm)
+    if mode != "train" and cache is not None and "x_cm" in cache:
+        new_cache["x_cm"] = new_cm if new_cm is not None else cache["x_cm"]
+    x = x + out
+    x = hint(x, ("act_batch", "act_seq", "act_embed"))
+    return x, aux, (new_cache if mode != "train" else None)
+
+
+def stack_forward(groups_params, cfg, x, positions, mode: str = "train",
+                  cache=None, pos=None):
+    """x: (B, T, d). cache: stacked tree from empty_cache (modes != train).
+
+    Returns (x, aux_loss_sum, new_cache_or_None)."""
+    period = cfg.scan_period
+
+    if mode == "train":
+        def body(carry, gp):
+            xx, aux = carry
+            for j in range(period):
+                xx, a, _ = _block_apply(gp[f"b{j}"], cfg, j, xx, positions, mode)
+                aux = aux + a
+            return (xx, aux), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), groups_params)
+        return x, aux, None
+
+    def body(carry, xs):
+        xx, aux = carry
+        gp, gc = xs
+        new_gc = {}
+        for j in range(period):
+            xx, a, nc = _block_apply(gp[f"b{j}"], cfg, j, xx, positions, mode,
+                                     cache=gc[f"b{j}"], pos=pos)
+            new_gc[f"b{j}"] = nc
+            aux = aux + a
+        return (xx, aux), new_gc
+
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                       (groups_params, cache))
+    return x, aux, new_cache

@@ -1,0 +1,72 @@
+"""Gradient compression for cross-pod reduction: int8 quantization and top-k
+sparsification, both with error feedback.
+
+At 512+ chips the cross-pod (DCN) all-reduce of bf16 gradients is the
+bandwidth wall; 8-bit quantization cuts it 2× (4× vs fp32) at <0.1% cosine
+error with error feedback. ``compressed_psum`` is the shard_map building
+block (quantize → psum → dequantize); ``ef_compress_grads`` is the
+train-loop integration that carries the EF residual in the optimizer state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(x):
+    q, s = quantize_int8(x)
+    return dequantize_int8(q, s).astype(x.dtype)
+
+
+def topk_sparsify(x, frac: float):
+    """Keep the top `frac` fraction of entries by magnitude (rest zeroed)."""
+    xf = x.astype(jnp.float32)
+    flat = jnp.abs(xf).reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(xf) >= thresh, xf, 0.0).astype(x.dtype)
+
+
+def ef_compress_grads(grads, residual, mode: str = "int8", topk_frac: float = 0.05):
+    """Error-feedback compression: g' = C(g + r); r' = (g + r) - g'.
+
+    Returns (compressed_grads, new_residual)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        c = (compress_decompress(gf) if mode == "int8"
+             else topk_sparsify(gf, topk_frac)).astype(jnp.float32)
+        return c.astype(g.dtype), gf - c
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def compressed_psum(x, axis_name: str):
+    """shard_map collective: int8-compressed all-reduce with a shared scale.
+
+    1. pmax of |x| fixes one scale for all shards (one scalar exchange),
+    2. each shard ships int8 payload (simulated; summed in int32 to avoid
+       overflow, as a real ring-reduce accumulator would),
+    3. one dequantize at the end.
+    Wire bytes: 1/2 of bf16, 1/4 of fp32."""
+    xf = x.astype(jnp.float32)
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name)
+    scale = jnp.maximum(gmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return (total.astype(jnp.float32) * scale).astype(x.dtype)

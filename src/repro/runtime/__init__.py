@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, fault tolerance, elastic re-meshing,
+gradient compression, pipeline parallelism."""

@@ -1,0 +1,42 @@
+"""Elastic scaling: rebuild the mesh after device loss and reshard state.
+
+When a pod (or slice) drops, the job is restarted by the scheduler on the
+surviving N' devices. ``best_mesh`` picks the largest (data, model) grid with
+the model axis preserved when possible (TP degree is baked into per-layer
+weight shapes' divisibility, so we keep it unless N' forces otherwise), and
+``reshard``/checkpoint-restore place the old state onto the new mesh — the
+Checkpointer restore path already reshards, so elastic restart is
+checkpoint-restore onto ``best_mesh``'s shardings.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def best_mesh(devices: Sequence, model_axis: int,
+              axis_names: tuple = ("data", "model")) -> Mesh:
+    """Largest usable (data, model) mesh from the surviving devices."""
+    n = len(devices)
+    tp = model_axis
+    while tp > 1 and n % tp:
+        tp //= 2
+    dp = n // tp
+    devs = np.asarray(devices[: dp * tp]).reshape(dp, tp)
+    return Mesh(devs, axis_names)
+
+
+def reshard(tree, mesh: Mesh, spec_fn) -> dict:
+    """Place `tree` onto `mesh`; spec_fn(path, leaf) -> PartitionSpec."""
+    def place(path, x):
+        return jax.device_put(x, NamedSharding(mesh, spec_fn(path, x)))
+
+    return jax.tree_util.tree_map_with_path(place, tree)
+
+
+def simulate_device_loss(devices: Sequence, lost: int) -> list:
+    """Drop `lost` devices (the tail — stand-in for a failed slice)."""
+    return list(devices)[: len(devices) - lost]

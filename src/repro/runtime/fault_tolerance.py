@@ -1,0 +1,111 @@
+"""Fault tolerance: supervised training with checkpoint/restart, failure
+injection, and straggler detection.
+
+Control-plane design (DESIGN.md §4): a real multi-host deployment runs this
+supervisor on the coordinator; workers heartbeat through the JAX distributed
+service and a dead heartbeat triggers the same ``_recover`` path exercised
+here. In this single-process container, failures are *injected* (exception
+schedules, corrupted-step predicates) so the recovery logic itself is what
+gets tested — restore-from-latest, replay of the data stream (deterministic
+batches make this exact), and straggler step re-execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FTConfig:
+    checkpoint_every: int = 10
+    max_restarts: int = 5
+    straggler_factor: float = 3.0    # step time > factor × median → straggler
+    straggler_window: int = 16
+
+
+@dataclasses.dataclass
+class FTStats:
+    restarts: int = 0
+    stragglers: int = 0
+    checkpoints: int = 0
+    steps_replayed: int = 0
+
+
+class Supervisor:
+    """Drives `step_fn(state, batch) -> (state, metrics)` with recovery.
+
+    `state` is any pytree (params + opt state). `failure_hook(step)` may raise
+    InjectedFailure to simulate a node loss; recovery restores the latest
+    checkpoint and replays the (deterministic) data stream.
+    """
+
+    def __init__(self, step_fn: Callable, checkpointer: Checkpointer,
+                 cfg: FTConfig = FTConfig(),
+                 failure_hook: Optional[Callable] = None):
+        self.step_fn = step_fn
+        self.ckpt = checkpointer
+        self.cfg = cfg
+        self.failure_hook = failure_hook or (lambda step: None)
+        self.stats = FTStats()
+        self._durations: list = []
+
+    def _maybe_checkpoint(self, step: int, state, force: bool = False):
+        if force or step % self.cfg.checkpoint_every == 0:
+            self.ckpt.save(step, state)
+            self.stats.checkpoints += 1
+
+    def _recover(self, abstract_state):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            raise RuntimeError("failure before first checkpoint; cannot recover")
+        state = self.ckpt.restore(latest, abstract_state)
+        self.stats.restarts += 1
+        return latest, state
+
+    def run(self, state, batches: Callable, start_step: int, num_steps: int):
+        """batches(i) -> batch (deterministic!). Returns (state, metrics_list)."""
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=getattr(x, "sharding", None)),
+            state)
+        self._maybe_checkpoint(start_step, state, force=True)
+        step = start_step
+        metrics_log = []
+        restarts_left = self.cfg.max_restarts
+        while step < start_step + num_steps:
+            try:
+                self.failure_hook(step)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batches(step))
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+                dt = time.perf_counter() - t0
+                self._watch_straggler(dt)
+                metrics_log.append({"step": step, **{k: float(v) for k, v in metrics.items()},
+                                    "dt": dt})
+                step += 1
+                self._maybe_checkpoint(step, state)
+            except InjectedFailure:
+                if restarts_left == 0:
+                    raise
+                restarts_left -= 1
+                resume, state = self._recover(abstract)
+                self.stats.steps_replayed += step - resume
+                step = resume
+        self.ckpt.wait()
+        return state, metrics_log
+
+    def _watch_straggler(self, dt: float):
+        self._durations.append(dt)
+        w = self._durations[-self.cfg.straggler_window:]
+        if len(w) >= 4 and dt > self.cfg.straggler_factor * float(np.median(w)):
+            # In production: re-shard away from / restart the slow worker.
+            self.stats.stragglers += 1

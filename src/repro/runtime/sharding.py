@@ -1,0 +1,109 @@
+"""Rule-based sharding: logical axis names -> mesh axes, with divisibility
+fallback (DESIGN.md §4).
+
+Every parameter / activation dimension carries a *logical* name ("embed",
+"ffn", "experts", "kv_seq", …). A rule maps each name to a priority list of
+mesh-axis candidates (strings or tuples for compound axes). ``spec_for``
+assigns, per tensor, the first candidate that (a) divides the dim size and
+(b) has not been used by another dim of the same tensor — this is what lets
+e.g. granite-moe's 40 experts fall back to sharding the expert FFN dim, and
+the batch=1 long_500k cell shard its KV-cache sequence over *both* mesh axes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+def make_rules(multi_pod: bool = False) -> dict:
+    fsdp = ("pod", "data") if multi_pod else "data"
+    both = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        # --- parameters ---
+        "vocab": ["model"],
+        "embed": [fsdp],
+        "heads": ["model"],          # flattened n_heads*head_dim projections
+        "kv": ["model"],             # flattened n_kv*head_dim projections
+        "ffn": ["model"],
+        "experts": ["model"],
+        "expert_embed": [fsdp],
+        "expert_ffn": ["model"],     # fallback target when experts don't divide
+        "ssm_inner": ["model"],      # mamba/rwkv flattened head dims
+        # --- activations / state ---
+        "act_batch": [fsdp],
+        "act_seq": [None],
+        "act_seq_attn": ["model"],   # seq fallback when heads don't divide
+        "kv_seq": [both, "model"],   # decode cache sequence axis
+        "act_heads": ["model"],
+        "act_embed": [None],
+        "act_ffn": ["model"],
+        "act_experts": ["model"],
+        # capacity dim takes the model axis ONLY when the expert dim couldn't
+        # (granite-moe's E=40); giving it the data axis as well regressed the
+        # E-divisible archs 1.4-2x (EXPERIMENTS.md §Perf iteration log)
+        "act_moe_cap": ["model"],
+        "layers": [None],
+        None: [None],
+    }
+
+
+def spec_for(shape: Sequence[int], axes: Sequence, rules: dict,
+             axis_sizes: dict) -> P:
+    """Build a PartitionSpec for `shape` whose dims carry logical `axes`."""
+    assert len(shape) == len(axes), (shape, axes)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        choice = None
+        for cand in rules.get(name, [None]):
+            if cand is None:
+                break
+            parts = cand if isinstance(cand, tuple) else (cand,)
+            if any(p in used for p in parts):
+                continue
+            size = int(np.prod([axis_sizes[p] for p in parts]))
+            if dim % size == 0 and dim >= size:
+                choice = cand
+                used.update(parts)
+                break
+        out.append(choice)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Trace-time activation hints
+# ---------------------------------------------------------------------------
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: dict):
+    """Launch code wraps tracing/lowering in this so model-internal ``hint``
+    calls become with_sharding_constraint; outside it they are no-ops."""
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules, dict(zip(mesh.axis_names, mesh.devices.shape)))
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def hint(x, axes: Sequence):
+    state = getattr(_ctx, "state", None)
+    if state is None:
+        return x
+    mesh, rules, sizes = state
+    spec = spec_for(x.shape, axes, rules, sizes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, shape, axes, rules) -> NamedSharding:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return NamedSharding(mesh, spec_for(shape, axes, rules, sizes))

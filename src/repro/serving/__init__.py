@@ -1,0 +1,2 @@
+from repro.serving.engine import Engine, Request  # noqa: F401
+from repro.serving.scheduler import Scheduler  # noqa: F401

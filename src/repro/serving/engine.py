@@ -1,0 +1,109 @@
+"""Serving engine: slot-based continuous batching over jitted prefill/decode.
+
+One resident batched KV cache (max_batch × max_len); requests are admitted
+into free slots (per-request prefill scattered into the slot), every engine
+step runs ONE batched decode over all slots with per-slot positions, and
+finished slots are recycled without draining the batch — the standard
+continuous-batching serving loop (vLLM-style, block-granularity paging left
+as the documented extension).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (T,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                 # -1: never stops early
+    out: list = dataclasses.field(default_factory=list)
+
+
+class Engine:
+    def __init__(self, params, cfg, max_batch: int, max_len: int,
+                 cache_dtype=jnp.float32):
+        self.params, self.cfg = params, cfg
+        self.b, self.s = max_batch, max_len
+        self.cache = model.empty_cache(cfg, max_batch, max_len, dtype=cache_dtype)
+        self.pos = np.zeros(max_batch, np.int32)         # next write position
+        self.budget = np.zeros(max_batch, np.int32)
+        self.eos = np.full(max_batch, -1, np.int32)
+        self.slot_req: list = [None] * max_batch
+        self.next_tok = np.zeros(max_batch, np.int32)
+        self.steps_run = 0
+
+        @jax.jit
+        def _decode(params, cache, tok, pos):
+            return model.decode_step(params, cfg, tok, cache, pos)
+
+        self._decode = _decode
+
+        @functools.partial(jax.jit, static_argnames=("t",))
+        def _prefill(params, tokens, t):
+            return model.prefill(params, cfg, tokens, max_len=max_len,
+                                 cache_dtype=cache_dtype)
+
+        self._prefill = _prefill
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> list:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def admit(self, req: Request):
+        """Prefill into a free slot. Returns the request if it already
+        finished (max_new_tokens == 1 — the prefill emits the only token)."""
+        slot = self.free_slots()[0]
+        t = len(req.prompt)
+        logits, cache1 = self._prefill(self.params, jnp.asarray(req.prompt)[None], t)
+        # scatter the single-request cache into the batched cache at `slot`
+        def put(big, small):
+            if big.ndim >= 2 and small.shape[0] == big.shape[0]:
+                return big.at[:, slot].set(small[:, 0])
+            return big
+
+        self.cache = jax.tree.map(put, self.cache, cache1)
+        first = int(jnp.argmax(logits[0]))
+        req.out.append(first)
+        if req.max_new_tokens <= 1 or first == req.eos_id:
+            return req
+        self.slot_req[slot] = req
+        self.pos[slot] = t
+        self.budget[slot] = req.max_new_tokens - 1  # prefill emitted one
+        self.eos[slot] = req.eos_id
+        self.next_tok[slot] = first
+        return None
+
+    def active(self) -> np.ndarray:
+        return np.array([r is not None for r in self.slot_req])
+
+    def step(self) -> list:
+        """One batched decode step. Returns finished Requests."""
+        if not self.active().any():
+            return []
+        tok = jnp.asarray(self.next_tok)[:, None]
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, self.cache, tok, pos)
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.steps_run += 1
+        finished = []
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            self.budget[i] -= 1
+            req.out.append(int(nxt[i]))
+            self.next_tok[i] = nxt[i]
+            if self.budget[i] <= 0 or nxt[i] == self.eos[i] or self.pos[i] >= self.s - 1:
+                finished.append(req)
+                self.slot_req[i] = None
+        return finished

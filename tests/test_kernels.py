@@ -1,0 +1,122 @@
+"""Pallas kernel sweeps: shapes × dtypes against the ref.py oracles,
+executed in interpret mode (kernel body runs on CPU)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chunked_scan import chunked_scan_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sdp_pipeline import sdp_pipeline_pallas
+from repro.kernels.semiring_matmul import tropical_matmul_pallas
+from repro.core import sdp
+
+rng = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# semiring (weighted tropical) matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (16, 32, 16), (64, 16, 32), (128, 128, 128)])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_tropical_matmul_sweep(m, k, n, weighted):
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    av = gv = bv = None
+    if weighted:
+        av = jnp.asarray(rng.uniform(1, 3, size=(m,)), jnp.float32)
+        gv = jnp.asarray(rng.uniform(1, 3, size=(k,)), jnp.float32)
+        bv = jnp.asarray(rng.uniform(1, 3, size=(n,)), jnp.float32)
+    got = tropical_matmul_pallas(a, b, av, gv, bv, bm=min(128, m), bn=min(128, n),
+                                 bk=min(8, k), interpret=True)
+    want = ref.tropical_matmul_ref(a, b, av, gv, bv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_tropical_matmul_blocked_equals_unblocked():
+    a = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    one = tropical_matmul_pallas(a, b, bm=64, bn=64, bk=64, interpret=True)
+    many = tropical_matmul_pallas(a, b, bm=16, bn=32, bk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(one), np.asarray(many), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# blocked S-DP kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("offsets", [(5, 3, 1), (7, 4, 2), (16, 8, 4, 2), (3, 2, 1)])
+@pytest.mark.parametrize("op", ["min", "max"])
+@pytest.mark.parametrize("n", [64, 257])
+def test_sdp_kernel_sweep(offsets, op, n):
+    a1 = offsets[0]
+    init = jnp.asarray(rng.normal(size=(a1,)), jnp.float32)
+    want = sdp.sdp_reference(np.asarray(init), offsets, op, n)
+    got = sdp_pipeline_pallas(init, offsets, op, n, block=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+def test_sdp_kernel_fp64_like_add():
+    init = jnp.asarray([1e-20, 1e-20], jnp.float32)
+    got = sdp_pipeline_pallas(init, (2, 1), "add", 40, interpret=True)
+    want = sdp.sdp_reference(np.asarray(init), (2, 1), "add", 40)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked linear scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("t,d,chunk,bd", [(64, 32, 16, 32), (128, 64, 32, 32), (256, 16, 128, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_chunked_scan_sweep(t, d, chunk, bd, dtype):
+    x = jnp.asarray(rng.normal(size=(t, d)), dtype)
+    decay = jnp.asarray(rng.uniform(0.8, 1.0, size=(t, d)), dtype)
+    h0 = jnp.asarray(rng.normal(size=(d,)), dtype)
+    got_all, got_last = chunked_scan_pallas(x, decay, h0, chunk=chunk, bd=bd, interpret=True)
+    want_all, want_last = ref.chunked_scan_ref(x, decay, h0)
+    np.testing.assert_allclose(np.asarray(got_all), np.asarray(want_all), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_last), np.asarray(want_last), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,d,bq,bk", [(128, 64, 64, 64), (256, 32, 128, 128), (128, 128, 128, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, d, bq, bk, causal, dtype):
+    bh = 3
+    q = jnp.asarray(rng.normal(size=(bh, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(bh, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(bh, s, d)), dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk, interpret=True)
+    want = ref.attention_ref(q[:, None], k[:, None], v[:, None], causal=causal)[:, 0]
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_ref_chunked_matches_oracle():
+    from repro.kernels.ops import _flash_ref_chunked
+
+    q = jnp.asarray(rng.normal(size=(2, 4, 128, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 4, 128, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 4, 128, 32)), jnp.float32)
+    got = _flash_ref_chunked(q, k, v, causal=True, chunk=32)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_ops_dispatch_ref_on_cpu():
+    from repro.kernels import ops
+
+    assert ops.kernel_mode() in ("ref", "pallas", "interpret")
+    q = jnp.asarray(rng.normal(size=(1, 8, 64, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)  # GQA kv=2
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, chunk=16)
+    kb = jnp.repeat(k, 4, axis=1)
+    vb = jnp.repeat(v, 4, axis=1)
+    want = ref.attention_ref(q, kb, vb, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,118 @@
+"""S-DP solver tests — Definition 1, Figs. 1-2, §III complexity claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import sdp
+from repro.core.schedule import SkewedSchedule
+
+SOLVERS = {
+    "sequential": sdp.solve_sequential,
+    "tournament": sdp.solve_tournament,
+    "pipeline": sdp.solve_pipeline,
+    "blocked": sdp.solve_blocked,
+    "companion_scan": sdp.solve_companion_scan,
+}
+
+
+def run(solver_name, init, offsets, op, n, **kw):
+    fn = SOLVERS[solver_name]
+    return np.asarray(fn(jnp.asarray(init), tuple(offsets), op, n, **kw))
+
+
+@pytest.mark.parametrize("solver", list(SOLVERS))
+@pytest.mark.parametrize("op", ["min", "max", "add"])
+def test_fibonacci_family(solver, op):
+    """The paper's own example: k=2, a=(2,1) — Fibonacci when op=add."""
+    n, offsets = 64, (2, 1)
+    init = np.array([1.0, 1.0], dtype=np.float32)
+    if op == "add":  # keep magnitudes small: use tiny init to avoid overflow
+        init = np.array([1e-30, 1e-30], dtype=np.float32)
+    ref = sdp.sdp_reference(init, offsets, op, n)
+    got = run(solver, init, offsets, op, n)
+    np.testing.assert_allclose(got, ref, rtol=1e-5)
+
+
+@pytest.mark.parametrize("solver", [s for s in SOLVERS if s != "companion_scan"])
+def test_worst_case_consecutive_offsets(solver):
+    """§III conflict case: consecutive offsets a=(4,3,2,1) (paper Fig. 4)."""
+    n, offsets = 200, (4, 3, 2, 1)
+    init = np.arange(4, dtype=np.float32) + 1.0
+    ref = sdp.sdp_reference(init, offsets, "min", n)
+    np.testing.assert_allclose(run(solver, init, offsets, "min", n), ref)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.data(),
+    op=st.sampled_from(["min", "max"]),
+    n=st.integers(min_value=8, max_value=300),
+)
+def test_property_all_solvers_match_oracle(data, op, n):
+    """Hypothesis sweep: random strictly-decreasing offsets, random inits."""
+    a1 = data.draw(st.integers(min_value=1, max_value=min(24, n - 1)))
+    k = data.draw(st.integers(min_value=1, max_value=a1))
+    offsets = sorted(
+        data.draw(st.lists(st.integers(1, a1), min_size=k, max_size=k, unique=True)),
+        reverse=True,
+    )
+    offsets[0] = a1  # ensure a_1 initial segment length
+    offsets = sorted(set(offsets), reverse=True)
+    init = data.draw(
+        st.lists(st.integers(-50, 50), min_size=a1, max_size=a1)
+    )
+    init = np.asarray(init, dtype=np.float32)
+    ref = sdp.sdp_reference(init, offsets, op, n)
+    for name in SOLVERS:
+        if name == "companion_scan" and a1 > 12:
+            continue  # O(n a1^3) — keep the scan solver to small a1
+        got = run(name, init, offsets, op, n)
+        np.testing.assert_allclose(got, ref, rtol=1e-5, err_msg=name)
+
+
+def test_step_count_claim():
+    """§III-A: the pipeline takes n + k - a_1 - 1 outer steps."""
+    n, offsets = 100, (5, 3, 1)
+    assert sdp.pipeline_num_steps(n, offsets) == n + 3 - 5 - 1
+    sched = SkewedSchedule(num_items=n - 5, num_stages=3)
+    # the schedule's trapezoid matches: items + stages - 1 steps for the body
+    assert sched.num_steps == (n - 5) + 3 - 1 == sdp.pipeline_num_steps(n, offsets)
+
+
+def test_paper_execution_example():
+    """Fig. 3: k=3, a=(5,3,1), init ST[0..4]; spot-check the trace."""
+    init = np.array([10.0, 20.0, 30.0, 40.0, 50.0], dtype=np.float32)
+    offsets = (5, 3, 1)
+    ref = sdp.sdp_reference(init, offsets, "min", 12)
+    # ST[5] = min(ST[0], ST[2], ST[4]) = 10
+    assert ref[5] == 10.0
+    got = run("pipeline", init, offsets, "min", 12)
+    np.testing.assert_allclose(got, ref)
+
+
+def test_blocked_width_matches_min_offset():
+    """Blocked solver must clamp its step width to a_k (dependency distance)."""
+    n = 128
+    init = np.linspace(1, 7, 7).astype(np.float32)
+    for offsets in [(7, 4, 2), (7, 6, 5, 4, 3, 2, 1), (7, 1)]:
+        ref = sdp.sdp_reference(init, offsets, "min", n)
+        got = run("blocked", init, offsets, "min", n, block=64)
+        np.testing.assert_allclose(got, ref, err_msg=str(offsets))
+
+
+def test_companion_scan_matches_fibonacci_exactly():
+    """plus_times semiring scan reproduces Fibonacci (float64 exact < 2^53)."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    try:
+        init = np.array([1.0, 1.0])
+        ref = sdp.sdp_reference(init, (2, 1), "add", 70)
+        got = np.asarray(
+            sdp.solve_companion_scan(jnp.asarray(init, dtype=jnp.float64), (2, 1), "add", 70)
+        )
+        np.testing.assert_allclose(got, ref)
+    finally:
+        jax.config.update("jax_enable_x64", False)
