@@ -1,0 +1,86 @@
+"""DP zoo sweep: registered problems × supporting backends × sizes.
+
+Prints ``zoo,<problem>,<backend>,<size>,<cells>,<ms>,<ok>,<dispatched>``
+CSV lines (``dispatched`` = 1 on the row the cost model routes to) and
+writes ``BENCH_dp_zoo.json`` next to the repo root so the perf trajectory
+is recorded run-over-run. Also measures the batch-amortization ratio
+(loop of B solves vs one vmapped ``batch_solve``) per linear/triangular
+representative.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro import dp
+
+SIZES = (8, 16, 32)
+BATCH = 16
+REPEATS = 3
+
+
+def _time(fn) -> float:
+    fn()  # compile / warm
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def run(out_path: str = "BENCH_dp_zoo.json") -> dict:
+    rng = np.random.default_rng(0)
+    rows = []
+    for name in dp.problem_names():
+        prob = dp.get_problem(name)
+        for size in SIZES:
+            kw = prob.sample(rng, size)
+            spec = prob.encode(**kw)
+            table_ref = prob.oracle(**kw)
+            cells = int(np.asarray(table_ref).size)
+            dispatched_name = dp.dispatch(spec).name
+            for b in dp.backends.candidates(spec):
+                got = dp.solve_spec(spec, backend=b.name)
+                ms = _time(lambda b=b, spec=spec: dp.solve_spec(spec, backend=b.name))
+                ok = bool(np.allclose(got, table_ref, rtol=1e-4, atol=1e-4))
+                dispatched = dispatched_name == b.name
+                rows.append({"problem": name, "backend": b.name, "size": size,
+                             "cells": cells, "ms": round(ms, 4), "ok": ok,
+                             "dispatched": dispatched})
+                print(f"zoo,{name},{b.name},{size},{cells},{ms:.4f},{int(ok)},"
+                      f"{int(dispatched)}")
+
+    # batch amortization: loop-of-B vs one vmapped call
+    batch_rows = []
+    for name in ("edit_distance", "mcm"):
+        prob = dp.get_problem(name)
+        kw0 = prob.sample(rng, 12)
+        instances = [kw0] * BATCH
+        loop_ms = _time(lambda: [dp.solve(name, **k) for k in instances])
+        batch_ms = _time(lambda: dp.batch_solve(name, instances))
+        batch_rows.append({"problem": name, "batch": BATCH,
+                           "loop_ms": round(loop_ms, 4),
+                           "batch_ms": round(batch_ms, 4),
+                           "speedup": round(loop_ms / max(batch_ms, 1e-9), 2)})
+        print(f"zoo_batch,{name},{BATCH},{loop_ms:.4f},{batch_ms:.4f},"
+              f"{loop_ms / max(batch_ms, 1e-9):.2f}x")
+
+    report = {"rows": rows, "batch": batch_rows,
+              "problems": dp.problem_names(),
+              "backends": dp.backends.names()}
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {os.path.abspath(out_path)}")
+    bad = [r for r in rows if not r["ok"]]
+    if bad:
+        raise SystemExit(f"correctness failures in zoo sweep: {bad}")
+    return report
+
+
+if __name__ == "__main__":
+    run()

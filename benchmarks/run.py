@@ -6,12 +6,14 @@ from __future__ import annotations
 
 
 def main() -> None:
-    from benchmarks import mcm_bench, roofline, table1_sdp
+    from benchmarks import dp_zoo_bench, mcm_bench, roofline, table1_sdp
 
     print("# Table I — S-DP implementations (paper §III-B)")
     table1_sdp.run()
     print("# MCM — pipeline vs wavefront vs blocked (paper §IV)")
     mcm_bench.run()
+    print("# DP zoo — problems × backends × sizes (repro.dp)")
+    dp_zoo_bench.run()
     print("# Roofline — dry-run derived terms (EXPERIMENTS.md §Roofline)")
     roofline.run()
 

@@ -49,7 +49,11 @@ __all__ = [
     "lin_index",
     "diag_of",
     "build_pipeline_tables",
+    "build_tables",
+    "mcm_weight_fn",
+    "weight_table",
     "solve_wavefront",
+    "solve_wavefront_tab",
     "solve_pipeline",
     "solve_pipeline_np",
     "pipeline_num_steps",
@@ -127,11 +131,18 @@ class PipelineTables:
     feasible: bool      # every slot's operands finalized before its read step
 
 
-def build_pipeline_tables(dims, order: str = "safe") -> PipelineTables:
-    """order="paper": Fig.-8 slot j ↔ split i+j (has the hazard above).
+def build_tables(n: int, weight_fn, order: str = "safe") -> PipelineTables:
+    """Pipeline tables for ANY canonical triangular DP (DESIGN.md §3):
+
+        m[i, j] = ↓_{0≤e<d} ( m[i, i+e] + m[i+e+1, j] + weight_fn(i, i+e, j) )
+
+    with d = j - i and diagonal-0 cells preset to 0. MCM is
+    ``weight_fn(i, s, j) = p[i]·p[s+1]·p[j+1]``; optimal BST and polygon
+    triangulation reduce to the same shape with different ``weight_fn``
+    (see ``repro.dp.zoo``).
+
+    order="paper": Fig.-8 slot j ↔ split i+j (has the hazard above).
     order="safe": earliest-ready-first permutation (default, exact)."""
-    p = np.asarray(dims, dtype=np.float64)
-    n = len(p) - 1
     cells = num_cells(n)
     maxk = max(n - 1, 1)
     left = np.zeros((cells, maxk), dtype=np.int64)
@@ -157,7 +168,7 @@ def build_pipeline_tables(dims, order: str = "safe") -> PipelineTables:
                 L = lin_index(i, e, n)
                 R = lin_index(s + 1, d - e - 1, n)
                 ready = max(final[L], final[R]) + 1
-                cand.append((ready, L, R, p[i] * p[s + 1] * p[i + d + 1]))
+                cand.append((ready, L, R, weight_fn(i, s, i + d)))
             if order == "safe":
                 cand.sort(key=lambda x: x[0])
             elif order != "paper":
@@ -170,6 +181,37 @@ def build_pipeline_tables(dims, order: str = "safe") -> PipelineTables:
                           weight=weight, k=kk, feasible=feasible)
 
 
+def mcm_weight_fn(dims):
+    """The MCM instance of the canonical triangular weight: p_i·p_{s+1}·p_{j+1}."""
+    p = np.asarray(dims, dtype=np.float64)
+    return lambda i, s, j: p[i] * p[s + 1] * p[j + 1]
+
+
+def build_pipeline_tables(dims, order: str = "safe") -> PipelineTables:
+    """MCM wrapper around :func:`build_tables` (the seed API)."""
+    n = len(np.asarray(dims)) - 1
+    return build_tables(n, mcm_weight_fn(dims), order=order)
+
+
+def weight_table(n: int, weight_fn) -> np.ndarray:
+    """Dense (cells, n-1) split-major weight array: W[lin(i,d), e] =
+    weight_fn(i, i+e, i+d). The canonical triangular-spec payload consumed by
+    :func:`solve_wavefront_tab` (and vmapped over in ``repro.dp.batch_solve``).
+
+    This sits on the per-instance encode path, so ``weight_fn`` is called
+    once per diagonal with broadcast index arrays (O(n) Python iterations,
+    not O(n³)) — it must accept numpy integer arrays."""
+    cells = num_cells(n)
+    maxk = max(n - 1, 1)
+    w = np.zeros((cells, maxk), dtype=np.float64)
+    for d in range(1, n):
+        ii = np.arange(n - d)[:, None]          # (rows, 1)
+        ee = np.arange(d)[None, :]              # (1, d)
+        rows = lin_index(ii[:, 0], d, n)
+        w[rows[:, None], ee] = weight_fn(ii, ii + ee, ii + d)
+    return w
+
+
 def pipeline_num_steps(n: int) -> int:
     """Outer steps of Fig. 8: head sweeps cells n..cells-1 plus (n-2) drain."""
     return num_cells(n) + (n - 1) - 1 - n
@@ -180,11 +222,11 @@ def pipeline_num_steps(n: int) -> int:
 # The standard parallelization the paper contrasts against (and the
 # throughput-optimal form on TPU: each step is a dense masked (n × n) combine).
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("n",))
-def solve_wavefront(p: jnp.ndarray, n: int) -> jnp.ndarray:
-    """p: (n+1,) dims. Returns the linearized table ST."""
+def _wavefront_loop(n: int, dtype, weight_of) -> jnp.ndarray:
+    """Shared masked-diagonal body; ``weight_of(d, ii, ee)`` yields the split
+    weights for diagonal d (arithmetic from dims, or a table gather)."""
     cells = num_cells(n)
-    st = jnp.zeros((cells,), dtype=p.dtype)  # diagonal 0 preset to 0
+    st = jnp.zeros((cells,), dtype=dtype)    # diagonal 0 preset to 0
     ii = jnp.arange(n)[:, None]              # rows (padded)
     ee = jnp.arange(max(n - 1, 1))[None, :]  # split offsets (padded)
 
@@ -192,16 +234,43 @@ def solve_wavefront(p: jnp.ndarray, n: int) -> jnp.ndarray:
         valid = (ii < n - d) & (ee < d)
         li = lin_index(ii, ee, n)                            # cell (i, i+e)
         ri = lin_index(ii + ee + 1, d - ee - 1, n)           # cell (i+e+1, i+d)
-        w = p[ii] * p[jnp.clip(ii + ee + 1, 0, n)] * p[jnp.clip(ii + d + 1, 0, n)]
         cand = jnp.where(valid,
                          st[jnp.clip(li, 0, cells - 1)]
-                         + st[jnp.clip(ri, 0, cells - 1)] + w,
+                         + st[jnp.clip(ri, 0, cells - 1)] + weight_of(d, ii, ee),
                          INF)
         out = jnp.min(cand, axis=1)                          # (n,)
         widx = jnp.where(ii[:, 0] < n - d, lin_index(ii[:, 0], d, n), cells)
         return st.at[widx].set(out, mode="drop", unique_indices=True)
 
     return jax.lax.fori_loop(1, n, body, st)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def solve_wavefront(p: jnp.ndarray, n: int) -> jnp.ndarray:
+    """p: (n+1,) dims. Returns the linearized table ST."""
+    def weight_of(d, ii, ee):
+        return p[ii] * p[jnp.clip(ii + ee + 1, 0, n)] * p[jnp.clip(ii + d + 1, 0, n)]
+
+    return _wavefront_loop(n, p.dtype, weight_of)
+
+
+# ---------------------------------------------------------------------------
+# Generic triangular wavefront: same schedule as solve_wavefront but weights
+# come from a precomputed (cells, n-1) table, so ANY canonical triangular DP
+# (optimal BST, polygon triangulation, …) runs through the one jitted solver —
+# and a batch of same-n instances is a single vmap over the table axis.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n",))
+def solve_wavefront_tab(wtab: jnp.ndarray, n: int) -> jnp.ndarray:
+    """wtab: (cells, n-1) split-major weights (see :func:`weight_table`).
+    Returns the linearized table ST (diagonal-0 cells preset to 0)."""
+    cells = num_cells(n)
+
+    def weight_of(d, ii, ee):
+        ci = lin_index(ii, d, n)                             # cell (i, i+d)
+        return wtab[jnp.clip(ci, 0, cells - 1), ee]
+
+    return _wavefront_loop(n, wtab.dtype, weight_of)
 
 
 # ---------------------------------------------------------------------------
@@ -280,3 +349,40 @@ def solve_pipeline_np(dims, order: str = "safe", check_conflicts: bool = False):
             ci = c[j]
             st[ci] = v[j] if j == 0 else min(st[ci], v[j])
     return st, stats
+
+
+# ---------------------------------------------------------------------------
+# Backend registration (repro.dp): triangular routes.
+# ---------------------------------------------------------------------------
+from repro.dp import backends as _dp_backends  # noqa: E402
+
+
+def tables_from_weight_array(wtab: np.ndarray, n: int,
+                             order: str = "safe") -> PipelineTables:
+    """Pipeline tables for a dense (cells, n-1) split-major weight array."""
+    return build_tables(
+        n, lambda i, s, j: wtab[lin_index(i, j - i, n), s - i], order=order)
+
+
+def _pipeline_run(spec) -> np.ndarray:
+    t = tables_from_weight_array(np.asarray(spec.weights), spec.n)
+    st = solve_pipeline(jnp.asarray(t.left), jnp.asarray(t.right),
+                        jnp.asarray(t.weight), jnp.asarray(t.k), t.n)
+    return np.asarray(st)
+
+
+def _register_backends() -> None:
+    _dp_backends.register(_dp_backends.triangular_tab_backend(
+        "wavefront", solve_wavefront_tab,
+        cost=lambda s: float(s.n),
+        doc="dense masked per-diagonal combine (n-1 vectorized steps)"))
+    _dp_backends.register(_dp_backends.Backend(
+        name="mcm_pipeline", geometry="triangular",
+        run=_pipeline_run,
+        cost=lambda s: float(num_cells(s.n) + s.n),
+        supports=lambda s: True,
+        batch_run=None,  # host-side table build per instance — loop fallback
+        doc="paper Fig.-8 pipeline (order=safe); O(n²) outer steps"))
+
+
+_register_backends()

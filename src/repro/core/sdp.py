@@ -3,6 +3,18 @@
 ``ST[i] = ⊗_{1≤j≤k} ST[i - a_j]`` with offsets ``a_1 > a_2 > … > a_k > 0`` and
 preset initial values ``ST[0..a_1-1]``.
 
+**Weighted extension (DESIGN.md §3).** Every solver accepts an optional
+``weights`` array of shape ``(n, k)``: with ``(⊕, ⊙)`` the semiring whose
+``add`` matches the semigroup ``op`` (tropical for min/max, plus-times for
+add), the recurrence becomes
+
+    ``ST[i] = ⊕_{1≤j≤k} ( ST[i - a_j] ⊙ w[i, j] )``
+
+``weights=None`` is the paper's pure form (bit-identical to the seed
+solvers). Setting ``w[i, j]`` to the semiring zero (±inf / 0) masks lane
+``j`` at cell ``i``, which is how grid DPs (edit distance, LCS, Viterbi)
+express their ragged boundaries after linearization — see ``repro.dp.zoo``.
+
 Five solvers, cross-validated against the numpy oracle:
 
   * :func:`sdp_reference`        — numpy sequential oracle (paper Fig. 1).
@@ -56,21 +68,37 @@ def pipeline_num_steps(n: int, offsets: Sequence[int]) -> int:
     return n + k - a1 - 1
 
 
+def _mul_for(op: str):
+    """The semiring ``⊙`` paired with semigroup ``op`` (weighted extension)."""
+    return SEMIGROUP_TO_SEMIRING[op].mul
+
+
 # ---------------------------------------------------------------------------
 # Oracle (paper Fig. 1, numpy)
 # ---------------------------------------------------------------------------
-def sdp_reference(init: np.ndarray, offsets: Sequence[int], op: str, n: int) -> np.ndarray:
+def sdp_reference(init: np.ndarray, offsets: Sequence[int], op: str, n: int,
+                  weights: np.ndarray | None = None) -> np.ndarray:
     a = _check_offsets(offsets)
     sg = SEMIGROUPS[op]
     a1 = int(a[0])
     if len(init) != a1:
         raise ValueError(f"need a_1={a1} initial values, got {len(init)}")
+    if weights is not None:
+        weights = np.asarray(weights)
+        if weights.shape != (n, len(a)):
+            raise ValueError(f"weights must be (n, k)=({n}, {len(a)}), "
+                             f"got {weights.shape}")
+    np_mul = SEMIGROUP_TO_SEMIRING[op].np_mul
     st = np.empty(n, dtype=np.asarray(init).dtype)
     st[:a1] = init
     for i in range(a1, n):
-        v = st[i - a[0]]
-        for j in range(1, len(a)):
-            v = sg.np_op(v, st[i - a[j]])
+        if weights is None:
+            terms = [st[i - aj] for aj in a]
+        else:
+            terms = [np_mul(st[i - aj], weights[i, j]) for j, aj in enumerate(a)]
+        v = terms[0]
+        for t in terms[1:]:
+            v = sg.np_op(v, t)
         st[i] = v
     return st
 
@@ -79,17 +107,23 @@ def sdp_reference(init: np.ndarray, offsets: Sequence[int], op: str, n: int) -> 
 # JAX sequential (same loop structure as the oracle; benchmark parity)
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("offsets", "op", "n"))
-def solve_sequential(init: jnp.ndarray, offsets: tuple, op: str, n: int) -> jnp.ndarray:
+def solve_sequential(init: jnp.ndarray, offsets: tuple, op: str, n: int,
+                     weights: jnp.ndarray | None = None) -> jnp.ndarray:
     a = _check_offsets(offsets)
     sg = SEMIGROUPS[op]
+    mul = _mul_for(op)
     a1 = int(a[0])
     offs = jnp.asarray(a)
     st = jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
 
     def body(i, st):
-        v = st[i - offs[0]]
+        def term(j):
+            t = st[i - offs[j]]
+            return t if weights is None else mul(t, weights[i, j])
+
+        v = term(0)
         for j in range(1, len(a)):  # unrolled over k (static)
-            v = sg.op(v, st[i - offs[j]])
+            v = sg.op(v, term(j))
         return st.at[i].set(v)
 
     return jax.lax.fori_loop(a1, n, body, st)
@@ -100,15 +134,19 @@ def solve_sequential(init: jnp.ndarray, offsets: tuple, op: str, n: int) -> jnp.
 # tree-reduce — O(log k) depth per element, n sequential elements.
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("offsets", "op", "n"))
-def solve_tournament(init: jnp.ndarray, offsets: tuple, op: str, n: int) -> jnp.ndarray:
+def solve_tournament(init: jnp.ndarray, offsets: tuple, op: str, n: int,
+                     weights: jnp.ndarray | None = None) -> jnp.ndarray:
     a = _check_offsets(offsets)
     sg = SEMIGROUPS[op]
+    mul = _mul_for(op)
     a1 = int(a[0])
     offs = jnp.asarray(a)
     st = jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
 
     def body(i, st):
         vals = st[i - offs]  # (k,) gather — k "threads"
+        if weights is not None:
+            vals = mul(vals, weights[i])
         return st.at[i].set(sg.reduce(vals, axis=0))
 
     return jax.lax.fori_loop(a1, n, body, st)
@@ -124,9 +162,11 @@ def solve_tournament(init: jnp.ndarray, offsets: tuple, op: str, n: int) -> jnp.
 # unique, so the scatter is conflict-free (``unique_indices=True``).
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("offsets", "op", "n"))
-def solve_pipeline(init: jnp.ndarray, offsets: tuple, op: str, n: int) -> jnp.ndarray:
+def solve_pipeline(init: jnp.ndarray, offsets: tuple, op: str, n: int,
+                   weights: jnp.ndarray | None = None) -> jnp.ndarray:
     a = _check_offsets(offsets)
     sg = SEMIGROUPS[op]
+    mul = _mul_for(op)
     k, a1 = len(a), int(a[0])
     offs = jnp.asarray(a)
     js = jnp.arange(k)
@@ -135,9 +175,12 @@ def solve_pipeline(init: jnp.ndarray, offsets: tuple, op: str, n: int) -> jnp.nd
     def body(i, st):
         idx = i - js                                   # element served by stage j
         active = (idx >= a1) & (idx < n)
+        cidx = jnp.clip(idx, 0, n - 1)
         src = jnp.clip(idx - offs, 0, n - 1)
         vals = st[src]                                 # k distinct reads
-        cur = st[jnp.clip(idx, 0, n - 1)]
+        if weights is not None:
+            vals = mul(vals, weights[cidx, js])
+        cur = st[cidx]
         new = jnp.where(js == 0, vals, sg.op(cur, vals))
         widx = jnp.where(active, idx, n)               # OOB -> dropped
         return st.at[widx].set(new, mode="drop", unique_indices=True)
@@ -151,9 +194,11 @@ def solve_pipeline(init: jnp.ndarray, offsets: tuple, op: str, n: int) -> jnp.nd
 # elements — one (k × B) gather + tree reduce per step.
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("offsets", "op", "n", "block"))
-def solve_blocked(init: jnp.ndarray, offsets: tuple, op: str, n: int, block: int = 512) -> jnp.ndarray:
+def solve_blocked(init: jnp.ndarray, offsets: tuple, op: str, n: int, block: int = 512,
+                  weights: jnp.ndarray | None = None) -> jnp.ndarray:
     a = _check_offsets(offsets)
     sg = SEMIGROUPS[op]
+    mul = _mul_for(op)
     a1, ak = int(a[0]), int(a[-1])
     B = max(1, min(ak, block))
     offs = jnp.asarray(a)
@@ -166,6 +211,8 @@ def solve_blocked(init: jnp.ndarray, offsets: tuple, op: str, n: int, block: int
         ok = pos < n
         src = jnp.clip(pos[None, :] - offs[:, None], 0, n - 1)  # (k, B)
         vals = st[src]
+        if weights is not None:
+            vals = mul(vals, weights[jnp.clip(pos, 0, n - 1)].T)  # (k, B)
         out = sg.reduce(vals, axis=0)                  # (B,)
         widx = jnp.where(ok, pos, n)
         return st.at[widx].set(out, mode="drop", unique_indices=True)
@@ -185,7 +232,8 @@ def solve_blocked(init: jnp.ndarray, offsets: tuple, op: str, n: int, block: int
 # step-varying coefficients is free.
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("offsets", "op", "n"))
-def solve_companion_scan(init: jnp.ndarray, offsets: tuple, op: str, n: int) -> jnp.ndarray:
+def solve_companion_scan(init: jnp.ndarray, offsets: tuple, op: str, n: int,
+                         weights: jnp.ndarray | None = None) -> jnp.ndarray:
     a = _check_offsets(offsets)
     ring = SEMIGROUP_TO_SEMIRING[op]
     a1 = int(a[0])
@@ -201,10 +249,52 @@ def solve_companion_scan(init: jnp.ndarray, offsets: tuple, op: str, n: int) -> 
     steps = n - a1
     if steps <= 0:
         return init[:n].astype(init.dtype)
-    mats = jnp.broadcast_to(M, (steps, a1, a1))
+    if weights is None:
+        mats = jnp.broadcast_to(M, (steps, a1, a1))
+    else:
+        # step-varying coefficients: step t computes ST[a1+t], so its
+        # companion matrix carries row-0 entries w[a1+t, j] at column a_j-1.
+        shift = np.full((a1, a1), ring.zero, dtype=np.float64)
+        for r in range(1, a1):
+            shift[r, r - 1] = ring.one
+        row0 = jnp.full((steps, a1), ring.zero, dtype=dtype)
+        row0 = row0.at[:, jnp.asarray(a - 1)].set(weights[a1:n].astype(dtype))
+        mats = jnp.broadcast_to(jnp.asarray(shift, dtype=dtype), (steps, a1, a1))
+        mats = mats.at[:, 0, :].set(row0)
     # prefix[t] = M^(t+1) under the semiring (log-depth)
     prefix = jax.lax.associative_scan(lambda x, y: ring.matmul(y, x), mats, axis=0)
     # v0 = (ST[a1-1], …, ST[0]); ST[a1 + t] = (prefix[t] ⊙ v0)[0]
     v0 = init[::-1].astype(dtype)
     tail = jax.vmap(lambda P: ring.matvec(P, v0)[0])(prefix)
     return jnp.concatenate([init.astype(init.dtype), tail.astype(init.dtype)])
+
+
+# ---------------------------------------------------------------------------
+# Backend registration (repro.dp): each solver is a dispatchable route with a
+# step-count cost model; the dispatcher picks the cheapest per problem shape.
+# ---------------------------------------------------------------------------
+from repro.dp import backends as _dp_backends  # noqa: E402
+
+
+def _register_backends() -> None:
+    table = [
+        ("sequential", solve_sequential, None,
+         "Fig.-1 double loop (oracle parity)"),
+        ("tournament", solve_tournament, None,
+         "per-element gather + tree reduce (§II-B)"),
+        ("pipeline", solve_pipeline, None,
+         "the paper's Fig.-2 skewed pipeline, vectorized over stages"),
+        ("blocked", solve_blocked, None,
+         "TPU-adapted blocked pipeline: min(a_k, B) outputs per step"),
+        ("companion_scan", solve_companion_scan,
+         lambda s: int(s.offsets[0]) <= 16,
+         "log-depth associative_scan over companion matrices (small a_1)"),
+    ]
+    for name, fn, supports, doc in table:
+        _dp_backends.register(_dp_backends.linear_backend(
+            name, fn,
+            cost=lambda s, _n=name: _dp_backends.linear_costs(s)[_n],
+            supports=supports, doc=doc))
+
+
+_register_backends()

@@ -48,6 +48,8 @@ class Semiring:
     mul: Callable[[Array, Array], Array]
     zero: float  # identity of add (absorbing for mul in tropical rings)
     one: float  # identity of mul
+    # numpy-side mul for host oracles (keeps them independent of jax)
+    np_mul: Callable[[np.ndarray, np.ndarray], np.ndarray] = np.add
 
     def matmul(self, a: Array, b: Array) -> Array:
         """Semiring matrix product: C[i,j] = add_k mul(A[i,k], B[k,j]).
@@ -75,9 +77,12 @@ SEMIGROUPS = {
     "add": Semigroup("add", jnp.add, np.add, identity=0.0),
 }
 
-MIN_PLUS = Semiring("min_plus", add=jnp.minimum, mul=jnp.add, zero=float("inf"), one=0.0)
-MAX_PLUS = Semiring("max_plus", add=jnp.maximum, mul=jnp.add, zero=float("-inf"), one=0.0)
-PLUS_TIMES = Semiring("plus_times", add=jnp.add, mul=jnp.multiply, zero=0.0, one=1.0)
+MIN_PLUS = Semiring("min_plus", add=jnp.minimum, mul=jnp.add,
+                    zero=float("inf"), one=0.0, np_mul=np.add)
+MAX_PLUS = Semiring("max_plus", add=jnp.maximum, mul=jnp.add,
+                    zero=float("-inf"), one=0.0, np_mul=np.add)
+PLUS_TIMES = Semiring("plus_times", add=jnp.add, mul=jnp.multiply,
+                      zero=0.0, one=1.0, np_mul=np.multiply)
 
 SEMIRINGS = {"min_plus": MIN_PLUS, "max_plus": MAX_PLUS, "plus_times": PLUS_TIMES}
 

@@ -1,0 +1,187 @@
+"""Solver-backend registry + the vmapped batch machinery.
+
+Solvers do not get imported ad hoc any more: ``repro.core.sdp``,
+``repro.core.mcm``, ``repro.core.blocked_mcm`` and ``repro.kernels`` register
+themselves here at import time (bottom-of-module registration), and
+``ensure_registered()`` pulls them all in lazily so this module itself stays
+import-cycle-free. The dispatcher (``repro.dp.routing``) picks the
+cheapest supporting backend per spec via each backend's ``cost`` model.
+
+Batching: backends built through :func:`linear_backend` /
+:func:`triangular_tab_backend` get a ``batch_run`` that stacks B same-shape
+instances and executes ONE jitted ``vmap`` call. The jitted callables are
+cached per (backend, shape_key); a Python-side :data:`TRACE_LOG` entry is
+appended at *trace* time only, which is how tests verify the
+one-device-call property without timing heuristics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.dp.problem import LinearSpec, Spec, TriangularSpec
+
+#: (backend_name, shape_key) appended every time a batched callable is traced.
+TRACE_LOG: list = []
+
+_BACKENDS: dict = {}
+_BATCH_CACHE: dict = {}
+_LOADED = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A solver route. ``run`` returns the full linearized table as numpy;
+    ``batch_run`` (optional) solves a homogeneous list of specs in one
+    device call."""
+
+    name: str
+    geometry: str
+    run: Callable[[Spec], np.ndarray]
+    cost: Callable[[Spec], float]
+    supports: Callable[[Spec], bool]
+    batch_run: Optional[Callable] = None
+    doc: str = ""
+
+
+def register(backend: Backend) -> Backend:
+    if backend.name in _BACKENDS:
+        raise ValueError(f"duplicate backend name {backend.name!r}")
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def get(name: str) -> Backend:
+    ensure_registered()
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; registered: {names()}") from None
+
+
+def names(geometry: Optional[str] = None) -> list:
+    ensure_registered()
+    return sorted(n for n, b in _BACKENDS.items()
+                  if geometry is None or b.geometry == geometry)
+
+
+def candidates(spec: Spec) -> list:
+    """Backends able to solve ``spec``, cheapest first (name tiebreak)."""
+    ensure_registered()
+    cands = [b for b in _BACKENDS.values()
+             if b.geometry == spec.geometry and b.supports(spec)]
+    return sorted(cands, key=lambda b: (b.cost(spec), b.name))
+
+
+def ensure_registered() -> None:
+    """Idempotently import every module that registers backends."""
+    global _LOADED
+    if _LOADED:
+        return
+    import repro.core.sdp  # noqa: F401  (registers linear solvers)
+    import repro.core.mcm  # noqa: F401  (registers triangular solvers)
+    import repro.core.blocked_mcm  # noqa: F401  (tropical-GEMM tiling)
+    import repro.kernels  # noqa: F401  (Pallas-backed blocked route)
+    # only after every registering import succeeded — a failure above must
+    # surface again on the next call, not leave a silently partial registry
+    _LOADED = True
+
+
+# ---------------------------------------------------------------------------
+# Builders used by the registering modules
+# ---------------------------------------------------------------------------
+def linear_backend(name: str, jax_fn: Callable, cost: Callable,
+                   supports: Optional[Callable] = None,
+                   doc: str = "") -> Backend:
+    """Wrap a JAX S-DP solver ``fn(init, offsets, op, n, weights=None)``
+    into a Backend with a single-call vmapped batch path."""
+    import jax
+    import jax.numpy as jnp
+
+    def run(spec: LinearSpec) -> np.ndarray:
+        w = None if spec.weights is None else jnp.asarray(spec.weights)
+        out = jax_fn(jnp.asarray(spec.init), spec.offsets, spec.op, spec.n,
+                     weights=w)
+        return np.asarray(out)
+
+    def batch_run(specs) -> list:
+        spec0 = specs[0]
+        key = (name, spec0.shape_key())
+        if key not in _BATCH_CACHE:
+            offsets, op, n = spec0.offsets, spec0.op, spec0.n
+            if spec0.weights is None:
+                def call(inits):
+                    TRACE_LOG.append(key)
+                    return jax.vmap(
+                        lambda i: jax_fn(i, offsets, op, n))(inits)
+            else:
+                def call(inits, weights):
+                    TRACE_LOG.append(key)
+                    return jax.vmap(
+                        lambda i, w: jax_fn(i, offsets, op, n, weights=w)
+                    )(inits, weights)
+            _BATCH_CACHE[key] = jax.jit(call)
+        fn = _BATCH_CACHE[key]
+        inits = jnp.stack([jnp.asarray(s.init) for s in specs])
+        if spec0.weights is None:
+            tables = fn(inits)
+        else:
+            tables = fn(inits, jnp.stack([jnp.asarray(s.weights) for s in specs]))
+        return list(np.asarray(tables))
+
+    return Backend(name=name, geometry="linear", run=run, cost=cost,
+                   supports=supports or (lambda s: True),
+                   batch_run=batch_run, doc=doc)
+
+
+def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
+                           doc: str = "") -> Backend:
+    """Wrap a weight-table triangular solver ``fn(wtab, n)`` (e.g.
+    ``core.mcm.solve_wavefront_tab``) with a vmapped batch path."""
+    import jax
+    import jax.numpy as jnp
+
+    def run(spec: TriangularSpec) -> np.ndarray:
+        return np.asarray(jax_fn(jnp.asarray(spec.weights), spec.n))
+
+    def batch_run(specs) -> list:
+        spec0 = specs[0]
+        key = (name, spec0.shape_key())
+        if key not in _BATCH_CACHE:
+            n = spec0.n
+
+            def call(wtabs):
+                TRACE_LOG.append(key)
+                return jax.vmap(lambda w: jax_fn(w, n))(wtabs)
+
+            _BATCH_CACHE[key] = jax.jit(call)
+        tables = _BATCH_CACHE[key](
+            jnp.stack([jnp.asarray(s.weights) for s in specs]))
+        return list(np.asarray(tables))
+
+    return Backend(name=name, geometry="triangular", run=run, cost=cost,
+                   supports=lambda s: True, batch_run=batch_run, doc=doc)
+
+
+# shared cost vocabulary -----------------------------------------------------
+def _log2(x: float) -> float:
+    return math.log2(max(x, 2.0))
+
+
+def linear_costs(spec: LinearSpec) -> dict:
+    """Step-count cost model for the linear solver family (§III of the
+    paper + DESIGN.md §3). Units are 'vectorized device steps'."""
+    n, k = spec.n, len(spec.offsets)
+    a1, ak = int(spec.offsets[0]), int(spec.offsets[-1])
+    blocked_steps = math.ceil((n - a1) / max(1, min(ak, 512)))
+    return {
+        "sequential": float(n * k),
+        "tournament": float(n * (1.0 + _log2(k))),
+        "pipeline": float(n + k - a1 - 1),
+        "blocked": blocked_steps * (1.0 + _log2(k)),
+        # log-depth scan, O(n·a1³) work spread over the vector units
+        "companion_scan": _log2(n) * (a1 ** 3) / 64.0 + a1,
+    }

@@ -1,0 +1,106 @@
+"""DPEngine: a request/response front end over the zoo + dispatcher.
+
+Mirrors the admission pattern of ``serving/engine.py``: requests are
+*admitted* into shape buckets (the analogue of KV-cache slots — instances
+that can share one device program), and every engine step drains the
+fullest bucket with ONE batched vmapped solve. Heterogeneous traffic
+(many problems, many sizes) thus turns into a small number of large
+device calls instead of a long stream of singleton launches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Optional
+
+from repro.dp import backends as _backends
+from repro.dp import registry as _registry
+from repro.dp.routing import batch_solve_specs, select_batch_backend
+from repro.dp.problem import Spec
+
+
+@dataclasses.dataclass
+class DPRequest:
+    rid: int
+    problem: str
+    payload: dict
+    spec: Spec = None
+
+
+@dataclasses.dataclass
+class DPResponse:
+    rid: int
+    problem: str
+    answer: Any
+    backend: str
+    batch_size: int
+
+
+class DPEngine:
+    """Queue heterogeneous solve requests, bucket by (problem, shape_key),
+    dispatch batched solves bucket-at-a-time."""
+
+    def __init__(self, max_batch: int = 64):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self._next_rid = 0
+        self._buckets: "OrderedDict[tuple, list]" = OrderedDict()
+        self.stats = {"submitted": 0, "completed": 0, "device_batches": 0,
+                      "batched_requests": 0}
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, problem: str, **payload) -> int:
+        """Encode eagerly (validates the instance) and enqueue. Returns rid."""
+        prob = _registry.get(problem)
+        spec = prob.encode(**payload)
+        rid = self._next_rid
+        self._next_rid += 1
+        key = (prob.name, spec.shape_key())
+        self._buckets.setdefault(key, []).append(
+            DPRequest(rid=rid, problem=prob.name, payload=payload, spec=spec))
+        self.stats["submitted"] += 1
+        return rid
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._buckets.values())
+
+    def bucket_sizes(self) -> dict:
+        return {k: len(v) for k, v in self._buckets.items()}
+
+    # -- one batched device call ------------------------------------------
+    def step(self, backend: Optional[str] = None) -> list:
+        """Drain up to ``max_batch`` requests from the fullest bucket with a
+        single batched solve. Returns the finished DPResponses."""
+        if not self._buckets:
+            return []
+        key = max(self._buckets, key=lambda k: len(self._buckets[k]))
+        queue = self._buckets[key]
+        batch, rest = queue[: self.max_batch], queue[self.max_batch:]
+
+        prob = _registry.get(key[0])
+        specs = [r.spec for r in batch]
+        chosen = (_backends.get(backend) if backend
+                  else select_batch_backend(specs[0]))
+        # solve BEFORE dequeuing: a failed batch (bad backend override,
+        # transient device error) must not lose requests
+        tables = batch_solve_specs(specs, backend=chosen.name)
+        if rest:
+            self._buckets[key] = rest
+        else:
+            del self._buckets[key]
+        self.stats["device_batches"] += 1
+        self.stats["completed"] += len(batch)
+        self.stats["batched_requests"] += len(batch) if len(batch) > 1 else 0
+        return [DPResponse(rid=r.rid, problem=r.problem,
+                           answer=prob.extract(t, r.spec),
+                           backend=chosen.name, batch_size=len(batch))
+                for r, t in zip(batch, tables)]
+
+    def run(self, backend: Optional[str] = None) -> dict:
+        """Drain every bucket; returns {rid: DPResponse}."""
+        out = {}
+        while self.pending():
+            for resp in self.step(backend=backend):
+                out[resp.rid] = resp
+        return out

@@ -1,0 +1,133 @@
+"""Declarative DP problem specs — the contract between the problem zoo and
+the solver backends (DESIGN.md §3).
+
+A *spec* is the canonical, fully-materialized form of one problem instance.
+Two geometries cover every scenario in the zoo:
+
+``LinearSpec`` — the paper's (weighted) S-DP recurrence on a 1-D table:
+
+    ST[i] = ⊕_{1≤j≤k} ( ST[i - a_j] ⊙ w[i, j] ),   ST[0..a_1-1] preset,
+
+  with ``(⊕, ⊙)`` the semiring whose ``add`` is the semigroup ``op``
+  (min→min-plus, max→max-plus, add→plus-times) and ``w ≡ one`` when
+  ``weights`` is None. Grid DPs (edit distance, LCS, Viterbi trellises)
+  linearize into this form with semiring-zero weights masking the ragged
+  row boundaries.
+
+``TriangularSpec`` — the canonical split recurrence on the upper triangle,
+  diagonal-major linearized exactly like the paper's MCM table:
+
+    m[i, j] = min_{0≤e<d} ( m[i, i+e] + m[i+e+1, j] + W[lin(i,d), e] ),
+
+  diagonal-0 cells preset to 0. MCM, optimal BST, and polygon triangulation
+  are all instances; MCM-shaped specs additionally carry ``dims`` so
+  GEMM-structured backends (tropical-tile ``blocked_mcm``) stay eligible.
+
+A ``DPProblem`` bundles the instance encoder with a *numpy oracle* (an
+independent reference implementation), an answer extractor, and a random
+instance sampler — everything tests, the dispatcher, and the benchmark
+sweep need to treat problems uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Union
+
+import numpy as np
+
+
+# --- canonical triangular layout (the paper's diagonal-major linearization) --
+def num_cells(n: int) -> int:
+    return n * (n + 1) // 2
+
+
+def lin_index(i, d, n):
+    """Diagonal-major linear index of cell (i, i+d) in an n-wide table."""
+    return d * n - (d * (d - 1)) // 2 + i
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    """Weighted S-DP instance: table length ``n``, strictly-decreasing
+    ``offsets``, semigroup ``op``, ``init`` of length a_1, optional
+    ``(n, k)`` semiring ``weights``."""
+
+    offsets: tuple
+    op: str
+    n: int
+    init: np.ndarray
+    weights: Optional[np.ndarray] = None
+
+    @property
+    def geometry(self) -> str:
+        return "linear"
+
+    def shape_key(self) -> tuple:
+        """Instances with equal keys can be vmapped into one device call."""
+        return ("linear", self.op, tuple(int(a) for a in self.offsets),
+                int(self.n), self.weights is not None)
+
+    def validate(self) -> None:
+        a = np.asarray(self.offsets)
+        if not (a.ndim == 1 and a.size and np.all(np.diff(a) < 0) and a[-1] > 0):
+            raise ValueError(f"offsets must be strictly decreasing > 0: {self.offsets}")
+        if len(self.init) != int(a[0]):
+            raise ValueError(f"init must have a_1={int(a[0])} entries, got {len(self.init)}")
+        if self.n <= int(a[0]):
+            raise ValueError(f"n={self.n} must exceed a_1={int(a[0])}")
+        if self.weights is not None and self.weights.shape != (self.n, a.size):
+            raise ValueError(f"weights must be (n, k)=({self.n}, {a.size}), "
+                             f"got {self.weights.shape}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TriangularSpec:
+    """Canonical triangular instance: width ``n``; ``weights`` is the dense
+    (num_cells(n), n-1) split-major table (``core.mcm.weight_table``).
+    ``dims`` is set for MCM-shaped weights (w = p_i·p_{s+1}·p_{j+1})."""
+
+    n: int
+    weights: np.ndarray
+    dims: Optional[np.ndarray] = None
+
+    @property
+    def geometry(self) -> str:
+        return "triangular"
+
+    def shape_key(self) -> tuple:
+        return ("triangular", int(self.n))
+
+    def validate(self) -> None:
+        want = (num_cells(self.n), max(self.n - 1, 1))
+        if self.weights.shape != want:
+            raise ValueError(f"weights must be {want}, got {self.weights.shape}")
+        if self.dims is not None and len(self.dims) != self.n + 1:
+            raise ValueError(f"dims must have n+1={self.n + 1} entries")
+
+
+Spec = Union[LinearSpec, TriangularSpec]
+
+
+@dataclasses.dataclass(frozen=True)
+class DPProblem:
+    """One zoo entry.
+
+    encode(**instance) -> Spec        canonical form of an instance
+    oracle(**instance) -> np.ndarray  independent numpy reference producing
+                                      the full linearized table
+    extract(table, spec) -> Any       the problem-level answer from a table
+    sample(rng, size) -> dict         random instance kwargs (tests/benches)
+    """
+
+    name: str
+    geometry: str
+    encode: Callable[..., Spec]
+    oracle: Callable[..., np.ndarray]
+    extract: Callable[[np.ndarray, Spec], Any]
+    sample: Callable[[np.random.Generator, int], dict]
+    doc: str = ""
+
+    def solve_reference(self, **instance) -> Any:
+        """Oracle answer for an instance (tests and the engine's self-check)."""
+        spec = self.encode(**instance)
+        return self.extract(self.oracle(**instance), spec)

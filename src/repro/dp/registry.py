@@ -1,0 +1,33 @@
+"""Problem registry: name -> DPProblem. Populated by ``repro.dp.zoo`` at
+import time; later PRs drop new scenarios in with ``register`` and get
+dispatch, batching, engine serving, oracle tests, and the benchmark sweep
+for free."""
+from __future__ import annotations
+
+from repro.dp.problem import DPProblem
+
+_PROBLEMS: dict = {}
+
+
+def register(problem: DPProblem) -> DPProblem:
+    if problem.name in _PROBLEMS:
+        raise ValueError(f"duplicate problem name {problem.name!r}")
+    if problem.geometry not in ("linear", "triangular"):
+        raise ValueError(f"unknown geometry {problem.geometry!r}")
+    _PROBLEMS[problem.name] = problem
+    return problem
+
+
+def get(name: str) -> DPProblem:
+    try:
+        return _PROBLEMS[name]
+    except KeyError:
+        raise KeyError(f"unknown DP problem {name!r}; registered: {names()}") from None
+
+
+def names() -> list:
+    return sorted(_PROBLEMS)
+
+
+def problems() -> list:
+    return [_PROBLEMS[n] for n in names()]

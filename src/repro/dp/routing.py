@@ -1,0 +1,97 @@
+"""Shape-aware routing of specs to solver backends, plus the single-call
+batched solve path.
+
+``dispatch(spec)`` ranks the registered backends that support the spec by
+their step-count cost model (``backends.linear_costs`` vocabulary) and
+returns the cheapest; ``solve`` / ``solve_spec`` execute the choice;
+``batch_solve`` stacks B same-shape instances and issues ONE jitted
+vmapped device call (falling back to a loop only when the chosen backend
+has no batch path — e.g. the host-side table-building MCM pipeline).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.dp import backends as _backends
+from repro.dp import registry as _registry
+from repro.dp.problem import DPProblem, Spec
+
+
+def _resolve(problem: Union[str, DPProblem]) -> DPProblem:
+    return _registry.get(problem) if isinstance(problem, str) else problem
+
+
+def dispatch(spec_or_problem, **instance) -> _backends.Backend:
+    """Cheapest supporting backend for a spec (or a problem + instance)."""
+    if isinstance(spec_or_problem, (str, DPProblem)) or instance:
+        spec = _resolve(spec_or_problem).encode(**instance)
+    else:
+        spec = spec_or_problem
+    cands = _backends.candidates(spec)
+    if not cands:
+        raise RuntimeError(f"no backend supports spec {spec.shape_key()}")
+    return cands[0]
+
+
+def solve_spec(spec: Spec, backend: Optional[str] = None) -> np.ndarray:
+    """Solve one canonical spec; returns the full linearized table."""
+    b = _backends.get(backend) if backend else dispatch(spec)
+    if not (b.geometry == spec.geometry and b.supports(spec)):
+        raise ValueError(f"backend {b.name!r} does not support this spec")
+    return b.run(spec)
+
+
+def solve(problem: Union[str, DPProblem], backend: Optional[str] = None,
+          **instance):
+    """Encode an instance, route it, and return the problem-level answer."""
+    prob = _resolve(problem)
+    spec = prob.encode(**instance)
+    return prob.extract(solve_spec(spec, backend=backend), spec)
+
+
+def batch_solve(problem: Union[str, DPProblem],
+                instances: Sequence[dict],
+                backend: Optional[str] = None) -> list:
+    """Solve B instances of one problem. All instances must share a
+    shape_key (the engine's bucketing guarantees this); the whole batch is
+    one vmapped device call on the selected backend."""
+    prob = _resolve(problem)
+    specs = [prob.encode(**kw) for kw in instances]
+    if not specs:
+        return []
+    keys = {s.shape_key() for s in specs}
+    if len(keys) > 1:
+        raise ValueError(f"heterogeneous batch: {sorted(keys)}; "
+                         "bucket by shape_key first (see DPEngine)")
+    tables = batch_solve_specs(specs, backend=backend)
+    return [prob.extract(t, s) for t, s in zip(tables, specs)]
+
+
+def select_batch_backend(spec: Spec) -> _backends.Backend:
+    """Cheapest supporting backend, preferring ones that can batch the
+    whole group in one device call."""
+    cands = _backends.candidates(spec)
+    if not cands:
+        raise RuntimeError(f"no backend supports spec {spec.shape_key()}")
+    batchable = [c for c in cands if c.batch_run is not None]
+    return batchable[0] if batchable else cands[0]
+
+
+def batch_solve_specs(specs: Sequence[Spec],
+                      backend: Optional[str] = None) -> list:
+    """Batched solve over homogeneous specs; returns linearized tables."""
+    specs = list(specs)
+    if not specs:
+        return []
+    spec0 = specs[0]
+    if backend:
+        b = _backends.get(backend)
+        if not (b.geometry == spec0.geometry and b.supports(spec0)):
+            raise ValueError(f"backend {b.name!r} does not support this spec")
+    else:
+        b = select_batch_backend(spec0)
+    if b.batch_run is not None:
+        return b.batch_run(list(specs))
+    return [b.run(s) for s in specs]

@@ -7,3 +7,28 @@ pure-jnp oracle in ``ref.py`` and a dispatching wrapper in ``ops.py``.
   * ``flash_attention`` — causal online-softmax attention (prefill cells)
 """
 from repro.kernels import ops, ref  # noqa: F401
+
+# ---------------------------------------------------------------------------
+# Backend registration (repro.dp): the Pallas-backed blocked S-DP route.
+# Preferred over the plain jnp blocked solver on TPU (VMEM-resident table,
+# one HBM load+store); slightly penalized elsewhere, where ops.sdp_blocked
+# lowers the same jnp path anyway and the extra indirection buys nothing.
+# ---------------------------------------------------------------------------
+from repro.dp import backends as _dp_backends  # noqa: E402
+
+
+def _kernel_blocked_cost(spec) -> float:
+    import jax
+
+    base = _dp_backends.linear_costs(spec)["blocked"]
+    # The Pallas VMEM kernel only exists for the unweighted form; weighted
+    # specs fall through to the same jnp solver as the plain blocked route,
+    # so the TPU discount would be fictitious there.
+    on_kernel_path = jax.default_backend() == "tpu" and spec.weights is None
+    return base * (0.5 if on_kernel_path else 1.25)
+
+
+_dp_backends.register(_dp_backends.linear_backend(
+    "kernel_blocked", ops.sdp_blocked, cost=_kernel_blocked_cost,
+    doc="ops.sdp_blocked: Pallas VMEM-resident pipeline on TPU, "
+        "jnp blocked solver elsewhere"))

@@ -39,15 +39,21 @@ def tropical_matmul(a, b, av=None, gv=None, bv=None, **blocks):
     return ref.tropical_matmul_ref(a, b, av, gv, bv)
 
 
-def sdp_blocked(init, offsets: tuple, op: str, n: int, block: int = 512):
+def sdp_blocked(init, offsets: tuple, op: str, n: int, block: int = 512,
+                weights=None):
     from repro.core.sdp import solve_blocked
 
     mode = kernel_mode()
-    if mode == "pallas":
-        return sdp_pipeline_pallas(init, offsets, op, n, block=block)
-    if mode == "interpret":
-        return sdp_pipeline_pallas(init, offsets, op, n, block=block, interpret=True)
-    return solve_blocked(init, offsets, op, n, block=block)
+    # The Pallas kernel implements the pure (unweighted) S-DP form only; the
+    # weighted extension lowers the jnp blocked solver on every backend
+    # (DESIGN.md §4).
+    if weights is None:
+        if mode == "pallas":
+            return sdp_pipeline_pallas(init, offsets, op, n, block=block)
+        if mode == "interpret":
+            return sdp_pipeline_pallas(init, offsets, op, n, block=block,
+                                       interpret=True)
+    return solve_blocked(init, offsets, op, n, block=block, weights=weights)
 
 
 def linear_scan(x, decay, h0, chunk: int = 128):

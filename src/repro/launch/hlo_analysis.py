@@ -82,6 +82,11 @@ def _logical_lines(text: str):
 
 
 def parse_computations(text: str) -> dict:
+    # TPU HLO decorates layouts with tiling / memory-space suffixes —
+    # f32[16,64]{1,0:T(8,128)} or {1,0:S(1)} — which would break both the
+    # op-line regex and shape parsing. The suffix carries no size info;
+    # normalize it away up front.
+    text = re.sub(r"\{([\d,]*):[^}]*\}", r"{\1}", text)
     comps: dict = {}
     cur = None
     for line in _logical_lines(text):
@@ -176,11 +181,19 @@ def _dot_flops(op: Op, symbols: dict) -> float:
     for _, dims in _shape_elems(op.shape):
         for d in dims:
             out *= d
-    lhs_m = re.match(r"\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)", op.rest)
+    # lhs operand: typed form "f32[16,64]{1,0} %name" (compiled HLO) or bare
+    # "%name" — prefer the inline type, fall back to the symbol table.
+    lhs_m = re.match(r"\s*(?:(\w+\[[\d,]*\])(?:\{[^}]*\})?\s+)?%?([\w.\-]+)",
+                     op.rest)
     contract = 1
     cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
-    if lhs_m and cd and lhs_m.group(1) in symbols:
-        lhs_shape = symbols[lhs_m.group(1)]
+    lhs_shape = None
+    if lhs_m:
+        if lhs_m.group(1):
+            lhs_shape = lhs_m.group(1)
+        elif lhs_m.group(2) in symbols:
+            lhs_shape = symbols[lhs_m.group(2)]
+    if lhs_shape and cd:
         shapes = list(_shape_elems(lhs_shape))
         if shapes:
             dims = shapes[0][1]

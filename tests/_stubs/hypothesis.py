@@ -1,0 +1,128 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` API surface this
+test suite uses. Loaded by ``tests/conftest.py`` ONLY when the real
+``hypothesis`` package is not installed (e.g. hermetic containers where no
+new packages may be added). Install the real thing (``pip install
+hypothesis``) to get shrinking, edge-case heuristics, and the full API.
+
+Covered: ``given`` (keyword strategies only), ``settings(max_examples,
+deadline)``, and ``strategies.{integers, floats, booleans, sampled_from,
+lists, data}``. Examples are drawn from a per-test deterministic PRNG so
+failures reproduce run-to-run.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class DataStrategy(Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: DataObject(rng))
+
+
+class DataObject:
+    """Interactive draws: the ``data=st.data()`` protocol."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label: str | None = None):
+        return strategy.example(self._rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> Strategy:
+        return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements) -> Strategy:
+        elements = list(elements)
+        return Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0, max_size: int = 10,
+              unique: bool = False) -> Strategy:
+        def draw(rng: random.Random):
+            size = rng.randint(min_size, max_size)
+            out: list = []
+            attempts = 0
+            while len(out) < size:
+                v = elements.example(rng)
+                if unique and v in out:
+                    attempts += 1
+                    if attempts > 1000:
+                        break  # domain exhausted — return what we have
+                    continue
+                out.append(v)
+            return out
+
+        return Strategy(draw)
+
+    @staticmethod
+    def data() -> DataStrategy:
+        return DataStrategy()
+
+
+strategies = _Strategies()
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class settings:
+    """Decorator: records ``max_examples`` for the ``given`` wrapper below."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, f):
+        f._stub_max_examples = self.max_examples
+        return f
+
+
+def given(**strategy_kwargs):
+    """Keyword-strategy ``given``. The wrapper takes no parameters so pytest
+    does not mistake the drawn arguments for fixtures."""
+
+    def decorate(f):
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            base = zlib.crc32(f.__qualname__.encode())
+            for ex in range(n):
+                rng = random.Random(base ^ (ex * 0x9E3779B1))
+                drawn = {k: s.example(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    f(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"Falsifying example (stub hypothesis, example "
+                        f"{ex}/{n}): {drawn!r}"
+                    ) from e
+
+        wrapper.__name__ = f.__name__
+        wrapper.__qualname__ = f.__qualname__
+        wrapper.__module__ = f.__module__
+        wrapper.__doc__ = f.__doc__
+        if hasattr(f, "_stub_max_examples"):
+            wrapper._stub_max_examples = f._stub_max_examples
+        wrapper.hypothesis_stub = True
+        return wrapper
+
+    return decorate

@@ -1,0 +1,15 @@
+"""Test bootstrap: make ``repro`` importable without PYTHONPATH=src, and fall
+back to the vendored hypothesis stub when the real package is absent."""
+import importlib.util
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+if importlib.util.find_spec("hypothesis") is None:
+    _STUBS = os.path.join(_ROOT, "tests", "_stubs")
+    if _STUBS not in sys.path:
+        sys.path.insert(0, _STUBS)

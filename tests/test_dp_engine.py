@@ -1,0 +1,89 @@
+"""DPEngine tests: bucketed admission, batched dispatch, correctness of the
+request/response loop over heterogeneous traffic."""
+import numpy as np
+import pytest
+
+from repro import dp
+
+
+def _mcm_kw(rng, n):
+    return {"dims": rng.integers(1, 20, size=n + 1).astype(np.float64)}
+
+
+def test_engine_heterogeneous_traffic_matches_oracles():
+    rng = np.random.default_rng(0)
+    eng = dp.DPEngine(max_batch=8)
+    want = {}
+    for _ in range(5):
+        kw = _mcm_kw(rng, 8)
+        want[eng.submit("mcm", **kw)] = dp.get_problem("mcm").solve_reference(**kw)
+    for _ in range(4):
+        kw = {"x": rng.integers(0, 3, size=6), "y": rng.integers(0, 3, size=6)}
+        want[eng.submit("edit_distance", **kw)] = \
+            dp.get_problem("edit_distance").solve_reference(**kw)
+    for _ in range(3):
+        kw = {"item_weights": [2, 5], "item_values": [3.0, 8.0],
+              "capacity": int(rng.integers(20, 30))}
+        want[eng.submit("unbounded_knapsack", **kw)] = \
+            dp.get_problem("unbounded_knapsack").solve_reference(**kw)
+    out = eng.run()
+    assert set(out) == set(want)
+    for rid, ref in want.items():
+        assert out[rid].answer == pytest.approx(ref, rel=1e-4)
+    assert eng.pending() == 0
+    assert eng.stats["completed"] == len(want)
+
+
+def test_engine_buckets_same_shape_into_one_device_batch():
+    rng = np.random.default_rng(1)
+    eng = dp.DPEngine(max_batch=16)
+    for _ in range(6):
+        eng.submit("mcm", **_mcm_kw(rng, 7))  # one shared bucket
+    assert eng.bucket_sizes() == {("mcm", ("triangular", 7)): 6}
+    resp = eng.step()
+    assert len(resp) == 6
+    assert all(r.batch_size == 6 for r in resp)
+    assert eng.stats["device_batches"] == 1
+
+
+def test_engine_respects_max_batch():
+    rng = np.random.default_rng(2)
+    eng = dp.DPEngine(max_batch=4)
+    for _ in range(10):
+        eng.submit("mcm", **_mcm_kw(rng, 6))
+    first = eng.step()
+    assert len(first) == 4
+    assert eng.pending() == 6
+    eng.run()
+    assert eng.pending() == 0
+    assert eng.stats["device_batches"] == 3  # 4 + 4 + 2
+
+
+def test_engine_drains_fullest_bucket_first():
+    rng = np.random.default_rng(3)
+    eng = dp.DPEngine(max_batch=16)
+    eng.submit("mcm", **_mcm_kw(rng, 5))
+    for _ in range(4):
+        eng.submit("mcm", **_mcm_kw(rng, 9))
+    resp = eng.step()
+    assert len(resp) == 4  # the n=9 bucket wins admission
+    assert eng.pending() == 1
+
+
+def test_engine_rejects_bad_instance_at_submit():
+    eng = dp.DPEngine()
+    with pytest.raises(ValueError):
+        eng.submit("unbounded_knapsack", item_weights=[5], item_values=[1.0],
+                   capacity=3)  # capacity < max weight
+    assert eng.pending() == 0
+
+
+def test_engine_backend_override():
+    rng = np.random.default_rng(4)
+    eng = dp.DPEngine(max_batch=8)
+    kw = _mcm_kw(rng, 6)
+    rid = eng.submit("mcm", **kw)
+    out = eng.run(backend="mcm_pipeline")
+    assert out[rid].backend == "mcm_pipeline"
+    assert out[rid].answer == pytest.approx(
+        dp.get_problem("mcm").solve_reference(**kw), rel=1e-6)

@@ -1,0 +1,208 @@
+"""DP zoo tests: every registered problem against its independent numpy
+oracle, on every supporting backend, plus dispatch and the weighted S-DP
+extension underpinning the linear reductions."""
+import zlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import dp
+from repro.core import sdp
+
+NEW_PROBLEMS = {"edit_distance", "lcs", "viterbi", "unbounded_knapsack",
+                "optimal_bst", "polygon_triangulation"}
+
+
+def test_registry_contents():
+    names = set(dp.problem_names())
+    assert NEW_PROBLEMS <= names, names - NEW_PROBLEMS
+    assert {"sdp", "mcm"} <= names
+    assert len(NEW_PROBLEMS) >= 5
+
+
+@pytest.mark.parametrize("name", sorted(NEW_PROBLEMS | {"sdp", "mcm"}))
+def test_problem_matches_oracle_on_every_backend(name):
+    """Randomized instances: each supporting backend reproduces the oracle's
+    full table, and there is at least one backend per problem."""
+    prob = dp.get_problem(name)
+    rng = np.random.default_rng(zlib.crc32(name.encode()))  # reproducible
+    for trial in range(4):
+        kw = prob.sample(rng, int(rng.integers(6, 16)))
+        spec = prob.encode(**kw)
+        table_ref = prob.oracle(**kw)
+        cands = dp.backends.candidates(spec)
+        assert cands, f"no backend supports {name}"
+        for b in cands:
+            got = dp.solve_spec(spec, backend=b.name)
+            np.testing.assert_allclose(
+                got, table_ref, rtol=1e-4, atol=1e-4,
+                err_msg=f"{name} via {b.name} (trial {trial})")
+
+
+@pytest.mark.parametrize("name", sorted(NEW_PROBLEMS | {"mcm"}))
+def test_dispatch_reproduces_oracle(name):
+    """Acceptance: dispatch(problem) selects a backend that reproduces the
+    oracle answer for every registered problem."""
+    prob = dp.get_problem(name)
+    rng = np.random.default_rng(7)
+    kw = prob.sample(rng, 12)
+    backend = dp.dispatch(prob, **kw)
+    assert backend.geometry == prob.geometry
+    got = dp.solve(name, backend=backend.name, **kw)
+    np.testing.assert_allclose(got, prob.solve_reference(**kw),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Known-value spot checks (independent of both oracle and solvers)
+# ---------------------------------------------------------------------------
+def _chars(s):
+    return np.frombuffer(s.encode(), dtype=np.uint8).astype(np.int64)
+
+
+def test_edit_distance_kitten_sitting():
+    assert dp.solve("edit_distance", x=_chars("kitten"), y=_chars("sitting")) == 3.0
+
+
+def test_lcs_known():
+    # LCS("ABCBDAB", "BDCABA") = 4 ("BCBA")
+    assert dp.solve("lcs", x=_chars("ABCBDAB"), y=_chars("BDCABA")) == 4.0
+
+
+def test_knapsack_known():
+    # cap 10, items (w=3,v=5), (w=4,v=6): best = 3+3+4 -> 16
+    got = dp.solve("unbounded_knapsack", item_weights=[3, 4],
+                   item_values=[5.0, 6.0], capacity=10)
+    assert got == pytest.approx(16.0)
+
+
+def test_polygon_triangulation_square():
+    # square 1,2,3,4: triangulations cost 18 (diag 0-2) vs 32 (diag 1-3)
+    got = dp.solve("polygon_triangulation", vertices=[1.0, 2.0, 3.0, 4.0])
+    assert got == pytest.approx(18.0)
+
+
+def test_optimal_bst_vs_exhaustive():
+    """Exhaustive enumeration of all BSTs on m keys (Catalan-many)."""
+    rng = np.random.default_rng(11)
+    freq = rng.random(5) + 0.05
+
+    def best_cost(i, j, depth):  # keys i..j-1 at this depth
+        if i >= j:
+            return 0.0
+        return min(best_cost(i, r, depth + 1) + best_cost(r + 1, j, depth + 1)
+                   + depth * freq[r] for r in range(i, j))
+
+    want = best_cost(0, len(freq), 1)
+    got = dp.solve("optimal_bst", freq=freq)
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_viterbi_vs_brute_force():
+    """Max path log-prob by enumerating all S^T state paths."""
+    import itertools
+
+    prob = dp.get_problem("viterbi")
+    rng = np.random.default_rng(5)
+    kw = prob.sample(rng, 5)
+    log_a, log_b = kw["log_a"], kw["log_b"]
+    log_pi, obs = kw["log_pi"], kw["obs"]
+    S, T = len(log_pi), len(obs)
+    best = -np.inf
+    for path in itertools.product(range(S), repeat=T):
+        lp = log_pi[path[0]] + log_b[path[0], obs[0]]
+        for t in range(1, T):
+            lp += log_a[path[t - 1], path[t]] + log_b[path[t], obs[t]]
+        best = max(best, lp)
+    got = dp.solve("viterbi", **kw)
+    assert got == pytest.approx(best, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Weighted S-DP extension (the substrate the linear reductions stand on)
+# ---------------------------------------------------------------------------
+WEIGHTED_SOLVERS = {
+    "sequential": sdp.solve_sequential,
+    "tournament": sdp.solve_tournament,
+    "pipeline": sdp.solve_pipeline,
+    "blocked": sdp.solve_blocked,
+    "companion_scan": sdp.solve_companion_scan,
+}
+
+
+@pytest.mark.parametrize("solver", sorted(WEIGHTED_SOLVERS))
+@pytest.mark.parametrize("op", ["min", "max", "add"])
+def test_weighted_solvers_match_weighted_oracle(solver, op):
+    rng = np.random.default_rng(3)
+    n, offsets = 80, (6, 4, 1)
+    init = rng.normal(size=6).astype(np.float32)
+    w = rng.normal(size=(n, 3)).astype(np.float32)
+    if op == "add":
+        init = np.abs(init) * 0.1 + 0.1
+        w = np.abs(w) * 0.5 + 0.5  # keep plus-times magnitudes tame
+    ref = sdp.sdp_reference(init, offsets, op, n, weights=w)
+    got = np.asarray(WEIGHTED_SOLVERS[solver](
+        jnp.asarray(init), offsets, op, n, weights=jnp.asarray(w)))
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=1e-5)
+
+
+def test_weighted_masking_lanes():
+    """Semiring-zero weights must fully mask a lane (the grid-DP boundary
+    mechanism): with only the offset-1 lane live, the recurrence degenerates
+    to a running min of the single init value — in every weighted solver."""
+    n = 20
+    init = np.array([5.0, 1.0], dtype=np.float32)
+    w = np.full((n, 2), np.inf, dtype=np.float32)
+    w[:, 1] = 0.0  # offset-2 lane masked, offset-1 lane live
+    ref = sdp.sdp_reference(init, (2, 1), "min", n, weights=w)
+    np.testing.assert_allclose(ref[1:], 1.0)  # the masked lane never wins
+    for name, fn in WEIGHTED_SOLVERS.items():
+        got = np.asarray(fn(jnp.asarray(init), (2, 1), "min", n,
+                            weights=jnp.asarray(w)))
+        np.testing.assert_allclose(got, ref, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Batch path: one device call, loop-equivalent results
+# ---------------------------------------------------------------------------
+def test_batch_solve_matches_loop_and_traces_once():
+    rng = np.random.default_rng(17)
+    # distinctive shape so no other test shares this jit-cache entry
+    instances = [{"x": rng.integers(0, 5, size=11), "y": rng.integers(0, 5, size=13)}
+                 for _ in range(9)]
+    before = len(dp.backends.TRACE_LOG)
+    batched = dp.batch_solve("edit_distance", instances)
+    traced = len(dp.backends.TRACE_LOG) - before
+    assert traced == 1, f"batch of 9 traced {traced} programs, want 1"
+    looped = [dp.solve("edit_distance", **kw) for kw in instances]
+    np.testing.assert_allclose(batched, looped)
+    # second batch of the same shape: cached program, zero new traces
+    before = len(dp.backends.TRACE_LOG)
+    dp.batch_solve("edit_distance", instances)
+    assert len(dp.backends.TRACE_LOG) == before
+
+
+def test_batch_solve_triangular_matches_loop():
+    rng = np.random.default_rng(23)
+    instances = [{"dims": rng.integers(1, 25, size=10).astype(np.float64)}
+                 for _ in range(6)]
+    before = len(dp.backends.TRACE_LOG)
+    batched = dp.batch_solve("mcm", instances)
+    assert len(dp.backends.TRACE_LOG) - before == 1
+    looped = [dp.solve("mcm", **kw) for kw in instances]
+    np.testing.assert_allclose(batched, looped, rtol=1e-6)
+
+
+def test_batch_solve_rejects_heterogeneous_shapes():
+    with pytest.raises(ValueError, match="heterogeneous"):
+        dp.batch_solve("mcm", [{"dims": np.ones(5)}, {"dims": np.ones(7)}])
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        dp.LinearSpec(offsets=(1, 2), op="min", n=10,
+                      init=np.zeros(1)).validate()
+    with pytest.raises(ValueError):
+        dp.get_problem("edit_distance").encode(x=[], y=[1])
