@@ -32,12 +32,14 @@ def _time(fn) -> float:
     return best * 1e3
 
 
-def run(out_path: str = "BENCH_dp_zoo.json") -> dict:
+def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None) -> dict:
+    sizes = sizes or SIZES
+    batch = batch or BATCH
     rng = np.random.default_rng(0)
     rows = []
     for name in dp.problem_names():
         prob = dp.get_problem(name)
-        for size in SIZES:
+        for size in sizes:
             kw = prob.sample(rng, size)
             spec = prob.encode(**kw)
             table_ref = prob.oracle(**kw)
@@ -59,14 +61,14 @@ def run(out_path: str = "BENCH_dp_zoo.json") -> dict:
     for name in ("edit_distance", "mcm"):
         prob = dp.get_problem(name)
         kw0 = prob.sample(rng, 12)
-        instances = [kw0] * BATCH
+        instances = [kw0] * batch
         loop_ms = _time(lambda: [dp.solve(name, **k) for k in instances])
         batch_ms = _time(lambda: dp.batch_solve(name, instances))
-        batch_rows.append({"problem": name, "batch": BATCH,
+        batch_rows.append({"problem": name, "batch": batch,
                            "loop_ms": round(loop_ms, 4),
                            "batch_ms": round(batch_ms, 4),
                            "speedup": round(loop_ms / max(batch_ms, 1e-9), 2)})
-        print(f"zoo_batch,{name},{BATCH},{loop_ms:.4f},{batch_ms:.4f},"
+        print(f"zoo_batch,{name},{batch},{loop_ms:.4f},{batch_ms:.4f},"
               f"{loop_ms / max(batch_ms, 1e-9):.2f}x")
 
     report = {"rows": rows, "batch": batch_rows,

@@ -24,10 +24,10 @@ def time_call(fn, *args, reps: int = 3) -> float:
     return float(np.median(ts)) * 1e6
 
 
-def run(report=print):
+def run(report=print, sizes=None):
     rows = []
     rng = np.random.default_rng(0)
-    for n in SIZES:
+    for n in (sizes or SIZES):  # must be multiples of the tile size (16)
         dims = rng.integers(1, 60, size=n + 1).astype(np.float64)
         p32 = jnp.asarray(dims, jnp.float32)
         t = mcm.build_pipeline_tables(dims, order="safe")

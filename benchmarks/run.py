@@ -1,22 +1,40 @@
 """Benchmark aggregator: one section per paper table/figure + the roofline.
 
 Prints ``name,...`` CSV lines; exits nonzero on correctness failures.
+
+``--smoke`` runs every section at reduced sizes with perf assertions off —
+a fast CI gate that catches harness breakage (import errors, solver/oracle
+drift, dispatch regressions) without paying full benchmark wall-clock.
 """
 from __future__ import annotations
 
+import argparse
 
-def main() -> None:
+
+def main(smoke: bool = False) -> None:
     from benchmarks import dp_zoo_bench, mcm_bench, roofline, table1_sdp
 
+    if smoke:
+        print("# smoke mode: reduced sizes, correctness checks only")
     print("# Table I — S-DP implementations (paper §III-B)")
-    table1_sdp.run()
+    if smoke:
+        table1_sdp.run(sizes=[(2**10, 2**4), (2**11, 2**5)], check_perf=False)
+    else:
+        table1_sdp.run()
     print("# MCM — pipeline vs wavefront vs blocked (paper §IV)")
-    mcm_bench.run()
+    # smoke sizes stay multiples of the blocked solver's tile (16)
+    mcm_bench.run(sizes=[16, 32, 64] if smoke else None)
     print("# DP zoo — problems × backends × sizes (repro.dp)")
-    dp_zoo_bench.run()
+    if smoke:
+        dp_zoo_bench.run(out_path="", sizes=(8, 12), batch=4)
+    else:
+        dp_zoo_bench.run()
     print("# Roofline — dry-run derived terms (EXPERIMENTS.md §Roofline)")
     roofline.run()
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes, skip perf assertions (CI gate)")
+    main(smoke=ap.parse_args().smoke)

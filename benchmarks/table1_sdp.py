@@ -50,9 +50,9 @@ def time_call(fn, *args, reps: int = 5) -> float:
     return float(np.median(ts)) * 1e6  # us
 
 
-def run(report=print):
+def run(report=print, sizes=None, check_perf=True):
     rows = []
-    for n, k in ROWS:
+    for n, k in (sizes or ROWS):
         offs = offsets_for(k, n)
         a1 = offs[0]
         init = jnp.asarray(np.random.default_rng(0).normal(size=a1), jnp.float32)
@@ -82,9 +82,11 @@ def run(report=print):
                f"PIPELINE={t_pipe:.0f}us,BLOCKED={t_blk:.0f}us,"
                f"steps={steps}")
     # paper claims (qualitative): parallel beats sequential;
-    # pipeline/blocked beat the tournament at the largest n
-    last = rows[-1]
-    assert last["t_pipe"] < last["t_seq"] and last["t_blk"] < last["t_seq"]
+    # pipeline/blocked beat the tournament at the largest n.
+    # Skipped in smoke mode — tiny sizes are launch-overhead-dominated.
+    if check_perf:
+        last = rows[-1]
+        assert last["t_pipe"] < last["t_seq"] and last["t_blk"] < last["t_seq"]
     return rows
 
 

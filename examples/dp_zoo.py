@@ -27,6 +27,18 @@ def main() -> None:
                     item_values=[5.0, 6.0], capacity=10)
     print(f"unbounded_knapsack = {best:.0f} (expect 16)")
 
+    # reconstruct=True: answers, not just costs (DESIGN.md §5)
+    ans = dp.solve("mcm", dims=[30, 35, 15, 5, 10, 20, 25], reconstruct=True)
+    print(f"\nmcm parenthesization = {ans.solution['string']} "
+          f"(cost {ans.value:.0f}, args {ans.source}-side)")
+    ans = dp.solve("edit_distance", x=chars("kitten"), y=chars("sitting"),
+                   reconstruct=True)
+    script = " ".join(op[0] for op in ans.solution["ops"])
+    print(f"edit script kitten→sitting: {script}")
+    ans = dp.solve("unbounded_knapsack", item_weights=[3, 4],
+                   item_values=[5.0, 6.0], capacity=10, reconstruct=True)
+    print(f"knapsack items (weight, value): {ans.solution['items']}")
+
     # batched: 32 same-shape instances, one vmapped device call
     rng = np.random.default_rng(0)
     instances = [{"dims": rng.integers(1, 30, size=17).astype(np.float64)}
@@ -37,18 +49,23 @@ def main() -> None:
           f"{len(dp.backends.TRACE_LOG) - before} traced program(s), "
           f"mean cost {np.mean(answers):.0f}")
 
-    # the engine: heterogeneous traffic, bucketed into batched device calls
+    # the engine: heterogeneous traffic, bucketed into batched device calls;
+    # reconstruct requests get a batched device-side traceback per bucket
     eng = dp.DPEngine(max_batch=16)
     for _ in range(12):
         eng.submit("mcm", dims=rng.integers(1, 30, size=13).astype(np.float64))
     for _ in range(7):
         eng.submit("lcs", x=rng.integers(0, 4, size=9), y=rng.integers(0, 4, size=9))
     eng.submit("optimal_bst", freq=rng.random(10) + 0.01)
+    bst_rid = eng.submit("optimal_bst", freq=rng.random(10) + 0.01,
+                         reconstruct=True)
     out = eng.run()
     print(f"engine: {eng.stats['completed']} requests in "
           f"{eng.stats['device_batches']} device batches "
-          f"(buckets keyed by problem × shape)")
+          f"(buckets keyed by problem × shape), "
+          f"{eng.stats['device_tracebacks']} device-side traceback(s)")
     print("sample responses:", {r: round(out[r].answer, 2) for r in list(out)[:3]})
+    print(f"reconstructed BST root tree: {out[bst_rid].solution.solution['tree']}")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,8 @@ steps — matching the paper's step bound while feeding the MXU.
 from __future__ import annotations
 
 import functools
+import hashlib
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -184,26 +186,58 @@ def _blocked_run(spec):
     return blocked_to_linear(np.asarray(m))
 
 
-def _dims_match_weights(spec) -> bool:
-    """This backend solves from ``dims`` and ignores ``weights`` — only
-    support specs whose weight table really is the MCM one for those dims
-    (guards hand-built inconsistent specs). Exhaustive for small tables;
-    for large ones a deterministic sample scaled with n — supports() runs
-    on every dispatch, so rebuilding the O(n³/2) table is off-limits."""
-    from repro.core.mcm import lin_index, mcm_weight_fn, weight_table
+_GUARD_CACHE: "OrderedDict[tuple, bool]" = OrderedDict()
+_GUARD_CACHE_MAX = 256
 
-    n = spec.n
-    w = np.asarray(spec.weights)
-    fn = mcm_weight_fn(np.asarray(spec.dims))
-    if n <= 32:  # full table is tiny — compare exactly
-        return bool(np.allclose(w, weight_table(n, fn), rtol=1e-9))
+
+def _probe_indices(n: int):
+    """The (d, i, e) split coordinates the eligibility check inspects for
+    large tables — a deterministic O(n) sample. None ⇒ small table, check
+    (and hash) the whole thing."""
+    if n <= 32:
+        return None
     rng = np.random.default_rng(n)          # deterministic per shape
     m = 8 * n
     d = rng.integers(1, n, size=m)
     i = (rng.random(m) * (n - d)).astype(np.int64)
     e = (rng.random(m) * d).astype(np.int64)
-    return bool(np.allclose(w[lin_index(i, d, n), e], fn(i, i + e, i + d),
-                            rtol=1e-9))
+    return d, i, e
+
+
+def _dims_match_weights(spec) -> bool:
+    """This backend solves from ``dims`` and ignores ``weights`` — only
+    support specs whose weight table really is the MCM one for those dims
+    (guards hand-built inconsistent specs). Exhaustive for small tables;
+    for large ones a deterministic sample scaled with n. supports() runs on
+    every dispatch, so results are memoized — engine traffic re-dispatches
+    the same dims over and over and must not pay the eligibility check (let
+    alone the O(n³/2) table rebuild) each time. The cache key digests dims
+    plus exactly the weight entries the check reads, keeping a lookup O(n)
+    for large tables."""
+    from repro.core.mcm import lin_index, mcm_weight_fn, weight_table
+
+    n = spec.n
+    w = np.asarray(spec.weights)
+    idx = _probe_indices(n)
+    probe = w if idx is None else w[lin_index(idx[1], idx[0], n), idx[2]]
+    digest = hashlib.blake2b(np.ascontiguousarray(spec.dims).tobytes(),
+                             digest_size=16)
+    digest.update(np.ascontiguousarray(probe).tobytes())
+    key = (n, digest.digest())
+    hit = _GUARD_CACHE.get(key)
+    if hit is not None:
+        _GUARD_CACHE.move_to_end(key)
+        return hit
+    fn = mcm_weight_fn(np.asarray(spec.dims))
+    if idx is None:  # full table is tiny — compare exactly
+        ok = bool(np.allclose(probe, weight_table(n, fn), rtol=1e-9))
+    else:
+        d, i, e = idx
+        ok = bool(np.allclose(probe, fn(i, i + e, i + d), rtol=1e-9))
+    _GUARD_CACHE[key] = ok
+    while len(_GUARD_CACHE) > _GUARD_CACHE_MAX:
+        _GUARD_CACHE.popitem(last=False)
+    return ok
 
 
 _dp_backends.register(_dp_backends.Backend(

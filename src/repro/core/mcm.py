@@ -54,6 +54,10 @@ __all__ = [
     "weight_table",
     "solve_wavefront",
     "solve_wavefront_tab",
+    "solve_wavefront_tab_with_args",
+    "triangular_traceback",
+    "triangular_args_np",
+    "triangular_traceback_np",
     "solve_pipeline",
     "solve_pipeline_np",
     "pipeline_num_steps",
@@ -222,15 +226,19 @@ def pipeline_num_steps(n: int) -> int:
 # The standard parallelization the paper contrasts against (and the
 # throughput-optimal form on TPU: each step is a dense masked (n × n) combine).
 # ---------------------------------------------------------------------------
-def _wavefront_loop(n: int, dtype, weight_of) -> jnp.ndarray:
+def _wavefront_loop(n: int, dtype, weight_of, with_args: bool = False):
     """Shared masked-diagonal body; ``weight_of(d, ii, ee)`` yields the split
-    weights for diagonal d (arithmetic from dims, or a table gather)."""
+    weights for diagonal d (arithmetic from dims, or a table gather). With
+    ``with_args`` the loop also records each cell's winning split offset e
+    (-1 on the preset diagonal 0) and returns ``(st, args)``."""
     cells = num_cells(n)
     st = jnp.zeros((cells,), dtype=dtype)    # diagonal 0 preset to 0
+    ar = jnp.full((cells,), -1, dtype=jnp.int32)
     ii = jnp.arange(n)[:, None]              # rows (padded)
     ee = jnp.arange(max(n - 1, 1))[None, :]  # split offsets (padded)
 
-    def body(d, st):
+    def body(d, carry):
+        st, ar = carry
         valid = (ii < n - d) & (ee < d)
         li = lin_index(ii, ee, n)                            # cell (i, i+e)
         ri = lin_index(ii + ee + 1, d - ee - 1, n)           # cell (i+e+1, i+d)
@@ -240,9 +248,14 @@ def _wavefront_loop(n: int, dtype, weight_of) -> jnp.ndarray:
                          INF)
         out = jnp.min(cand, axis=1)                          # (n,)
         widx = jnp.where(ii[:, 0] < n - d, lin_index(ii[:, 0], d, n), cells)
-        return st.at[widx].set(out, mode="drop", unique_indices=True)
+        st = st.at[widx].set(out, mode="drop", unique_indices=True)
+        if with_args:
+            ar = ar.at[widx].set(jnp.argmin(cand, axis=1).astype(jnp.int32),
+                                 mode="drop", unique_indices=True)
+        return st, ar
 
-    return jax.lax.fori_loop(1, n, body, st)
+    st, ar = jax.lax.fori_loop(1, n, body, (st, ar))
+    return (st, ar) if with_args else st
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -271,6 +284,95 @@ def solve_wavefront_tab(wtab: jnp.ndarray, n: int) -> jnp.ndarray:
         return wtab[jnp.clip(ci, 0, cells - 1), ee]
 
     return _wavefront_loop(n, wtab.dtype, weight_of)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def solve_wavefront_tab_with_args(wtab: jnp.ndarray, n: int):
+    """``solve_wavefront_tab`` + the best-split table: returns ``(st, args)``
+    with ``args[lin(i,d)] = e`` such that split ``s = i+e`` wins cell
+    ``(i, i+d)`` (-1 on diagonal 0)."""
+    cells = num_cells(n)
+
+    def weight_of(d, ii, ee):
+        ci = lin_index(ii, d, n)
+        return wtab[jnp.clip(ci, 0, cells - 1), ee]
+
+    return _wavefront_loop(n, wtab.dtype, weight_of, with_args=True)
+
+
+# ---------------------------------------------------------------------------
+# Traceback: expand the best-split table into the full split tree. The device
+# version runs an explicit DFS stack inside ``lax.scan`` — a triangular table
+# over n leaves has exactly n-1 internal nodes, so n-1 fixed steps emit the
+# whole tree in preorder; vmapping the scan reconstructs an engine bucket in
+# one jitted call (DESIGN.md §5).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n",))
+def triangular_traceback(args: jnp.ndarray, n: int):
+    """Returns preorder ``(ii, dd, ee)`` arrays of length n-1: internal node
+    (i, i+d) chose split offset e (children (i, e) and (i+e+1, d-e-1))."""
+    cells = num_cells(n)
+    size = n + 1                        # DFS stack capacity (≤ n live nodes)
+
+    def step(state, _):
+        si, sd, sp = state
+        top = sp - 1
+        i = si[jnp.clip(top, 0, size - 1)]
+        d = sd[jnp.clip(top, 0, size - 1)]
+        c = lin_index(i, d, n)
+        e = jnp.clip(args[jnp.clip(c, 0, cells - 1)], 0, jnp.maximum(d - 1, 0))
+        sp = sp - 1
+        # push right child first so the left child pops next (preorder)
+        rd = d - e - 1
+        idx = jnp.where(rd >= 1, sp, size)
+        si = si.at[idx].set(i + e + 1, mode="drop")
+        sd = sd.at[idx].set(rd, mode="drop")
+        sp = sp + (rd >= 1).astype(sp.dtype)
+        idx = jnp.where(e >= 1, sp, size)
+        si = si.at[idx].set(i, mode="drop")
+        sd = sd.at[idx].set(e, mode="drop")
+        sp = sp + (e >= 1).astype(sp.dtype)
+        return (si, sd, sp), (i, d, e)
+
+    si = jnp.zeros((size,), dtype=jnp.int32)
+    sd = jnp.zeros((size,), dtype=jnp.int32).at[0].set(n - 1)
+    sp = jnp.int32(1)
+    _, (ii, dd, ee) = jax.lax.scan(step, (si, sd, sp), None,
+                                   length=max(n - 1, 0))
+    return ii, dd, ee
+
+
+def triangular_args_np(table: np.ndarray, wtab: np.ndarray, n: int) -> np.ndarray:
+    """Numpy fallback: best-split table from a finished cost table (for
+    backends that only return costs); candidates recomputed in float64."""
+    table = np.asarray(table, dtype=np.float64)
+    wtab = np.asarray(wtab, dtype=np.float64)
+    args = np.full(num_cells(n), -1, dtype=np.int32)
+    for d in range(1, n):
+        ii = np.arange(n - d)[:, None]          # (rows, 1)
+        ee = np.arange(d)[None, :]              # (1, d)
+        rows = lin_index(ii[:, 0], d, n)
+        cand = (table[lin_index(ii, ee, n)]
+                + table[lin_index(ii + ee + 1, d - ee - 1, n)]
+                + wtab[rows[:, None], ee])
+        args[rows] = np.argmin(cand, axis=1)
+    return args
+
+
+def triangular_traceback_np(args: np.ndarray, n: int) -> np.ndarray:
+    """Host DFS with the same preorder contract as :func:`triangular_traceback`;
+    returns an (n-1, 3) array of (i, d, e) internal nodes."""
+    nodes = []
+    stack = [(0, n - 1)] if n >= 2 else []
+    while stack:
+        i, d = stack.pop()
+        e = int(args[lin_index(i, d, n)])
+        nodes.append((i, d, e))
+        if d - e - 1 >= 1:
+            stack.append((i + e + 1, d - e - 1))
+        if e >= 1:
+            stack.append((i, e))
+    return np.asarray(nodes, dtype=np.int64).reshape(-1, 3)
 
 
 # ---------------------------------------------------------------------------
@@ -375,6 +477,7 @@ def _register_backends() -> None:
     _dp_backends.register(_dp_backends.triangular_tab_backend(
         "wavefront", solve_wavefront_tab,
         cost=lambda s: float(s.n),
+        jax_arg_fn=solve_wavefront_tab_with_args,
         doc="dense masked per-diagonal combine (n-1 vectorized steps)"))
     _dp_backends.register(_dp_backends.Backend(
         name="mcm_pipeline", geometry="triangular",

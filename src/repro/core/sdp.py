@@ -48,6 +48,11 @@ __all__ = [
     "solve_pipeline",
     "solve_blocked",
     "solve_companion_scan",
+    "solve_tournament_with_args",
+    "solve_blocked_with_args",
+    "linear_traceback",
+    "linear_args_np",
+    "linear_traceback_np",
     "pipeline_num_steps",
 ]
 
@@ -221,6 +226,148 @@ def solve_blocked(init: jnp.ndarray, offsets: tuple, op: str, n: int, block: int
 
 
 # ---------------------------------------------------------------------------
+# Arg-emitting variants (solution reconstruction, DESIGN.md §5). For min/max
+# semigroups the reduction has a well-defined argument: args[i] is the lane j
+# whose term ST[i-a_j] (⊙ w[i,j]) achieved ST[i]; init cells carry -1.
+# op="add" sums every lane — there is no argument to track.
+# ---------------------------------------------------------------------------
+def _argbest_for(op: str):
+    if op == "min":
+        return jnp.argmin
+    if op == "max":
+        return jnp.argmax
+    raise ValueError(f"argument tracking is undefined for op={op!r} "
+                     "(every lane contributes to the reduction)")
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "op", "n"))
+def solve_tournament_with_args(init: jnp.ndarray, offsets: tuple, op: str,
+                               n: int, weights: jnp.ndarray | None = None):
+    """``solve_tournament`` + per-cell winning-lane index. Returns (st, args)."""
+    a = _check_offsets(offsets)
+    sg = SEMIGROUPS[op]
+    mul = _mul_for(op)
+    argbest = _argbest_for(op)
+    a1 = int(a[0])
+    offs = jnp.asarray(a)
+    st = jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
+    ar = jnp.full((n,), -1, dtype=jnp.int32)
+
+    def body(i, carry):
+        st, ar = carry
+        vals = st[i - offs]  # (k,)
+        if weights is not None:
+            vals = mul(vals, weights[i])
+        return (st.at[i].set(sg.reduce(vals, axis=0)),
+                ar.at[i].set(argbest(vals).astype(jnp.int32)))
+
+    return jax.lax.fori_loop(a1, n, body, (st, ar))
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "op", "n", "block"))
+def solve_blocked_with_args(init: jnp.ndarray, offsets: tuple, op: str, n: int,
+                            block: int = 512,
+                            weights: jnp.ndarray | None = None):
+    """``solve_blocked`` + per-cell winning-lane index. Returns (st, args)."""
+    a = _check_offsets(offsets)
+    sg = SEMIGROUPS[op]
+    mul = _mul_for(op)
+    argbest = _argbest_for(op)
+    a1, ak = int(a[0]), int(a[-1])
+    B = max(1, min(ak, block))
+    offs = jnp.asarray(a)
+    st = jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
+    ar = jnp.full((n,), -1, dtype=jnp.int32)
+    num_blocks = -(-(n - a1) // B)
+    lane = jnp.arange(B)
+
+    def body(b, carry):
+        st, ar = carry
+        pos = a1 + b * B + lane                        # (B,)
+        ok = pos < n
+        src = jnp.clip(pos[None, :] - offs[:, None], 0, n - 1)  # (k, B)
+        vals = st[src]
+        if weights is not None:
+            vals = mul(vals, weights[jnp.clip(pos, 0, n - 1)].T)  # (k, B)
+        widx = jnp.where(ok, pos, n)
+        return (st.at[widx].set(sg.reduce(vals, axis=0), mode="drop",
+                                unique_indices=True),
+                ar.at[widx].set(argbest(vals, axis=0).astype(jnp.int32),
+                                mode="drop", unique_indices=True))
+
+    return jax.lax.fori_loop(0, num_blocks, body, (st, ar))
+
+
+# ---------------------------------------------------------------------------
+# Traceback: follow the winning lanes from a start cell down into the init
+# region. The device version is a fixed-length ``lax.scan`` (every step
+# retreats by ≥ a_k, so ⌊(n-1-a_1)/a_k⌋ + 1 steps suffice) and vmaps over a
+# whole engine bucket — one jitted walk per shape (DESIGN.md §5).
+# ---------------------------------------------------------------------------
+def linear_traceback_steps(n: int, offsets: Sequence[int]) -> int:
+    a = _check_offsets(offsets)
+    return max((n - 1 - int(a[0])) // int(a[-1]) + 1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "n"))
+def linear_traceback(args: jnp.ndarray, offsets: tuple, n: int, start):
+    """Walk ``args`` from ``start``. Returns (cells, lanes, valid, stop):
+    fixed-length step records (valid masks the live prefix) plus the init
+    cell the walk stopped in."""
+    a = _check_offsets(offsets)
+    a1 = int(a[0])
+    offs = jnp.asarray(a)
+
+    def step(cur, _):
+        live = cur >= a1
+        lane = jnp.clip(args[jnp.clip(cur, 0, n - 1)], 0, len(a) - 1)
+        nxt = jnp.where(live, cur - offs[lane], cur)
+        return nxt, (cur, lane, live)
+
+    stop, (cells, lanes, valid) = jax.lax.scan(
+        step, jnp.asarray(start), None, length=linear_traceback_steps(n, offsets))
+    return cells, lanes, valid, stop
+
+
+def linear_args_np(table: np.ndarray, offsets: Sequence[int], op: str,
+                   weights: np.ndarray | None = None) -> np.ndarray:
+    """Numpy fallback: recover the winning-lane table from a finished cost
+    table (for backends that only return costs). Candidates are recomputed
+    from the table in float64; the argbest is consistent with the table even
+    when the solver ran in float32."""
+    a = _check_offsets(offsets)
+    if op not in ("min", "max"):
+        raise ValueError(f"argument tracking is undefined for op={op!r}")
+    ring = SEMIGROUP_TO_SEMIRING[op]
+    n = len(table)
+    args = np.full(n, -1, dtype=np.int32)
+    a1 = int(a[0])
+    idx = np.arange(a1, n)
+    cand = np.asarray(table, dtype=np.float64)[idx[:, None] - a[None, :]]
+    if weights is not None:
+        with np.errstate(invalid="ignore"):
+            cand = ring.np_mul(cand, np.asarray(weights, dtype=np.float64)[a1:])
+        cand = np.where(np.isnan(cand), ring.zero, cand)  # ±inf collisions
+    args[a1:] = (np.argmin if op == "min" else np.argmax)(cand, axis=1)
+    return args
+
+
+def linear_traceback_np(args: np.ndarray, offsets: Sequence[int], start: int):
+    """Host walk with the same contract as :func:`linear_traceback`, but
+    returning only the live steps: (cells, lanes, stop)."""
+    a = _check_offsets(offsets)
+    a1 = int(a[0])
+    cells, lanes = [], []
+    cur = int(start)
+    while cur >= a1:
+        lane = int(args[cur])
+        cells.append(cur)
+        lanes.append(lane)
+        cur -= int(a[lane])
+    return np.asarray(cells, dtype=np.int64), np.asarray(lanes, dtype=np.int64), cur
+
+
+# ---------------------------------------------------------------------------
 # Beyond-paper: companion-matrix scan. S-DP with a semigroup drawn from a
 # semiring is a semiring-linear recurrence; the state vector
 # v_i = (ST[i-1], …, ST[i-a_1]) evolves by a constant companion matrix M:
@@ -231,6 +378,15 @@ def solve_blocked(init: jnp.ndarray, offsets: tuple, op: str, n: int, block: int
 # powers; O(n·a_1³) work — practical for small a_1, and the generalization to
 # step-varying coefficients is free.
 # ---------------------------------------------------------------------------
+def _companion_shift(a1: int, ring) -> np.ndarray:
+    """The shift sub-structure shared by every companion matrix: semiring
+    ``one`` on the subdiagonal (state rotation), ``zero`` elsewhere."""
+    m = np.full((a1, a1), ring.zero, dtype=np.float64)
+    for r in range(1, a1):
+        m[r, r - 1] = ring.one
+    return m
+
+
 @functools.partial(jax.jit, static_argnames=("offsets", "op", "n"))
 def solve_companion_scan(init: jnp.ndarray, offsets: tuple, op: str, n: int,
                          weights: jnp.ndarray | None = None) -> jnp.ndarray:
@@ -239,24 +395,17 @@ def solve_companion_scan(init: jnp.ndarray, offsets: tuple, op: str, n: int,
     a1 = int(a[0])
     dtype = jnp.result_type(init.dtype, jnp.float32)
 
-    m = np.full((a1, a1), ring.zero, dtype=np.float64)
-    for aj in a:
-        m[0, aj - 1] = ring.one
-    for r in range(1, a1):
-        m[r, r - 1] = ring.one
-    M = jnp.asarray(m, dtype=dtype)
-
+    shift = _companion_shift(a1, ring)
     steps = n - a1
     if steps <= 0:
         return init[:n].astype(init.dtype)
     if weights is None:
-        mats = jnp.broadcast_to(M, (steps, a1, a1))
+        m = shift.copy()
+        m[0, a - 1] = ring.one
+        mats = jnp.broadcast_to(jnp.asarray(m, dtype=dtype), (steps, a1, a1))
     else:
         # step-varying coefficients: step t computes ST[a1+t], so its
         # companion matrix carries row-0 entries w[a1+t, j] at column a_j-1.
-        shift = np.full((a1, a1), ring.zero, dtype=np.float64)
-        for r in range(1, a1):
-            shift[r, r - 1] = ring.one
         row0 = jnp.full((steps, a1), ring.zero, dtype=dtype)
         row0 = row0.at[:, jnp.asarray(a - 1)].set(weights[a1:n].astype(dtype))
         mats = jnp.broadcast_to(jnp.asarray(shift, dtype=dtype), (steps, a1, a1))
@@ -278,23 +427,23 @@ from repro.dp import backends as _dp_backends  # noqa: E402
 
 def _register_backends() -> None:
     table = [
-        ("sequential", solve_sequential, None,
+        ("sequential", solve_sequential, None, None,
          "Fig.-1 double loop (oracle parity)"),
-        ("tournament", solve_tournament, None,
+        ("tournament", solve_tournament, solve_tournament_with_args, None,
          "per-element gather + tree reduce (§II-B)"),
-        ("pipeline", solve_pipeline, None,
+        ("pipeline", solve_pipeline, None, None,
          "the paper's Fig.-2 skewed pipeline, vectorized over stages"),
-        ("blocked", solve_blocked, None,
+        ("blocked", solve_blocked, solve_blocked_with_args, None,
          "TPU-adapted blocked pipeline: min(a_k, B) outputs per step"),
-        ("companion_scan", solve_companion_scan,
+        ("companion_scan", solve_companion_scan, None,
          lambda s: int(s.offsets[0]) <= 16,
          "log-depth associative_scan over companion matrices (small a_1)"),
     ]
-    for name, fn, supports, doc in table:
+    for name, fn, arg_fn, supports, doc in table:
         _dp_backends.register(_dp_backends.linear_backend(
             name, fn,
             cost=lambda s, _n=name: _dp_backends.linear_costs(s)[_n],
-            supports=supports, doc=doc))
+            supports=supports, jax_arg_fn=arg_fn, doc=doc))
 
 
 _register_backends()

@@ -1,37 +1,43 @@
 """repro.dp — the declarative DP problem zoo and multi-solver engine.
 
-Layers (DESIGN.md §3):
+Layers (DESIGN.md §3, §5):
 
-  problem   — LinearSpec / TriangularSpec canonical forms + DPProblem
-  registry  — name -> DPProblem (the zoo populates it at import)
-  backends  — solver routes registered by core/sdp, core/mcm,
-              core/blocked_mcm and kernels at their import time
-  zoo       — edit_distance, lcs, viterbi, unbounded_knapsack, mcm,
-              optimal_bst, polygon_triangulation, sdp
-  routing   — cost-model dispatch + single-call vmapped batch_solve
-  engine    — DPEngine: bucketed request/response serving front end
+  problem     — LinearSpec / TriangularSpec canonical forms + DPProblem,
+                Answer / LinearPath / TriangularPath reconstruction types
+  registry    — name -> DPProblem (the zoo populates it at import)
+  backends    — solver routes registered by core/sdp, core/mcm,
+                core/blocked_mcm and kernels at their import time
+  zoo         — edit_distance, lcs, viterbi, unbounded_knapsack, mcm,
+                optimal_bst, polygon_triangulation, sdp (all decodable)
+  routing     — cost-model dispatch + single-call vmapped batch_solve
+  reconstruct — arg tables → batched tracebacks → decoded Answers
+  engine      — DPEngine: bucketed request/response serving front end
 
 Quickstart::
 
     from repro import dp
     d = dp.solve("edit_distance", x=[1, 2, 3], y=[1, 3])
+    ans = dp.solve("mcm", dims=[30, 35, 15, 5], reconstruct=True)
+    ans.value, ans.solution["string"]   # 'cost', '((A0·A1)·A2)'
     eng = dp.DPEngine(max_batch=32)
-    rids = [eng.submit("mcm", dims=dims_b) for dims_b in batches]
+    rids = [eng.submit("mcm", reconstruct=True, dims=d) for d in batches]
     answers = eng.run()
 """
-from repro.dp import backends, registry, routing, zoo  # noqa: F401
+from repro.dp import backends, reconstruct, registry, routing, zoo  # noqa: F401
 from repro.dp.routing import batch_solve, batch_solve_specs, dispatch, solve, solve_spec  # noqa: F401
 route = dispatch
 from repro.dp.engine import DPEngine, DPRequest, DPResponse  # noqa: F401
-from repro.dp.problem import DPProblem, LinearSpec, Spec, TriangularSpec  # noqa: F401
+from repro.dp.problem import (  # noqa: F401
+    Answer, DPProblem, LinearPath, LinearSpec, Spec, TriangularPath,
+    TriangularSpec)
 from repro.dp.registry import get as get_problem  # noqa: F401
 from repro.dp.registry import names as problem_names  # noqa: F401
 from repro.dp.registry import problems  # noqa: F401
 
 __all__ = [
-    "DPEngine", "DPProblem", "DPRequest", "DPResponse",
-    "LinearSpec", "Spec", "TriangularSpec",
+    "Answer", "DPEngine", "DPProblem", "DPRequest", "DPResponse",
+    "LinearPath", "LinearSpec", "Spec", "TriangularPath", "TriangularSpec",
     "backends", "batch_solve", "batch_solve_specs", "dispatch", "route",
-    "get_problem", "problem_names", "problems", "registry", "routing",
-    "solve", "solve_spec", "zoo",
+    "get_problem", "problem_names", "problems", "reconstruct", "registry",
+    "routing", "solve", "solve_spec", "zoo",
 ]

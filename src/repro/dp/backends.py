@@ -36,7 +36,11 @@ _LOADED = False
 class Backend:
     """A solver route. ``run`` returns the full linearized table as numpy;
     ``batch_run`` (optional) solves a homogeneous list of specs in one
-    device call."""
+    device call. Arg-capable routes additionally expose ``run_with_args`` /
+    ``batch_run_with_args`` returning ``(table, args)`` pairs — the winning
+    lane (linear) or best split (triangular) per cell — which the
+    reconstruction layer (``repro.dp.reconstruct``) prefers over its numpy
+    from-the-cost-table fallback."""
 
     name: str
     geometry: str
@@ -44,6 +48,8 @@ class Backend:
     cost: Callable[[Spec], float]
     supports: Callable[[Spec], bool]
     batch_run: Optional[Callable] = None
+    run_with_args: Optional[Callable] = None
+    batch_run_with_args: Optional[Callable] = None
     doc: str = ""
 
 
@@ -95,75 +101,107 @@ def ensure_registered() -> None:
 # ---------------------------------------------------------------------------
 def linear_backend(name: str, jax_fn: Callable, cost: Callable,
                    supports: Optional[Callable] = None,
+                   jax_arg_fn: Optional[Callable] = None,
                    doc: str = "") -> Backend:
     """Wrap a JAX S-DP solver ``fn(init, offsets, op, n, weights=None)``
-    into a Backend with a single-call vmapped batch path."""
+    into a Backend with a single-call vmapped batch path. ``jax_arg_fn`` (same
+    signature, returns ``(st, args)``) additionally equips the backend with
+    the ``*_with_args`` capability pair."""
     import jax
     import jax.numpy as jnp
 
-    def run(spec: LinearSpec) -> np.ndarray:
+    def _run(fn, spec: LinearSpec):
         w = None if spec.weights is None else jnp.asarray(spec.weights)
-        out = jax_fn(jnp.asarray(spec.init), spec.offsets, spec.op, spec.n,
-                     weights=w)
-        return np.asarray(out)
+        return fn(jnp.asarray(spec.init), spec.offsets, spec.op, spec.n,
+                  weights=w)
 
-    def batch_run(specs) -> list:
+    def run(spec: LinearSpec) -> np.ndarray:
+        return np.asarray(_run(jax_fn, spec))
+
+    def _batch(fn, specs, key):
         spec0 = specs[0]
-        key = (name, spec0.shape_key())
         if key not in _BATCH_CACHE:
             offsets, op, n = spec0.offsets, spec0.op, spec0.n
             if spec0.weights is None:
                 def call(inits):
                     TRACE_LOG.append(key)
                     return jax.vmap(
-                        lambda i: jax_fn(i, offsets, op, n))(inits)
+                        lambda i: fn(i, offsets, op, n))(inits)
             else:
                 def call(inits, weights):
                     TRACE_LOG.append(key)
                     return jax.vmap(
-                        lambda i, w: jax_fn(i, offsets, op, n, weights=w)
+                        lambda i, w: fn(i, offsets, op, n, weights=w)
                     )(inits, weights)
             _BATCH_CACHE[key] = jax.jit(call)
-        fn = _BATCH_CACHE[key]
+        cached = _BATCH_CACHE[key]
         inits = jnp.stack([jnp.asarray(s.init) for s in specs])
         if spec0.weights is None:
-            tables = fn(inits)
-        else:
-            tables = fn(inits, jnp.stack([jnp.asarray(s.weights) for s in specs]))
-        return list(np.asarray(tables))
+            return cached(inits)
+        return cached(inits, jnp.stack([jnp.asarray(s.weights) for s in specs]))
+
+    def batch_run(specs) -> list:
+        return list(np.asarray(_batch(jax_fn, specs, (name, specs[0].shape_key()))))
+
+    run_with_args = batch_run_with_args = None
+    if jax_arg_fn is not None:
+        def run_with_args(spec: LinearSpec):
+            st, args = _run(jax_arg_fn, spec)
+            return np.asarray(st), np.asarray(args)
+
+        def batch_run_with_args(specs):
+            sts, argss = _batch(jax_arg_fn, specs,
+                                (name, specs[0].shape_key(), "args"))
+            return list(np.asarray(sts)), list(np.asarray(argss))
 
     return Backend(name=name, geometry="linear", run=run, cost=cost,
                    supports=supports or (lambda s: True),
-                   batch_run=batch_run, doc=doc)
+                   batch_run=batch_run, run_with_args=run_with_args,
+                   batch_run_with_args=batch_run_with_args, doc=doc)
 
 
 def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
+                           jax_arg_fn: Optional[Callable] = None,
                            doc: str = "") -> Backend:
     """Wrap a weight-table triangular solver ``fn(wtab, n)`` (e.g.
-    ``core.mcm.solve_wavefront_tab``) with a vmapped batch path."""
+    ``core.mcm.solve_wavefront_tab``) with a vmapped batch path.
+    ``jax_arg_fn`` (returns ``(st, args)``) adds the arg-capability pair."""
     import jax
     import jax.numpy as jnp
 
     def run(spec: TriangularSpec) -> np.ndarray:
         return np.asarray(jax_fn(jnp.asarray(spec.weights), spec.n))
 
-    def batch_run(specs) -> list:
-        spec0 = specs[0]
-        key = (name, spec0.shape_key())
+    def _batch(fn, specs, key):
         if key not in _BATCH_CACHE:
-            n = spec0.n
+            n = specs[0].n
 
             def call(wtabs):
                 TRACE_LOG.append(key)
-                return jax.vmap(lambda w: jax_fn(w, n))(wtabs)
+                return jax.vmap(lambda w: fn(w, n))(wtabs)
 
             _BATCH_CACHE[key] = jax.jit(call)
-        tables = _BATCH_CACHE[key](
+        return _BATCH_CACHE[key](
             jnp.stack([jnp.asarray(s.weights) for s in specs]))
-        return list(np.asarray(tables))
+
+    def batch_run(specs) -> list:
+        return list(np.asarray(_batch(jax_fn, specs, (name, specs[0].shape_key()))))
+
+    run_with_args = batch_run_with_args = None
+    if jax_arg_fn is not None:
+        def run_with_args(spec: TriangularSpec):
+            st, args = jax_arg_fn(jnp.asarray(spec.weights), spec.n)
+            return np.asarray(st), np.asarray(args)
+
+        def batch_run_with_args(specs):
+            sts, argss = _batch(jax_arg_fn, specs,
+                                (name, specs[0].shape_key(), "args"))
+            return list(np.asarray(sts)), list(np.asarray(argss))
 
     return Backend(name=name, geometry="triangular", run=run, cost=cost,
-                   supports=lambda s: True, batch_run=batch_run, doc=doc)
+                   supports=lambda s: True, batch_run=batch_run,
+                   run_with_args=run_with_args,
+                   batch_run_with_args=batch_run_with_args, doc=doc)
 
 
 # shared cost vocabulary -----------------------------------------------------

@@ -6,6 +6,13 @@ that can share one device program), and every engine step drains the
 fullest bucket with ONE batched vmapped solve. Heterogeneous traffic
 (many problems, many sizes) thus turns into a small number of large
 device calls instead of a long stream of singleton launches.
+
+Reconstruction: ``submit(..., reconstruct=True)`` routes the request into a
+separate bucket (same shape, arg-tracking treatment) whose drain issues the
+batched arg-emitting solve plus ONE vmapped traceback walk for the whole
+bucket; responses then carry the decoded :class:`Answer` in ``solution``.
+``stats`` counts how many requests reconstructed device-side vs through the
+numpy from-the-cost-table fallback.
 """
 from __future__ import annotations
 
@@ -13,10 +20,10 @@ import dataclasses
 from collections import OrderedDict
 from typing import Any, Optional
 
-from repro.dp import backends as _backends
+from repro.dp import reconstruct as _reconstruct
 from repro.dp import registry as _registry
-from repro.dp.routing import batch_solve_specs, select_batch_backend
-from repro.dp.problem import Spec
+from repro.dp import routing as _routing
+from repro.dp.problem import Answer, Spec
 
 
 @dataclasses.dataclass
@@ -25,6 +32,7 @@ class DPRequest:
     problem: str
     payload: dict
     spec: Spec = None
+    reconstruct: bool = False
 
 
 @dataclasses.dataclass
@@ -34,6 +42,7 @@ class DPResponse:
     answer: Any
     backend: str
     batch_size: int
+    solution: Optional[Answer] = None
 
 
 class DPEngine:
@@ -47,18 +56,34 @@ class DPEngine:
         self._next_rid = 0
         self._buckets: "OrderedDict[tuple, list]" = OrderedDict()
         self.stats = {"submitted": 0, "completed": 0, "device_batches": 0,
-                      "batched_requests": 0}
+                      "batched_requests": 0, "device_tracebacks": 0,
+                      "host_tracebacks": 0}
 
     # -- admission ---------------------------------------------------------
-    def submit(self, problem: str, **payload) -> int:
-        """Encode eagerly (validates the instance) and enqueue. Returns rid."""
+    def submit(self, problem: str, reconstruct: bool = False,
+               **payload) -> int:
+        """Encode eagerly (validates the instance) and enqueue. Returns rid.
+        ``reconstruct=True`` requests land in their own (problem, shape)
+        bucket and resolve to responses carrying a decoded solution."""
         prob = _registry.get(problem)
         spec = prob.encode(**payload)
+        if reconstruct:
+            if prob.decode is None:
+                raise ValueError(f"problem {problem!r} does not define decode()")
+            if not _reconstruct.supports_args(spec):
+                # reject at admission: drain-time failure would poison the
+                # bucket forever (solve-before-dequeue keeps it enqueued)
+                raise ValueError(
+                    f"problem {problem!r} instance has no argument structure "
+                    f"to reconstruct (op={spec.op!r} folds every lane)")
         rid = self._next_rid
         self._next_rid += 1
         key = (prob.name, spec.shape_key())
+        if reconstruct:
+            key += ("reconstruct",)
         self._buckets.setdefault(key, []).append(
-            DPRequest(rid=rid, problem=prob.name, payload=payload, spec=spec))
+            DPRequest(rid=rid, problem=prob.name, payload=payload, spec=spec,
+                      reconstruct=reconstruct))
         self.stats["submitted"] += 1
         return rid
 
@@ -79,12 +104,27 @@ class DPEngine:
         batch, rest = queue[: self.max_batch], queue[self.max_batch:]
 
         prob = _registry.get(key[0])
+        reconstruct = batch[0].reconstruct
         specs = [r.spec for r in batch]
-        chosen = (_backends.get(backend) if backend
-                  else select_batch_backend(specs[0]))
-        # solve BEFORE dequeuing: a failed batch (bad backend override,
-        # transient device error) must not lose requests
-        tables = batch_solve_specs(specs, backend=chosen.name)
+        # solve, traceback and decode all run BEFORE dequeuing: a failed
+        # batch (bad backend override, transient device error, a decode bug)
+        # must not lose requests
+        chosen = _routing.resolve_backend(specs[0], backend, batch=True,
+                                          reconstruct=reconstruct)
+        source = None
+        if reconstruct:
+            tables, argss, source = _routing.run_batch_with_args(chosen, specs)
+            answers = _reconstruct.reconstruct_batch(prob, specs, tables,
+                                                     argss, source)
+        else:
+            tables = _routing.run_batch(chosen, specs)
+            answers = [None] * len(batch)
+        responses = [DPResponse(rid=r.rid, problem=r.problem,
+                                answer=prob.extract(t, r.spec),
+                                backend=chosen.name, batch_size=len(batch),
+                                solution=ans)
+                     for r, t, ans in zip(batch, tables, answers)]
+
         if rest:
             self._buckets[key] = rest
         else:
@@ -92,10 +132,11 @@ class DPEngine:
         self.stats["device_batches"] += 1
         self.stats["completed"] += len(batch)
         self.stats["batched_requests"] += len(batch) if len(batch) > 1 else 0
-        return [DPResponse(rid=r.rid, problem=r.problem,
-                           answer=prob.extract(t, r.spec),
-                           backend=chosen.name, batch_size=len(batch))
-                for r, t in zip(batch, tables)]
+        if reconstruct:
+            counter = ("device_tracebacks" if source == "device"
+                       else "host_tracebacks")
+            self.stats[counter] += len(batch)
+        return responses
 
     def run(self, backend: Optional[str] = None) -> dict:
         """Drain every bucket; returns {rid: DPResponse}."""

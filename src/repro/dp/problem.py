@@ -108,6 +108,49 @@ class TriangularSpec:
 Spec = Union[LinearSpec, TriangularSpec]
 
 
+# --- reconstruction vocabulary ---------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LinearPath:
+    """Argument walk over a linear table, in traceback order (start cell
+    first, strictly decreasing). ``cells[t]`` took lane ``lanes[t]``, i.e. its
+    winning predecessor is ``cells[t] - offsets[lanes[t]]``; ``stop`` is the
+    preset init cell the walk terminated in."""
+
+    cells: np.ndarray
+    lanes: np.ndarray
+    stop: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TriangularPath:
+    """Split tree of a triangular table as a ``(m, 3)`` preorder array of
+    internal nodes ``(i, d, e)``: cell ``(i, i+d)`` split at ``s = i + e``
+    into children ``(i, e)`` and ``(i+e+1, d-e-1)``."""
+
+    nodes: np.ndarray
+
+
+Path = Union[LinearPath, TriangularPath]
+
+
+@dataclasses.dataclass(frozen=True)
+class Answer:
+    """A solved instance with its reconstructed solution.
+
+    ``value`` is exactly what the scalar ``extract`` path returns; ``solution``
+    is the problem-level structure produced by ``DPProblem.decode`` (tree,
+    alignment, state path, …); ``table``/``args`` are the linearized cost and
+    argument tables; ``source`` records where the args came from: ``"device"``
+    (arg-emitting solver) or ``"host"`` (numpy fallback from the cost table).
+    """
+
+    value: Any
+    solution: Any
+    table: np.ndarray
+    args: np.ndarray
+    source: str
+
+
 @dataclasses.dataclass(frozen=True)
 class DPProblem:
     """One zoo entry.
@@ -117,6 +160,11 @@ class DPProblem:
                                       the full linearized table
     extract(table, spec) -> Any       the problem-level answer from a table
     sample(rng, size) -> dict         random instance kwargs (tests/benches)
+    decode(table, args, spec, path)   structured solution from the arg
+                                      traceback (None: no reconstruction)
+    start(table, spec) -> int         traceback start cell for linear
+                                      problems whose optimum is not the last
+                                      cell (None: default, table[-1])
     """
 
     name: str
@@ -126,6 +174,8 @@ class DPProblem:
     extract: Callable[[np.ndarray, Spec], Any]
     sample: Callable[[np.random.Generator, int], dict]
     doc: str = ""
+    decode: Optional[Callable[[np.ndarray, np.ndarray, Spec, Path], Any]] = None
+    start: Optional[Callable[[np.ndarray, Spec], int]] = None
 
     def solve_reference(self, **instance) -> Any:
         """Oracle answer for an instance (tests and the engine's self-check)."""

@@ -1,0 +1,163 @@
+"""Solution reconstruction: arg tables → tracebacks → decoded answers.
+
+The solve contract (DESIGN.md §5) has three stages:
+
+  1. *args* — the per-cell winning argument (lane index for linear specs,
+     split offset for triangular ones). Arg-capable backends emit it device-
+     side alongside the cost table (``Backend.run_with_args``); for routes
+     that only return costs, :func:`args_from_table` recovers it on the host
+     by re-ranking each cell's candidates against the finished table.
+  2. *path* — the argument structure actually used by the optimum: a lane
+     walk (:class:`LinearPath`) or a split tree in preorder
+     (:class:`TriangularPath`). :func:`traceback_batch` walks a whole
+     same-shape batch in ONE jitted vmapped ``lax.scan`` when the args came
+     from the device, and falls back to per-instance host walks otherwise.
+  3. *decode* — ``DPProblem.decode(table, args, spec, path)`` turns the path
+     into the problem-level answer (parenthesization tree, alignment ops,
+     state path, item multiset, …); :func:`reconstruct_one` wraps it all in
+     an :class:`Answer`.
+
+Traceback programs are cached per shape and append a
+``("traceback", geometry, …)`` entry to ``backends.TRACE_LOG`` at trace time,
+so tests can assert the one-program-per-bucket property for reconstruction
+exactly as they do for solves.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.dp import backends as _backends
+from repro.dp.problem import (Answer, DPProblem, LinearPath, Path, Spec,
+                              TriangularPath)
+
+_TRACEBACK_CACHE: dict = {}
+
+
+def supports_args(spec: Spec) -> bool:
+    """Whether argument tracking is defined for this spec. Triangular specs
+    always reduce by min; linear specs need a selective semigroup (min/max —
+    op="add" folds every lane, so there is no winning argument)."""
+    return spec.geometry == "triangular" or spec.op in ("min", "max")
+
+
+def args_from_table(table: np.ndarray, spec: Spec) -> np.ndarray:
+    """Numpy fallback: winning-argument table recomputed from a finished cost
+    table (backends that only return costs)."""
+    if spec.geometry == "linear":
+        from repro.core.sdp import linear_args_np
+
+        return linear_args_np(table, spec.offsets, spec.op,
+                              weights=spec.weights)
+    from repro.core.mcm import triangular_args_np
+
+    return triangular_args_np(table, spec.weights, spec.n)
+
+
+def start_cell(prob: DPProblem, table: np.ndarray, spec: Spec) -> int:
+    """Linear traceback entry point: the problem's ``start`` hook (e.g.
+    Viterbi's argmax over the last trellis row) or the last cell."""
+    if prob.start is not None:
+        return int(prob.start(table, spec))
+    return spec.n - 1
+
+
+def traceback_host(args: np.ndarray, spec: Spec, start: int = -1) -> Path:
+    """Per-instance host walk (numpy)."""
+    if spec.geometry == "linear":
+        from repro.core.sdp import linear_traceback_np
+
+        cells, lanes, stop = linear_traceback_np(
+            args, spec.offsets, start if start >= 0 else spec.n - 1)
+        return LinearPath(cells=cells, lanes=lanes, stop=int(stop))
+    from repro.core.mcm import triangular_traceback_np
+
+    return TriangularPath(nodes=triangular_traceback_np(args, spec.n))
+
+
+def traceback_batch(argss: Sequence[np.ndarray], spec0: Spec,
+                    starts: Optional[Sequence[int]] = None) -> list:
+    """Device-side batched traceback: one jitted vmapped scan walks every arg
+    table of a same-shape batch. The callable is cached per shape; tracing
+    appends a ``("traceback", …)`` entry to ``backends.TRACE_LOG``."""
+    import jax
+    import jax.numpy as jnp
+
+    if spec0.geometry == "linear":
+        from repro.core.sdp import linear_traceback
+
+        key = ("traceback", "linear", spec0.offsets, spec0.n)
+        if key not in _TRACEBACK_CACHE:
+            offsets, n = spec0.offsets, spec0.n
+
+            def call(args_b, starts_b):
+                _backends.TRACE_LOG.append(key)
+                return jax.vmap(
+                    lambda a, s: linear_traceback(a, offsets, n, s)
+                )(args_b, starts_b)
+
+            _TRACEBACK_CACHE[key] = jax.jit(call)
+        if starts is None:
+            starts = [spec0.n - 1] * len(argss)
+        cells, lanes, valid, stop = _TRACEBACK_CACHE[key](
+            jnp.stack([jnp.asarray(a) for a in argss]),
+            jnp.asarray(np.asarray(starts, dtype=np.int32)))
+        cells, lanes = np.asarray(cells), np.asarray(lanes)
+        valid, stop = np.asarray(valid), np.asarray(stop)
+        return [LinearPath(cells=cells[b][valid[b]], lanes=lanes[b][valid[b]],
+                           stop=int(stop[b]))
+                for b in range(len(argss))]
+
+    from repro.core.mcm import triangular_traceback
+
+    key = ("traceback", "triangular", spec0.n)
+    if key not in _TRACEBACK_CACHE:
+        n = spec0.n
+
+        def call(args_b):
+            _backends.TRACE_LOG.append(key)
+            return jax.vmap(lambda a: triangular_traceback(a, n))(args_b)
+
+        _TRACEBACK_CACHE[key] = jax.jit(call)
+    ii, dd, ee = _TRACEBACK_CACHE[key](
+        jnp.stack([jnp.asarray(a) for a in argss]))
+    nodes = np.stack([np.asarray(ii), np.asarray(dd), np.asarray(ee)], axis=2)
+    return [TriangularPath(nodes=nodes[b].astype(np.int64))
+            for b in range(len(argss))]
+
+
+def reconstruct_one(prob: DPProblem, spec: Spec, table: np.ndarray,
+                    args: np.ndarray, source: str,
+                    path: Optional[Path] = None) -> Answer:
+    """Assemble an :class:`Answer`; runs a host traceback when no path is
+    supplied (the batched engine path passes device-walked paths in)."""
+    if prob.decode is None:
+        raise NotImplementedError(
+            f"problem {prob.name!r} does not define decode()")
+    if path is None:
+        start = start_cell(prob, table, spec) if spec.geometry == "linear" else -1
+        path = traceback_host(args, spec, start)
+    solution = prob.decode(table, args, spec, path)
+    return Answer(value=prob.extract(table, spec), solution=solution,
+                  table=table, args=args, source=source)
+
+
+def reconstruct_batch(prob: DPProblem, specs: Sequence[Spec],
+                      tables: Sequence[np.ndarray],
+                      argss: Sequence[np.ndarray], source: str) -> list:
+    """Batch assembly. Device-sourced args are walked by ONE vmapped
+    traceback program; host-sourced args fall back to host walks."""
+    spec0 = specs[0]
+    if source == "device":
+        starts = None
+        if spec0.geometry == "linear":
+            starts = [start_cell(prob, t, s) for t, s in zip(tables, specs)]
+        paths = traceback_batch(argss, spec0, starts)
+    else:
+        paths = [traceback_host(a, s,
+                                start_cell(prob, t, s)
+                                if s.geometry == "linear" else -1)
+                 for a, s, t in zip(argss, specs, tables)]
+    return [reconstruct_one(prob, s, t, a, source, path=p)
+            for s, t, a, p in zip(specs, tables, argss, paths)]

@@ -7,6 +7,17 @@ returns the cheapest; ``solve`` / ``solve_spec`` execute the choice;
 ``batch_solve`` stacks B same-shape instances and issues ONE jitted
 vmapped device call (falling back to a loop only when the chosen backend
 has no batch path — e.g. the host-side table-building MCM pipeline).
+
+Reconstruction (``reconstruct=True``) threads the arg-tracking contract
+through the same routes: dispatch prefers arg-capable backends (those with
+``run_with_args``), and ``solve``/``batch_solve`` return :class:`Answer`
+objects carrying the decoded solution next to the cost optimum. Backends
+without arg output still reconstruct via the numpy from-the-cost-table
+fallback in ``repro.dp.reconstruct``.
+
+Validation happens once per call: an explicit ``backend=`` override is
+checked against the spec here, while a dispatched backend is trusted —
+``backends.candidates`` already ran ``supports()`` on it.
 """
 from __future__ import annotations
 
@@ -15,6 +26,7 @@ from typing import Optional, Sequence, Union
 import numpy as np
 
 from repro.dp import backends as _backends
+from repro.dp import reconstruct as _reconstruct
 from repro.dp import registry as _registry
 from repro.dp.problem import DPProblem, Spec
 
@@ -23,8 +35,11 @@ def _resolve(problem: Union[str, DPProblem]) -> DPProblem:
     return _registry.get(problem) if isinstance(problem, str) else problem
 
 
-def dispatch(spec_or_problem, **instance) -> _backends.Backend:
-    """Cheapest supporting backend for a spec (or a problem + instance)."""
+def dispatch(spec_or_problem, reconstruct: bool = False,
+             **instance) -> _backends.Backend:
+    """Cheapest supporting backend for a spec (or a problem + instance).
+    With ``reconstruct`` the cheapest *arg-capable* route wins when one
+    exists (host-fallback reconstruction costs an extra table re-rank)."""
     if isinstance(spec_or_problem, (str, DPProblem)) or instance:
         spec = _resolve(spec_or_problem).encode(**instance)
     else:
@@ -32,51 +47,98 @@ def dispatch(spec_or_problem, **instance) -> _backends.Backend:
     cands = _backends.candidates(spec)
     if not cands:
         raise RuntimeError(f"no backend supports spec {spec.shape_key()}")
+    if reconstruct and _reconstruct.supports_args(spec):
+        arg_capable = [b for b in cands if b.run_with_args is not None]
+        if arg_capable:
+            return arg_capable[0]
     return cands[0]
+
+
+def select_batch_backend(spec: Spec,
+                         reconstruct: bool = False) -> _backends.Backend:
+    """Cheapest supporting backend, preferring ones that can batch the
+    whole group in one device call (and, under ``reconstruct``, ones that
+    emit arg tables device-side)."""
+    cands = _backends.candidates(spec)
+    if not cands:
+        raise RuntimeError(f"no backend supports spec {spec.shape_key()}")
+    if reconstruct and _reconstruct.supports_args(spec):
+        for pool in ([c for c in cands if c.batch_run_with_args is not None],
+                     [c for c in cands if c.run_with_args is not None]):
+            if pool:
+                return pool[0]
+    batchable = [c for c in cands if c.batch_run is not None]
+    return batchable[0] if batchable else cands[0]
+
+
+def resolve_backend(spec: Spec, backend=None, batch: bool = False,
+                    reconstruct: bool = False) -> _backends.Backend:
+    """Resolve a route exactly once: dispatch (already validated by
+    ``candidates()``) or an explicit override (validated here)."""
+    if backend is None:
+        return (select_batch_backend(spec, reconstruct=reconstruct) if batch
+                else dispatch(spec, reconstruct=reconstruct))
+    b = backend if isinstance(backend, _backends.Backend) else _backends.get(backend)
+    if not (b.geometry == spec.geometry and b.supports(spec)):
+        raise ValueError(f"backend {b.name!r} does not support this spec")
+    return b
 
 
 def solve_spec(spec: Spec, backend: Optional[str] = None) -> np.ndarray:
     """Solve one canonical spec; returns the full linearized table."""
-    b = _backends.get(backend) if backend else dispatch(spec)
-    if not (b.geometry == spec.geometry and b.supports(spec)):
-        raise ValueError(f"backend {b.name!r} does not support this spec")
-    return b.run(spec)
+    return resolve_backend(spec, backend).run(spec)
+
+
+def run_with_args(b: _backends.Backend, spec: Spec):
+    """Execute a resolved route with arg tracking. Returns
+    ``(table, args, source)`` — device-emitted args when the backend can,
+    numpy fallback from the cost table otherwise."""
+    if b.run_with_args is not None and _reconstruct.supports_args(spec):
+        table, args = b.run_with_args(spec)
+        return table, args, "device"
+    table = b.run(spec)
+    return table, _reconstruct.args_from_table(table, spec), "host"
+
+
+def solve_spec_with_args(spec: Spec, backend: Optional[str] = None):
+    """Solve one spec with arg tracking; returns ``(table, args, source)``."""
+    return run_with_args(resolve_backend(spec, backend, reconstruct=True), spec)
 
 
 def solve(problem: Union[str, DPProblem], backend: Optional[str] = None,
-          **instance):
-    """Encode an instance, route it, and return the problem-level answer."""
+          reconstruct: bool = False, **instance):
+    """Encode an instance, route it, and return the problem-level answer —
+    a plain ``extract`` value, or a full :class:`Answer` under
+    ``reconstruct=True``."""
     prob = _resolve(problem)
     spec = prob.encode(**instance)
-    return prob.extract(solve_spec(spec, backend=backend), spec)
+    if not reconstruct:
+        return prob.extract(solve_spec(spec, backend=backend), spec)
+    table, args, source = solve_spec_with_args(spec, backend=backend)
+    return _reconstruct.reconstruct_one(prob, spec, table, args, source)
 
 
-def batch_solve(problem: Union[str, DPProblem],
-                instances: Sequence[dict],
-                backend: Optional[str] = None) -> list:
-    """Solve B instances of one problem. All instances must share a
-    shape_key (the engine's bucketing guarantees this); the whole batch is
-    one vmapped device call on the selected backend."""
-    prob = _resolve(problem)
-    specs = [prob.encode(**kw) for kw in instances]
-    if not specs:
-        return []
-    keys = {s.shape_key() for s in specs}
-    if len(keys) > 1:
-        raise ValueError(f"heterogeneous batch: {sorted(keys)}; "
-                         "bucket by shape_key first (see DPEngine)")
-    tables = batch_solve_specs(specs, backend=backend)
-    return [prob.extract(t, s) for t, s in zip(tables, specs)]
+def run_batch(b: _backends.Backend, specs: Sequence[Spec]) -> list:
+    """Execute a resolved route over a homogeneous batch."""
+    if b.batch_run is not None:
+        return b.batch_run(list(specs))
+    return [b.run(s) for s in specs]
 
 
-def select_batch_backend(spec: Spec) -> _backends.Backend:
-    """Cheapest supporting backend, preferring ones that can batch the
-    whole group in one device call."""
-    cands = _backends.candidates(spec)
-    if not cands:
-        raise RuntimeError(f"no backend supports spec {spec.shape_key()}")
-    batchable = [c for c in cands if c.batch_run is not None]
-    return batchable[0] if batchable else cands[0]
+def run_batch_with_args(b: _backends.Backend, specs: Sequence[Spec]):
+    """Batched :func:`run_with_args`; returns ``(tables, argss, source)``."""
+    specs = list(specs)
+    if _reconstruct.supports_args(specs[0]):
+        if b.batch_run_with_args is not None:
+            tables, argss = b.batch_run_with_args(specs)
+            return tables, argss, "device"
+        if b.run_with_args is not None:
+            pairs = [b.run_with_args(s) for s in specs]
+            return [t for t, _ in pairs], [a for _, a in pairs], "device"
+    tables = run_batch(b, specs)
+    argss = [_reconstruct.args_from_table(t, s)
+             for t, s in zip(tables, specs)]
+    return tables, argss, "host"
 
 
 def batch_solve_specs(specs: Sequence[Spec],
@@ -85,13 +147,38 @@ def batch_solve_specs(specs: Sequence[Spec],
     specs = list(specs)
     if not specs:
         return []
-    spec0 = specs[0]
-    if backend:
-        b = _backends.get(backend)
-        if not (b.geometry == spec0.geometry and b.supports(spec0)):
-            raise ValueError(f"backend {b.name!r} does not support this spec")
-    else:
-        b = select_batch_backend(spec0)
-    if b.batch_run is not None:
-        return b.batch_run(list(specs))
-    return [b.run(s) for s in specs]
+    return run_batch(resolve_backend(specs[0], backend, batch=True), specs)
+
+
+def batch_solve_specs_with_args(specs: Sequence[Spec],
+                                backend: Optional[str] = None):
+    """Batched arg-tracking solve; returns ``(tables, argss, source)``."""
+    specs = list(specs)
+    if not specs:
+        return [], [], "device"
+    b = resolve_backend(specs[0], backend, batch=True, reconstruct=True)
+    return run_batch_with_args(b, specs)
+
+
+def batch_solve(problem: Union[str, DPProblem],
+                instances: Sequence[dict],
+                backend: Optional[str] = None,
+                reconstruct: bool = False) -> list:
+    """Solve B instances of one problem. All instances must share a
+    shape_key (the engine's bucketing guarantees this); the whole batch is
+    one vmapped device call on the selected backend. Under ``reconstruct``
+    the return is a list of :class:`Answer` and the traceback of the whole
+    bucket is one additional vmapped device call."""
+    prob = _resolve(problem)
+    specs = [prob.encode(**kw) for kw in instances]
+    if not specs:
+        return []
+    keys = {s.shape_key() for s in specs}
+    if len(keys) > 1:
+        raise ValueError(f"heterogeneous batch: {sorted(keys)}; "
+                         "bucket by shape_key first (see DPEngine)")
+    if not reconstruct:
+        tables = batch_solve_specs(specs, backend=backend)
+        return [prob.extract(t, s) for t, s in zip(tables, specs)]
+    tables, argss, source = batch_solve_specs_with_args(specs, backend=backend)
+    return _reconstruct.reconstruct_batch(prob, specs, tables, argss, source)

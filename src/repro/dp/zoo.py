@@ -64,11 +64,21 @@ def _sdp_sample(rng, size):
     }
 
 
+def _sdp_decode(table, args, spec, path):
+    """The witness chain of the last cell: which offset each visited cell
+    took, ending in the preset init cell that the optimum flows from (for
+    min/max semigroups, ST[n-1] == init[terminal])."""
+    offs = np.asarray(spec.offsets)
+    return {"cells": [int(c) for c in path.cells],
+            "offsets_taken": [int(o) for o in offs[path.lanes]],
+            "terminal": int(path.stop)}
+
+
 register(DPProblem(
     name="sdp", geometry="linear",
     encode=_sdp_encode, oracle=_sdp_oracle,
     extract=lambda table, spec: table,
-    sample=_sdp_sample,
+    sample=_sdp_sample, decode=_sdp_decode,
     doc="Definition-1 S-DP: ST[i] = ⊗_j ST[i-a_j]; answer = full table."))
 
 
@@ -120,11 +130,35 @@ def _edit_sample(rng, size):
     return {"x": rng.integers(0, 4, size=m), "y": rng.integers(0, 4, size=c)}
 
 
+def _edit_decode(table, args, spec, path):
+    """Alignment script x→y in forward order: ('match'|'sub', i, j),
+    ('del', i), ('ins', j) with 0-based sequence positions. The walk covers
+    the grid down to the preset region; the terminal init cell contributes
+    the leading column-0/row-0 ops."""
+    W = int(spec.offsets[1])               # grid row width = |y| + 1
+    ops = []
+    for c, lane in zip(path.cells[::-1], path.lanes[::-1]):
+        i, j = divmod(int(c), W)
+        if lane == 0:
+            kind = "match" if spec.weights[int(c), 0] == 0.0 else "sub"
+            ops.append((kind, i - 1, j - 1))
+        elif lane == 1:
+            ops.append(("del", i - 1))
+        else:
+            ops.append(("ins", j - 1))
+    stop = int(path.stop)
+    if stop == W:                          # cell (1, 0): x[0] still unmatched
+        lead = [("del", 0)]
+    else:                                  # cell (0, j0): y[:j0] inserted
+        lead = [("ins", t) for t in range(stop)]
+    return {"ops": lead + ops, "cost": float(table[-1])}
+
+
 register(DPProblem(
     name="edit_distance", geometry="linear",
     encode=_edit_encode, oracle=_edit_oracle,
     extract=lambda table, spec: float(table[-1]),
-    sample=_edit_sample,
+    sample=_edit_sample, decode=_edit_decode,
     doc="Levenshtein distance; grid linearized row-major, inf-masked lanes."))
 
 
@@ -169,11 +203,23 @@ def _lcs_oracle(x, y):
     return L.reshape(-1)
 
 
+def _lcs_decode(table, args, spec, path):
+    """The common subsequence as (i, j) index pairs into x and y, in forward
+    order — the diagonal steps whose match weight (+1) won the cell."""
+    W = int(spec.offsets[1])
+    pairs = []
+    for c, lane in zip(path.cells[::-1], path.lanes[::-1]):
+        if lane == 0 and spec.weights[int(c), 0] == 1.0:
+            i, j = divmod(int(c), W)
+            pairs.append((i - 1, j - 1))
+    return {"pairs": pairs, "length": float(table[-1])}
+
+
 register(DPProblem(
     name="lcs", geometry="linear",
     encode=_lcs_encode, oracle=_lcs_oracle,
     extract=lambda table, spec: float(table[-1]),
-    sample=_edit_sample,
+    sample=_edit_sample, decode=_lcs_decode,
     doc="Longest common subsequence; max-plus grid linearization."))
 
 
@@ -238,11 +284,44 @@ def _viterbi_sample(rng, size):
     }
 
 
+def _viterbi_start(table, spec):
+    """Traceback enters at the best end state of the last trellis row, not at
+    the last linear cell."""
+    S = (int(spec.offsets[0]) + 1) // 2
+    return spec.n - S + int(np.argmax(np.asarray(table[-S:], dtype=np.float64)))
+
+
+def _viterbi_decode(table, args, spec, path):
+    """The maximum-likelihood state path, length T. Rows 0/1 sit (partly) in
+    the preset init region; their states are recovered from the init values
+    and the row-1 transition weights the encoder laid down."""
+    S = (int(spec.offsets[0]) + 1) // 2
+    T = spec.n // S
+    states = np.full(T, -1, dtype=np.int64)
+    for c in path.cells:                   # visited cell (t, s) = divmod(c, S)
+        states[int(c) // S] = int(c) % S
+    stop = int(path.stop)
+    if stop >= S:                          # walk ended inside trellis row 1
+        s1 = stop - S
+        states[1] = s1
+        # cell (1, s1) reads row 0 through lanes l = S-1-s1+s0; the emit term
+        # inside w is constant over s0, so the argmax is the transition argmax
+        s0 = np.arange(S)
+        cand = (np.asarray(spec.init[:S], dtype=np.float64)
+                + np.asarray(spec.weights[S + s1, S - 1 - s1 + s0],
+                             dtype=np.float64))
+        states[0] = int(np.argmax(cand))
+    else:                                  # walk ended in trellis row 0
+        states[0] = stop
+    return {"states": states.tolist(),
+            "log_prob": float(np.max(np.asarray(table[-S:], dtype=np.float64)))}
+
+
 register(DPProblem(
     name="viterbi", geometry="linear",
     encode=_viterbi_encode, oracle=_viterbi_oracle,
     extract=lambda table, spec: float(np.max(table[-(len(spec.init) + 1) // 2:])),
-    sample=_viterbi_sample,
+    sample=_viterbi_sample, decode=_viterbi_decode, start=_viterbi_start,
     doc="HMM max-likelihood path score; trellis rows as weighted S-DP."))
 
 
@@ -301,12 +380,47 @@ def _knapsack_sample(rng, size):
     }
 
 
+def _knapsack_decode(table, args, spec, path):
+    """The chosen item multiset as (weight, value) pairs. Lane j of the
+    encoding is "take the best item of weight a_j" when its constant value is
+    positive, and pure slack otherwise; the preset prefix (capacities below
+    a_1) is unrolled with the same lane argbest on the init values."""
+    offs = np.asarray(spec.offsets, dtype=np.int64)
+    lane_val = np.asarray(spec.weights[0], dtype=np.float64)  # constant rows
+    items = []
+    for lane in path.lanes:
+        if lane_val[int(lane)] > 0.0:
+            items.append((int(offs[int(lane)]), float(lane_val[int(lane)])))
+    cc = int(path.stop)
+    init = np.asarray(spec.init, dtype=np.float64)
+    while cc > 0:
+        cand = np.where(offs <= cc,
+                        init[np.clip(cc - offs, 0, len(init) - 1)] + lane_val,
+                        -np.inf)
+        j = int(np.argmax(cand))
+        if lane_val[j] > 0.0:
+            items.append((int(offs[j]), float(lane_val[j])))
+        cc -= int(offs[j])
+    items.sort()
+    return {"items": items,
+            "total_weight": int(sum(w for w, _ in items)),
+            "total_value": float(sum(v for _, v in items))}
+
+
 register(DPProblem(
     name="unbounded_knapsack", geometry="linear",
     encode=_knapsack_encode, oracle=_knapsack_oracle,
     extract=lambda table, spec: float(table[-1]),
-    sample=_knapsack_sample,
+    sample=_knapsack_sample, decode=_knapsack_decode,
     doc="Unbounded knapsack; per-lane constant max-plus weights."))
+
+
+# ===========================================================================
+# Triangular decode helpers: the preorder split-tree path as a lookup table
+# ===========================================================================
+def _split_map(path) -> dict:
+    """{(i, d): e} for every internal node of the traceback's split tree."""
+    return {(int(i), int(d)): int(e) for i, d, e in path.nodes}
 
 
 # ===========================================================================
@@ -326,12 +440,34 @@ def _mcm_sample(rng, size):
     return {"dims": rng.integers(1, 30, size=n + 1).astype(np.float64)}
 
 
+def _mcm_render(tree) -> str:
+    if isinstance(tree, int):
+        return f"A{tree}"
+    return f"({_mcm_render(tree[0])}·{_mcm_render(tree[1])})"
+
+
+def _mcm_decode(table, args, spec, path):
+    """Optimal parenthesization as a nested (left, right) tuple tree with
+    matrix indices at the leaves, plus a rendered product string."""
+    split = _split_map(path)
+
+    def build(i, d):
+        if d == 0:
+            return i
+        e = split[(i, d)]
+        return (build(i, e), build(i + e + 1, d - e - 1))
+
+    tree = build(0, spec.n - 1)
+    return {"tree": tree, "string": _mcm_render(tree),
+            "cost": float(table[-1])}
+
+
 register(DPProblem(
     name="mcm", geometry="triangular",
     encode=_mcm_encode,
     oracle=lambda dims: _mcm.reference_linear(dims),
     extract=lambda table, spec: float(table[-1]),
-    sample=_mcm_sample,
+    sample=_mcm_sample, decode=_mcm_decode,
     doc="Matrix-chain multiplication; min scalar-multiplication count."))
 
 
@@ -371,11 +507,27 @@ def _bst_oracle(freq):
     return st
 
 
+def _bst_decode(table, args, spec, path):
+    """The optimal tree as nested ``(root_key, left, right)`` tuples (None =
+    empty subtree); cell (i, i+d) covers keys i..i+d-1, split e roots it at
+    key i+e."""
+    split = _split_map(path)
+
+    def build(i, d):
+        if d == 0:
+            return None
+        e = split[(i, d)]
+        return (i + e, build(i, e), build(i + e + 1, d - e - 1))
+
+    return {"tree": build(0, spec.n - 1), "cost": float(table[-1])}
+
+
 register(DPProblem(
     name="optimal_bst", geometry="triangular",
     encode=_bst_encode, oracle=_bst_oracle,
     extract=lambda table, spec: float(table[-1]),
     sample=lambda rng, size: {"freq": rng.random(max(2, int(size))) + 0.01},
+    decode=_bst_decode,
     doc="Optimal BST expected search cost (CLRS 15.5, key frequencies only)."))
 
 
@@ -410,9 +562,20 @@ def _poly_oracle(vertices):
     return st
 
 
+def _poly_decode(table, args, spec, path):
+    """The triangle fan as (a, b, c) vertex-index triples: chain cell
+    (i, i+d) spans vertices i..i+d+1, and split e cuts off triangle
+    (i, i+e+1, i+d+1). An (n+1)-gon yields exactly n-1 triangles."""
+    triangles = [(int(i), int(i + e + 1), int(i + d + 1))
+                 for i, d, e in path.nodes]
+    triangles.sort()
+    return {"triangles": triangles, "cost": float(table[-1])}
+
+
 register(DPProblem(
     name="polygon_triangulation", geometry="triangular",
     encode=_poly_encode, oracle=_poly_oracle,
     extract=lambda table, spec: float(table[-1]),
     sample=lambda rng, size: {"vertices": rng.integers(1, 20, size=max(3, int(size))).astype(np.float64)},
+    decode=_poly_decode,
     doc="Min-cost convex polygon triangulation (vertex-weight product cost)."))

@@ -28,7 +28,13 @@ def _kernel_blocked_cost(spec) -> float:
     return base * (0.5 if on_kernel_path else 1.25)
 
 
+# Arg tracking rides the jnp blocked solver: the Pallas kernel emits costs
+# only, and the arg table's argmin shares the kernel's gather structure, so
+# the jnp variant is the honest capability to advertise on every platform.
+from repro.core.sdp import solve_blocked_with_args as _blocked_args  # noqa: E402
+
 _dp_backends.register(_dp_backends.linear_backend(
     "kernel_blocked", ops.sdp_blocked, cost=_kernel_blocked_cost,
+    jax_arg_fn=_blocked_args,
     doc="ops.sdp_blocked: Pallas VMEM-resident pipeline on TPU, "
         "jnp blocked solver elsewhere"))

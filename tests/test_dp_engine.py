@@ -87,3 +87,77 @@ def test_engine_backend_override():
     assert out[rid].backend == "mcm_pipeline"
     assert out[rid].answer == pytest.approx(
         dp.get_problem("mcm").solve_reference(**kw), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Failure semantics: the solve-before-dequeue invariant — a failed step must
+# never lose admitted requests
+# ---------------------------------------------------------------------------
+def test_engine_bad_backend_override_keeps_queue_intact():
+    rng = np.random.default_rng(5)
+    eng = dp.DPEngine(max_batch=8)
+    for _ in range(3):
+        eng.submit("mcm", **_mcm_kw(rng, 6))
+    with pytest.raises(KeyError):
+        eng.step(backend="no_such_backend")
+    assert eng.pending() == 3
+    with pytest.raises(ValueError):
+        eng.step(backend="pipeline")        # linear route, triangular bucket
+    assert eng.pending() == 3
+    assert len(eng.step()) == 3             # queue intact and drainable
+    assert eng.stats["completed"] == 3
+    assert eng.stats["device_batches"] == 1  # failed attempts don't count
+
+
+def test_engine_raising_solve_keeps_bucket_intact(monkeypatch):
+    from repro.dp import routing
+
+    rng = np.random.default_rng(6)
+    eng = dp.DPEngine(max_batch=8)
+    want = {}
+    for _ in range(4):
+        kw = _mcm_kw(rng, 7)
+        want[eng.submit("mcm", **kw)] = \
+            dp.get_problem("mcm").solve_reference(**kw)
+
+    def boom(b, specs):
+        raise RuntimeError("transient device failure")
+
+    monkeypatch.setattr(routing, "run_batch", boom)
+    with pytest.raises(RuntimeError, match="transient"):
+        eng.step()
+    assert eng.pending() == 4
+    assert eng.stats["completed"] == 0
+    monkeypatch.undo()
+    out = eng.run()                          # the same requests still resolve
+    for rid, ref in want.items():
+        assert out[rid].answer == pytest.approx(ref, rel=1e-4)
+
+
+def test_engine_multi_bucket_drain_order_and_completeness():
+    """Mixed problems: fullest-first drain, every request answered once."""
+    rng = np.random.default_rng(7)
+    eng = dp.DPEngine(max_batch=16)
+    want = {}
+    for _ in range(5):
+        kw = _mcm_kw(rng, 8)
+        want[eng.submit("mcm", **kw)] = \
+            dp.get_problem("mcm").solve_reference(**kw)
+    for _ in range(3):
+        kw = {"x": rng.integers(0, 3, size=7), "y": rng.integers(0, 3, size=7)}
+        want[eng.submit("lcs", **kw)] = \
+            dp.get_problem("lcs").solve_reference(**kw)
+    kw = {"item_weights": [2, 3], "item_values": [3.0, 5.0], "capacity": 17}
+    want[eng.submit("unbounded_knapsack", **kw)] = \
+        dp.get_problem("unbounded_knapsack").solve_reference(**kw)
+
+    order, out = [], {}
+    while eng.pending():
+        resp = eng.step()
+        assert len({r.problem for r in resp}) == 1, "one bucket per step"
+        order.append((resp[0].problem, len(resp)))
+        out.update({r.rid: r for r in resp})
+    assert order == [("mcm", 5), ("lcs", 3), ("unbounded_knapsack", 1)]
+    assert set(out) == set(want)
+    for rid, ref in want.items():
+        assert out[rid].answer == pytest.approx(ref, rel=1e-4)

@@ -1,0 +1,293 @@
+"""Reconstruction tests (DESIGN.md §5): every zoo problem's decoded solution
+must re-compute — with plain numpy, from the raw instance, sharing no code
+with the solvers — to exactly the table optimum; the numpy fallback must
+agree with device-emitted args; and engine-batched reconstruction must trace
+one solver program and one traceback program per shape bucket."""
+import zlib
+
+import numpy as np
+import pytest
+
+from repro import dp
+
+ALL_PROBLEMS = ("sdp", "edit_distance", "lcs", "viterbi", "unbounded_knapsack",
+                "mcm", "optimal_bst", "polygon_triangulation")
+
+
+# ---------------------------------------------------------------------------
+# Independent verifiers: solution + raw instance -> recomputed cost
+# ---------------------------------------------------------------------------
+def _verify_sdp(kw, ans):
+    sol = ans.solution
+    # min/max witness chain: the optimum is the init value the chain ends in
+    assert 0 <= sol["terminal"] < len(kw["init"])
+    for c, o in zip(sol["cells"], sol["offsets_taken"]):
+        assert o in kw["offsets"] and c >= len(kw["init"])
+    return float(kw["init"][sol["terminal"]]), float(ans.value[-1])
+
+
+def _verify_edit(kw, ans):
+    x, y = np.asarray(kw["x"]), np.asarray(kw["y"])
+    i = j = 0
+    cost = 0.0
+    for op in ans.solution["ops"]:
+        if op[0] in ("match", "sub"):
+            assert op[1] == i and op[2] == j
+            if op[0] == "match":
+                assert x[i] == y[j]
+            else:
+                assert x[i] != y[j]
+                cost += 1.0
+            i, j = i + 1, j + 1
+        elif op[0] == "del":
+            assert op[1] == i
+            i, cost = i + 1, cost + 1.0
+        else:
+            assert op[0] == "ins" and op[1] == j
+            j, cost = j + 1, cost + 1.0
+    assert (i, j) == (len(x), len(y)), "alignment must cover both sequences"
+    return cost, ans.value
+
+
+def _verify_lcs(kw, ans):
+    x, y = np.asarray(kw["x"]), np.asarray(kw["y"])
+    pairs = ans.solution["pairs"]
+    for (i0, j0), (i1, j1) in zip(pairs, pairs[1:]):
+        assert i0 < i1 and j0 < j1, "subsequence indices must increase"
+    for i, j in pairs:
+        assert x[i] == y[j]
+    return float(len(pairs)), ans.value
+
+
+def _verify_viterbi(kw, ans):
+    log_a, log_b = np.asarray(kw["log_a"]), np.asarray(kw["log_b"])
+    log_pi, obs = np.asarray(kw["log_pi"]), np.asarray(kw["obs"])
+    st = ans.solution["states"]
+    assert len(st) == len(obs) and all(0 <= s < len(log_pi) for s in st)
+    lp = log_pi[st[0]] + log_b[st[0], obs[0]]
+    for t in range(1, len(obs)):
+        lp += log_a[st[t - 1], st[t]] + log_b[st[t], obs[t]]
+    return float(lp), ans.value
+
+
+def _verify_knapsack(kw, ans):
+    real = {(int(w), float(v))
+            for w, v in zip(kw["item_weights"], kw["item_values"])}
+    items = ans.solution["items"]
+    for w, v in items:
+        assert any(w == rw and np.isclose(v, rv, rtol=1e-5)
+                   for rw, rv in real), (w, v)
+    assert sum(w for w, _ in items) <= int(kw["capacity"])
+    return float(sum(v for _, v in items)), ans.value
+
+
+def _mcm_tree_cost(tree, p):
+    """Cost + resulting shape of multiplying the chain per the tree."""
+    if isinstance(tree, (int, np.integer)):
+        return 0.0, (p[tree], p[tree + 1])
+    cl, (r0, c0) = _mcm_tree_cost(tree[0], p)
+    cr, (r1, c1) = _mcm_tree_cost(tree[1], p)
+    assert c0 == r1, "tree multiplies non-conforming shapes"
+    return cl + cr + r0 * c0 * c1, (r0, c1)
+
+
+def _verify_mcm(kw, ans):
+    cost, _ = _mcm_tree_cost(ans.solution["tree"], np.asarray(kw["dims"]))
+    return float(cost), ans.value
+
+
+def _verify_bst(kw, ans):
+    freq = np.asarray(kw["freq"])
+
+    def cost(node, depth):
+        if node is None:
+            return 0.0, []
+        r, left, right = node
+        cl, kl = cost(left, depth + 1)
+        cr, kr = cost(right, depth + 1)
+        return depth * freq[r] + cl + cr, kl + [r] + kr
+
+    total, inorder = cost(ans.solution["tree"], 1)
+    assert inorder == list(range(len(freq))), "inorder must be the key order"
+    return float(total), ans.value
+
+
+def _verify_poly(kw, ans):
+    v = np.asarray(kw["vertices"])
+    tris = ans.solution["triangles"]
+    assert len(tris) == len(v) - 2, "an m-gon has m-2 triangles"
+    return float(sum(v[a] * v[b] * v[c] for a, b, c in tris)), ans.value
+
+
+VERIFIERS = {
+    "sdp": _verify_sdp, "edit_distance": _verify_edit, "lcs": _verify_lcs,
+    "viterbi": _verify_viterbi, "unbounded_knapsack": _verify_knapsack,
+    "mcm": _verify_mcm, "optimal_bst": _verify_bst,
+    "polygon_triangulation": _verify_poly,
+}
+
+
+@pytest.mark.parametrize("name", sorted(ALL_PROBLEMS))
+def test_reconstructed_solution_recomputes_to_optimum(name):
+    """Acceptance: randomized instances, the decoded solution's independently
+    re-computed cost equals the table optimum (and the oracle's)."""
+    prob = dp.get_problem(name)
+    rng = np.random.default_rng(zlib.crc32(name.encode()) ^ 0xA5A5)
+    for trial in range(4):
+        kw = prob.sample(rng, int(rng.integers(6, 16)))
+        ans = dp.solve(name, reconstruct=True, **kw)
+        assert isinstance(ans, dp.Answer)
+        assert ans.source == "device", \
+            f"dispatch must prefer an arg-capable route, got {ans.source}"
+        got, want = VERIFIERS[name](kw, ans)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5,
+                                   err_msg=f"{name} trial {trial}")
+        # ... and the optimum itself matches the independent oracle
+        ref = prob.solve_reference(**kw)
+        ref = ref[-1] if name == "sdp" else ref  # sdp's answer is the table
+        np.testing.assert_allclose(np.float64(want), np.float64(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name,backend", [("mcm", "mcm_pipeline"),
+                                          ("edit_distance", "pipeline"),
+                                          ("optimal_bst", "mcm_pipeline")])
+def test_numpy_fallback_for_argless_backends(name, backend):
+    """Backends without run_with_args reconstruct through the host
+    from-the-cost-table fallback and still verify."""
+    prob = dp.get_problem(name)
+    rng = np.random.default_rng(zlib.crc32(backend.encode()))
+    kw = prob.sample(rng, 9)
+    ans = dp.solve(name, backend=backend, reconstruct=True, **kw)
+    assert ans.source == "host"
+    got, want = VERIFIERS[name](kw, ans)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_device_and_host_args_agree():
+    """The numpy fallback recovers the same winning structure the device
+    emits (cost-equivalent traceback on ties)."""
+    prob = dp.get_problem("mcm")
+    kw = prob.sample(np.random.default_rng(41), 10)
+    spec = prob.encode(**kw)
+    table, args_dev, source = dp.routing.solve_spec_with_args(spec)
+    assert source == "device"
+    args_host = dp.reconstruct.args_from_table(table, spec)
+    # argmin ties can differ; both must decode to the same optimal cost
+    for args in (args_dev, args_host):
+        path = dp.reconstruct.traceback_host(args, spec)
+        sol = prob.decode(table, args, spec, path)
+        cost, _ = _mcm_tree_cost(sol["tree"], np.asarray(kw["dims"]))
+        np.testing.assert_allclose(cost, table[-1], rtol=1e-6)
+
+
+def test_reconstruct_false_paths_unchanged():
+    """reconstruct=False returns the plain extract value — same type, same
+    value, no Answer wrapper — and dispatch is untouched by the new flag."""
+    kw = {"dims": np.array([7.0, 3.0, 11.0, 2.0, 9.0])}
+    plain = dp.solve("mcm", **kw)
+    assert isinstance(plain, float)
+    ans = dp.solve("mcm", reconstruct=True, **kw)
+    assert plain == ans.value
+    assert dp.dispatch(dp.get_problem("mcm").encode(**kw)).name == \
+        dp.routing.resolve_backend(dp.get_problem("mcm").encode(**kw)).name
+
+
+def test_add_semigroup_has_no_arguments():
+    """op='add' folds every lane — reconstruction must refuse cleanly, and
+    the engine must refuse at admission (a drain-time failure would leave an
+    undrainable bucket behind the solve-before-dequeue invariant)."""
+    kw = {"init": np.ones(3, np.float32), "offsets": (3, 1), "op": "add",
+          "n": 12}
+    with pytest.raises(ValueError, match="op='add'"):
+        dp.solve("sdp", reconstruct=True, **kw)
+    assert isinstance(dp.solve("sdp", **kw), np.ndarray)  # plain path fine
+    eng = dp.DPEngine()
+    with pytest.raises(ValueError, match="no argument structure"):
+        eng.submit("sdp", reconstruct=True, **kw)
+    assert eng.pending() == 0
+    eng.submit("sdp", **kw)                               # plain admission OK
+    assert eng.pending() == 1 and len(eng.step()) == 1
+
+
+def test_arg_table_shape_and_range():
+    prob = dp.get_problem("edit_distance")
+    kw = prob.sample(np.random.default_rng(2), 8)
+    spec = prob.encode(**kw)
+    table, args, source = dp.routing.solve_spec_with_args(spec)
+    a1 = int(spec.offsets[0])
+    assert args.shape == (spec.n,)
+    assert np.all(args[:a1] == -1)
+    assert np.all((args[a1:] >= 0) & (args[a1:] < len(spec.offsets)))
+
+
+# ---------------------------------------------------------------------------
+# Batched / engine reconstruction
+# ---------------------------------------------------------------------------
+def _trace_kinds(entries):
+    solves = [e for e in entries if e[-1] == "args" and e[0] != "traceback"]
+    walks = [e for e in entries if e[0] == "traceback"]
+    return solves, walks
+
+
+def test_batch_solve_reconstruct_traces_one_solver_and_one_walk():
+    rng = np.random.default_rng(19)
+    # distinctive shape so no other test shares these jit-cache entries
+    instances = [{"dims": rng.integers(1, 25, size=15).astype(np.float64)}
+                 for _ in range(7)]
+    before = len(dp.backends.TRACE_LOG)
+    answers = dp.batch_solve("mcm", instances, reconstruct=True)
+    solves, walks = _trace_kinds(dp.backends.TRACE_LOG[before:])
+    assert len(solves) == 1 and len(walks) == 1, dp.backends.TRACE_LOG[before:]
+    for ans, kw in zip(answers, instances):
+        cost, _ = _mcm_tree_cost(ans.solution["tree"], np.asarray(kw["dims"]))
+        np.testing.assert_allclose(cost, ans.value, rtol=1e-6)
+    # same shape again: fully cached, zero new traces
+    before = len(dp.backends.TRACE_LOG)
+    dp.batch_solve("mcm", instances, reconstruct=True)
+    assert len(dp.backends.TRACE_LOG) == before
+
+
+def test_engine_reconstruction_buckets_and_stats():
+    rng = np.random.default_rng(23)
+    eng = dp.DPEngine(max_batch=16)
+    kws = [{"x": rng.integers(0, 4, size=10), "y": rng.integers(0, 4, size=12)}
+           for _ in range(5)]
+    rids = [eng.submit("edit_distance", reconstruct=True, **kw) for kw in kws]
+    plain_rid = eng.submit("edit_distance", **kws[0])
+    # same shape, different treatment: two buckets
+    assert len(eng.bucket_sizes()) == 2
+    before = len(dp.backends.TRACE_LOG)
+    out = eng.run()
+    solves, walks = _trace_kinds(dp.backends.TRACE_LOG[before:])
+    assert len(solves) == 1 and len(walks) == 1
+    assert eng.stats["device_tracebacks"] == 5
+    assert eng.stats["host_tracebacks"] == 0
+    assert out[plain_rid].solution is None
+    for rid, kw in zip(rids, kws):
+        ans = out[rid].solution
+        assert ans is not None and ans.source == "device"
+        got, want = _verify_edit(kw, ans)
+        assert got == want == out[rid].answer
+
+
+def test_engine_host_traceback_stat():
+    rng = np.random.default_rng(29)
+    eng = dp.DPEngine(max_batch=8)
+    kws = [{"dims": rng.integers(1, 20, size=9).astype(np.float64)}
+           for _ in range(3)]
+    rids = [eng.submit("mcm", reconstruct=True, **kw) for kw in kws]
+    out = eng.run(backend="mcm_pipeline")      # cost-only route
+    assert eng.stats["host_tracebacks"] == 3
+    assert eng.stats["device_tracebacks"] == 0
+    for rid, kw in zip(rids, kws):
+        ans = out[rid].solution
+        assert ans.source == "host"
+        cost, _ = _mcm_tree_cost(ans.solution["tree"], np.asarray(kw["dims"]))
+        np.testing.assert_allclose(cost, ans.value, rtol=1e-6)
+
+
+def test_submit_reconstruct_requires_decode():
+    probs = dp.problems()
+    assert all(p.decode is not None for p in probs), \
+        "every zoo problem must be decodable"
