@@ -1,11 +1,18 @@
 """DP zoo sweep: registered problems × supporting backends × sizes.
 
 Prints ``zoo,<problem>,<backend>,<size>,<cells>,<ms>,<ok>,<dispatched>``
-CSV lines (``dispatched`` = 1 on the row the cost model routes to) and
+CSV lines (``dispatched`` = 1 on the row the dispatcher routes to) and
 writes ``BENCH_dp_zoo.json`` next to the repo root so the perf trajectory
-is recorded run-over-run. Also measures the batch-amortization ratio
-(loop of B solves vs one vmapped ``batch_solve``) per linear/triangular
-representative.
+is recorded run-over-run. Each (problem, size) cell carries a
+``dispatch_regret`` field — dispatched-ms over fastest-ms, 1.0 = routed to
+the true fastest — summarized under ``report["dispatch"]``. With
+``calibrate=True`` every cell is first measured into the autotune table
+(exact shapes) so dispatch runs measured-cost; ``check_dispatch=True``
+fails when post-calibration median regret exceeds 1.5× or any cell exceeds
+3× (suspect cells are re-timed first, so a violation is a survived
+misroute, not a one-off timer spike). Also measures the
+batch-amortization ratio (loop of B solves vs one vmapped ``batch_solve``)
+per linear/triangular representative.
 """
 from __future__ import annotations
 
@@ -20,6 +27,8 @@ from repro import dp
 SIZES = (8, 16, 32)
 BATCH = 16
 REPEATS = 3
+MEDIAN_REGRET_GATE = 1.5
+MAX_REGRET_GATE = 3.0
 
 
 def _time(fn) -> float:
@@ -32,11 +41,15 @@ def _time(fn) -> float:
     return best * 1e3
 
 
-def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None) -> dict:
+def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None,
+        calibrate: bool = False, check_dispatch: bool = False) -> dict:
+    from repro.dp import autotune
+
     sizes = sizes or SIZES
     batch = batch or BATCH
     rng = np.random.default_rng(0)
     rows = []
+    regret_cells = []
     for name in dp.problem_names():
         prob = dp.get_problem(name)
         for size in sizes:
@@ -44,17 +57,49 @@ def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None) -> dict:
             spec = prob.encode(**kw)
             table_ref = prob.oracle(**kw)
             cells = int(np.asarray(table_ref).size)
+            if calibrate:
+                # exact-shape entries first, so the dispatch below (and the
+                # regret gate) run against measured costs
+                autotune.calibrate_spec(spec, repeats=REPEATS)
             dispatched_name = dp.dispatch(spec).name
+            cell_ms = {}
+            cell_rows = {}
+            dispatched_row = None
             for b in dp.backends.candidates(spec):
                 got = dp.solve_spec(spec, backend=b.name)
                 ms = _time(lambda b=b, spec=spec: dp.solve_spec(spec, backend=b.name))
                 ok = bool(np.allclose(got, table_ref, rtol=1e-4, atol=1e-4))
                 dispatched = dispatched_name == b.name
-                rows.append({"problem": name, "backend": b.name, "size": size,
-                             "cells": cells, "ms": round(ms, 4), "ok": ok,
-                             "dispatched": dispatched})
+                cell_ms[b.name] = ms
+                row = {"problem": name, "backend": b.name, "size": size,
+                       "cells": cells, "ms": round(ms, 4), "ok": ok,
+                       "dispatched": dispatched}
+                rows.append(row)
+                cell_rows[b.name] = row
+                if dispatched:
+                    dispatched_row = row
                 print(f"zoo,{name},{b.name},{size},{cells},{ms:.4f},{int(ok)},"
                       f"{int(dispatched)}")
+            fastest_name = min(cell_ms, key=lambda n: (cell_ms[n], n))
+            regret = cell_ms[dispatched_name] / max(min(cell_ms.values()), 1e-9)
+            if regret > MEDIAN_REGRET_GATE:
+                # re-time the two contenders before declaring a misroute:
+                # sub-ms host timings spike run-to-run, and near-tied routes
+                # flip winners; keeping the per-route min damps one-off noise
+                # (the rows' ms update too, so the artifact stays consistent)
+                for nm in {dispatched_name, fastest_name}:
+                    cell_ms[nm] = min(cell_ms[nm], _time(
+                        lambda nm=nm: dp.solve_spec(spec, backend=nm)))
+                    cell_rows[nm]["ms"] = round(cell_ms[nm], 4)
+                fastest_name = min(cell_ms, key=lambda n: (cell_ms[n], n))
+                regret = (cell_ms[dispatched_name]
+                          / max(min(cell_ms.values()), 1e-9))
+            if dispatched_row is not None:
+                dispatched_row["dispatch_regret"] = round(regret, 3)
+            regret_cells.append({"problem": name, "size": size,
+                                 "dispatched": dispatched_name,
+                                 "fastest": fastest_name,
+                                 "dispatch_regret": round(regret, 3)})
 
     # batch amortization: loop-of-B vs one vmapped call
     batch_rows = []
@@ -71,7 +116,19 @@ def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None) -> dict:
         print(f"zoo_batch,{name},{batch},{loop_ms:.4f},{batch_ms:.4f},"
               f"{loop_ms / max(batch_ms, 1e-9):.2f}x")
 
+    regrets = [c["dispatch_regret"] for c in regret_cells]
+    median_regret = float(np.median(regrets)) if regrets else 1.0
+    max_regret = float(max(regrets)) if regrets else 1.0
+    misrouted = sum(1 for c in regret_cells if c["dispatched"] != c["fastest"])
+    print(f"zoo_dispatch,calibrated={int(calibrate)},cells={len(regret_cells)},"
+          f"misrouted={misrouted},median_regret={median_regret:.3f},"
+          f"max_regret={max_regret:.3f}")
     report = {"rows": rows, "batch": batch_rows,
+              "dispatch": {"calibrated": calibrate,
+                           "median_regret": round(median_regret, 3),
+                           "max_regret": round(max_regret, 3),
+                           "misrouted": misrouted,
+                           "cells": regret_cells},
               "problems": dp.problem_names(),
               "backends": dp.backends.names()}
     if out_path:
@@ -81,8 +138,27 @@ def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None) -> dict:
     bad = [r for r in rows if not r["ok"]]
     if bad:
         raise SystemExit(f"correctness failures in zoo sweep: {bad}")
+    if check_dispatch and (median_regret > MEDIAN_REGRET_GATE
+                           or max_regret > MAX_REGRET_GATE):
+        # cells past the median gate were already re-timed above, so a max
+        # violation here is a survived misroute, not a one-off timer spike
+        raise SystemExit(
+            f"dispatch regret gate failed: median {median_regret:.3f} "
+            f"(limit {MEDIAN_REGRET_GATE}), max {max_regret:.3f} "
+            f"(limit {MAX_REGRET_GATE}); see zoo_dispatch line above")
     return report
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure every cell into the autotune table first "
+                         "(dispatch then runs measured-cost)")
+    ap.add_argument("--check-dispatch", action="store_true",
+                    help="fail if post-calibration median regret exceeds "
+                         "1.5x or any cell exceeds 3x")
+    args = ap.parse_args()
+    run(calibrate=args.calibrate or args.check_dispatch,
+        check_dispatch=args.check_dispatch)

@@ -11,7 +11,7 @@ from __future__ import annotations
 import argparse
 
 
-def main(smoke: bool = False) -> None:
+def main(smoke: bool = False, check_dispatch: bool = False) -> None:
     from benchmarks import dp_zoo_bench, mcm_bench, roofline, table1_sdp
 
     if smoke:
@@ -25,10 +25,15 @@ def main(smoke: bool = False) -> None:
     # smoke sizes stay multiples of the blocked solver's tile (16)
     mcm_bench.run(sizes=[16, 32, 64] if smoke else None)
     print("# DP zoo — problems × backends × sizes (repro.dp)")
+    # --check-dispatch calibrates every cell first (measured-cost dispatch),
+    # then fails on post-calibration regret > gates (DESIGN.md §6)
     if smoke:
-        dp_zoo_bench.run(out_path="", sizes=(8, 12), batch=4)
+        dp_zoo_bench.run(out_path="", sizes=(8, 12), batch=4,
+                         calibrate=check_dispatch,
+                         check_dispatch=check_dispatch)
     else:
-        dp_zoo_bench.run()
+        dp_zoo_bench.run(calibrate=check_dispatch,
+                         check_dispatch=check_dispatch)
     print("# Roofline — dry-run derived terms (EXPERIMENTS.md §Roofline)")
     roofline.run()
 
@@ -36,5 +41,10 @@ def main(smoke: bool = False) -> None:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced sizes, skip perf assertions (CI gate)")
-    main(smoke=ap.parse_args().smoke)
+                    help="reduced sizes, skip speedup-threshold assertions "
+                         "(CI gate)")
+    ap.add_argument("--check-dispatch", action="store_true",
+                    help="calibrate the dp zoo cells, then gate on dispatch "
+                         "regret (median ≤ 1.5×, every cell ≤ 3×)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, check_dispatch=args.check_dispatch)

@@ -63,9 +63,27 @@ def main() -> None:
     print(f"engine: {eng.stats['completed']} requests in "
           f"{eng.stats['device_batches']} device batches "
           f"(buckets keyed by problem × shape), "
-          f"{eng.stats['device_tracebacks']} device-side traceback(s)")
+          f"{eng.stats['device_tracebacks']} device-side traceback(s), "
+          f"{eng.stats['feedback_observations']} latency observation(s) "
+          f"fed back to routing")
     print("sample responses:", {r: round(out[r].answer, 2) for r in list(out)[:3]})
     print(f"reconstructed BST root tree: {out[bst_rid].solution.solution['tree']}")
+
+    # measured-cost calibration: dispatch learns real latencies and stops
+    # trusting the step-count model where it is measurably wrong (§6)
+    dp.calibrate(problems=["viterbi", "edit_distance", "sdp"], sizes=(8, 16),
+                 repeats=2)
+    rep = dp.routing_report()
+    print(f"\ncalibration: {len(rep['shapes'])} shapes measured on "
+          f"{rep['jax_backend']}, {rep['disagreements']} analytical pick(s) "
+          f"overturned (median analytical regret "
+          f"{rep['median_analytical_regret']:.2f}x)")
+    for row in [r for r in rep["shapes"]
+                if r["comparable"] and not r["agree"]][:3]:
+        n = dp.backends.shape_key_size(row["shape_key"])
+        print(f"  n={n}: measured {row['measured_choice']} beats analytical "
+              f"{row['analytical_choice']} ({row['analytical_regret']:.1f}x "
+              f"regret avoided)")
 
 
 if __name__ == "__main__":

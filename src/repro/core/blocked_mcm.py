@@ -224,20 +224,15 @@ def _dims_match_weights(spec) -> bool:
                              digest_size=16)
     digest.update(np.ascontiguousarray(probe).tobytes())
     key = (n, digest.digest())
-    hit = _GUARD_CACHE.get(key)
-    if hit is not None:
-        _GUARD_CACHE.move_to_end(key)
-        return hit
-    fn = mcm_weight_fn(np.asarray(spec.dims))
-    if idx is None:  # full table is tiny — compare exactly
-        ok = bool(np.allclose(probe, weight_table(n, fn), rtol=1e-9))
-    else:
+
+    def check() -> bool:
+        fn = mcm_weight_fn(np.asarray(spec.dims))
+        if idx is None:  # full table is tiny — compare exactly
+            return bool(np.allclose(probe, weight_table(n, fn), rtol=1e-9))
         d, i, e = idx
-        ok = bool(np.allclose(probe, fn(i, i + e, i + d), rtol=1e-9))
-    _GUARD_CACHE[key] = ok
-    while len(_GUARD_CACHE) > _GUARD_CACHE_MAX:
-        _GUARD_CACHE.popitem(last=False)
-    return ok
+        return bool(np.allclose(probe, fn(i, i + e, i + d), rtol=1e-9))
+
+    return _dp_backends.lru_cached(_GUARD_CACHE, key, check, _GUARD_CACHE_MAX)
 
 
 _dp_backends.register(_dp_backends.Backend(

@@ -9,9 +9,13 @@ Layers (DESIGN.md §3, §5):
                 core/blocked_mcm and kernels at their import time
   zoo         — edit_distance, lcs, viterbi, unbounded_knapsack, mcm,
                 optimal_bst, polygon_triangulation, sdp (all decodable)
-  routing     — cost-model dispatch + single-call vmapped batch_solve
+  autotune    — measured-latency calibration tables; calibrate() /
+                routing_report(); the engine's online feedback sink
+  routing     — two-tier (measured > analytical) dispatch + single-call
+                vmapped batch_solve
   reconstruct — arg tables → batched tracebacks → decoded Answers
-  engine      — DPEngine: bucketed request/response serving front end
+  engine      — DPEngine: bucketed request/response serving front end,
+                folding realized drain latencies back into autotune
 
 Quickstart::
 
@@ -23,7 +27,8 @@ Quickstart::
     rids = [eng.submit("mcm", reconstruct=True, dims=d) for d in batches]
     answers = eng.run()
 """
-from repro.dp import backends, reconstruct, registry, routing, zoo  # noqa: F401
+from repro.dp import autotune, backends, reconstruct, registry, routing, zoo  # noqa: F401
+from repro.dp.autotune import calibrate, routing_report  # noqa: F401
 from repro.dp.routing import batch_solve, batch_solve_specs, dispatch, solve, solve_spec  # noqa: F401
 route = dispatch
 from repro.dp.engine import DPEngine, DPRequest, DPResponse  # noqa: F401
@@ -37,7 +42,8 @@ from repro.dp.registry import problems  # noqa: F401
 __all__ = [
     "Answer", "DPEngine", "DPProblem", "DPRequest", "DPResponse",
     "LinearPath", "LinearSpec", "Spec", "TriangularPath", "TriangularSpec",
-    "backends", "batch_solve", "batch_solve_specs", "dispatch", "route",
-    "get_problem", "problem_names", "problems", "reconstruct", "registry",
-    "routing", "solve", "solve_spec", "zoo",
+    "autotune", "backends", "batch_solve", "batch_solve_specs", "calibrate",
+    "dispatch", "route", "get_problem", "problem_names", "problems",
+    "reconstruct", "registry", "routing", "routing_report", "solve",
+    "solve_spec", "zoo",
 ]

@@ -18,18 +18,67 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import OrderedDict
 from typing import Callable, Optional
 
 import numpy as np
 
-from repro.dp.problem import LinearSpec, Spec, TriangularSpec
+from repro.dp.problem import LinearSpec, Spec, TriangularSpec, num_cells
 
 #: (backend_name, shape_key) appended every time a batched callable is traced.
+#: Bounded at :data:`TRACE_LOG_MAX` (oldest entries dropped) so a long-running
+#: engine over endless fresh shapes doesn't grow it forever.
 TRACE_LOG: list = []
+TRACE_LOG_MAX = 4096
+#: total traces ever logged — unlike ``len(TRACE_LOG)`` this keeps moving
+#: after the cap trims the list, so delta-based cold-call detection
+#: (``DPEngine``) stays sound in arbitrarily long sessions.
+TRACE_COUNT = 0
 
 _BACKENDS: dict = {}
-_BATCH_CACHE: dict = {}
+#: jit-callable cache, LRU-bounded (the blocked_mcm guard-cache pattern).
+_BATCH_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
+_BATCH_CACHE_MAX = 128
 _LOADED = False
+
+
+def log_trace(key) -> None:
+    """Record a trace event, keeping the log bounded."""
+    global TRACE_COUNT
+    TRACE_COUNT += 1
+    TRACE_LOG.append(key)
+    if len(TRACE_LOG) > TRACE_LOG_MAX:
+        del TRACE_LOG[: len(TRACE_LOG) - TRACE_LOG_MAX]
+
+
+def drain_trace_log() -> list:
+    """Snapshot and clear the trace log (tests; bounds long sessions)."""
+    out = list(TRACE_LOG)
+    TRACE_LOG.clear()
+    return out
+
+
+def lru_put(cache: "OrderedDict", key, value, max_entries: int):
+    """Insert-or-refresh on an OrderedDict used as an LRU, evicting the
+    stalest entries past ``max_entries``."""
+    cache[key] = value
+    cache.move_to_end(key)
+    while len(cache) > max_entries:
+        cache.popitem(last=False)
+    return value
+
+
+def lru_cached(cache: "OrderedDict", key, build: Callable, max_entries: int):
+    """Fetch-or-build on an OrderedDict used as an LRU: hits refresh recency,
+    inserts evict the stalest entry past ``max_entries``. Evicted jit
+    callables recompile on next use — bounded memory beats a cache that keeps
+    one compiled program per shape ever seen."""
+    fn = cache.get(key)
+    if fn is None:
+        fn = lru_put(cache, key, build(), max_entries)
+    else:
+        cache.move_to_end(key)
+    return fn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,21 +169,23 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
 
     def _batch(fn, specs, key):
         spec0 = specs[0]
-        if key not in _BATCH_CACHE:
+
+        def build():
             offsets, op, n = spec0.offsets, spec0.op, spec0.n
             if spec0.weights is None:
                 def call(inits):
-                    TRACE_LOG.append(key)
+                    log_trace(key)
                     return jax.vmap(
                         lambda i: fn(i, offsets, op, n))(inits)
             else:
                 def call(inits, weights):
-                    TRACE_LOG.append(key)
+                    log_trace(key)
                     return jax.vmap(
                         lambda i, w: fn(i, offsets, op, n, weights=w)
                     )(inits, weights)
-            _BATCH_CACHE[key] = jax.jit(call)
-        cached = _BATCH_CACHE[key]
+            return jax.jit(call)
+
+        cached = lru_cached(_BATCH_CACHE, key, build, _BATCH_CACHE_MAX)
         inits = jnp.stack([jnp.asarray(s.init) for s in specs])
         if spec0.weights is None:
             return cached(inits)
@@ -173,15 +224,16 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
         return np.asarray(jax_fn(jnp.asarray(spec.weights), spec.n))
 
     def _batch(fn, specs, key):
-        if key not in _BATCH_CACHE:
+        def build():
             n = specs[0].n
 
             def call(wtabs):
-                TRACE_LOG.append(key)
+                log_trace(key)
                 return jax.vmap(lambda w: fn(w, n))(wtabs)
 
-            _BATCH_CACHE[key] = jax.jit(call)
-        return _BATCH_CACHE[key](
+            return jax.jit(call)
+
+        return lru_cached(_BATCH_CACHE, key, build, _BATCH_CACHE_MAX)(
             jnp.stack([jnp.asarray(s.weights) for s in specs]))
 
     def batch_run(specs) -> list:
@@ -211,11 +263,14 @@ def _log2(x: float) -> float:
 
 def linear_costs(spec: LinearSpec) -> dict:
     """Step-count cost model for the linear solver family (§III of the
-    paper + DESIGN.md §3). Units are 'vectorized device steps'."""
+    paper + DESIGN.md §3). Units are 'vectorized device steps'. Every count
+    is floored at one step: a preset-only table (n ≤ a_1, constructible
+    without ``validate()``) gives ``ceil((n-a1)/B) = 0``, which let
+    ``blocked`` degenerately auto-win at cost 0."""
     n, k = spec.n, len(spec.offsets)
     a1, ak = int(spec.offsets[0]), int(spec.offsets[-1])
-    blocked_steps = math.ceil((n - a1) / max(1, min(ak, 512)))
-    return {
+    blocked_steps = max(1, math.ceil((n - a1) / max(1, min(ak, 512))))
+    costs = {
         "sequential": float(n * k),
         "tournament": float(n * (1.0 + _log2(k))),
         "pipeline": float(n + k - a1 - 1),
@@ -223,3 +278,62 @@ def linear_costs(spec: LinearSpec) -> dict:
         # log-depth scan, O(n·a1³) work spread over the vector units
         "companion_scan": _log2(n) * (a1 ** 3) / 64.0 + a1,
     }
+    return {name: max(1.0, c) for name, c in costs.items()}
+
+
+# shape-key plumbing for the calibration layer (repro.dp.autotune) ----------
+#: measurement-regime markers a calibration key may be suffixed with:
+#: ``batch`` = amortized per-instance ms observed from a vmapped bucket
+#: drain, ``reconstruct`` = the arg-emitting solve. Plain keys hold
+#: single-instance offline timings. The regimes never cross-match.
+SHAPE_KEY_REGIMES = ("batch", "reconstruct")
+
+
+def split_shape_key(key: tuple) -> tuple:
+    """``(geometric_key, regime_marker_or_None)`` of a calibration key."""
+    if key and key[-1] in SHAPE_KEY_REGIMES:
+        return key[:-1], key[-1]
+    return key, None
+
+
+def shape_key_size(key: tuple) -> int:
+    """The table length n encoded in a ``Spec.shape_key()``."""
+    key, _ = split_shape_key(key)
+    return int(key[3]) if key[0] == "linear" else int(key[1])
+
+
+def shape_key_distance(a: tuple, b: tuple) -> Optional[float]:
+    """How far apart two shape_keys are for nearest-shape calibration
+    transfer: ``None`` when a measurement cannot transfer at all — different
+    geometry, op, offsets, or weightedness (those change the traced program,
+    not just its size), or different measurement regimes (amortized batch,
+    reconstruct, and single-instance timings are incomparable) — else the
+    table-length gap ``|n_a - n_b|``."""
+    a, regime_a = split_shape_key(a)
+    b, regime_b = split_shape_key(b)
+    if regime_a != regime_b or len(a) != len(b) or a[0] != b[0]:
+        return None
+    if a[0] == "linear" and (a[1], a[2], a[4]) != (b[1], b[2], b[4]):
+        return None
+    return float(abs(shape_key_size(a) - shape_key_size(b)))
+
+
+def spec_from_shape_key(key: tuple) -> Spec:
+    """Phantom spec carrying exactly the structure the cost models read
+    (n, offsets, op, weightedness) — lets the analytical model price a
+    calibration entry's shape without the original instance, which is what
+    autotune's nearest-shape interpolation uses as its scaling prior.
+    Regime suffixes are stripped — the cost models only read the geometric
+    part."""
+    key, _ = split_shape_key(key)
+    if key[0] == "linear":
+        _, op, offsets, n, weighted = key
+        offsets = tuple(int(a) for a in offsets)
+        n, k = int(n), len(offsets)
+        return LinearSpec(
+            offsets=offsets, op=op, n=n,
+            init=np.zeros(offsets[0], np.float32),
+            weights=np.zeros((n, k), np.float32) if weighted else None)
+    n = int(key[1])
+    return TriangularSpec(
+        n=n, weights=np.zeros((num_cells(n), max(n - 1, 1)), np.float32))

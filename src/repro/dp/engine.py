@@ -13,17 +13,41 @@ batched arg-emitting solve plus ONE vmapped traceback walk for the whole
 bucket; responses then carry the decoded :class:`Answer` in ``solution``.
 ``stats`` counts how many requests reconstructed device-side vs through the
 numpy from-the-cost-table fallback.
+
+Online routing feedback (DESIGN.md §6): every warm drain's realized solve
+latency is folded into the calibration table (``repro.dp.autotune``) by EMA,
+so dispatch converges to the measured-fastest route under live traffic.
+Cold drains are skipped — compile time is not a routing signal — where cold
+means the engine has not yet run this exact (route, shape, batch size), or
+a program retraced during the call (``backends.TRACE_COUNT`` delta). Every
+``explore_every``-th drain of a bucket routes to the analytically-cheapest
+candidate not yet measured in the drain's regime, so alternates get timed
+under real batched drains; explicit ``backend=`` overrides bypass both
+mechanisms (but their realized warm latency is still recorded).
+Observations are keyed by regime — ``("batch",)`` for amortized bucket
+drains, ``("reconstruct",)`` for arg-emitting solves — and never share
+entries with single-instance offline calibration.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Any, Optional
 
+from repro.dp import autotune as _autotune
+from repro.dp import backends as _backends
 from repro.dp import reconstruct as _reconstruct
 from repro.dp import registry as _registry
 from repro.dp import routing as _routing
 from repro.dp.problem import Answer, Spec
+
+#: LRU bound on the engine's per-route bookkeeping (_drains / _warmed) —
+#: endless fresh shapes must not grow process memory (same invariant as the
+#: TRACE_LOG / _BATCH_CACHE bounds). Evicting a _warmed triple just costs
+#: one skipped observation when that route next drains; evicting a _drains
+#: count resets that bucket's exploration cadence.
+_ROUTE_STATE_MAX = 4096
 
 
 @dataclasses.dataclass
@@ -49,15 +73,32 @@ class DPEngine:
     """Queue heterogeneous solve requests, bucket by (problem, shape_key),
     dispatch batched solves bucket-at-a-time."""
 
-    def __init__(self, max_batch: int = 64):
+    def __init__(self, max_batch: int = 64, feedback: bool = True,
+                 explore_every: int = 8):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = max_batch
+        #: fold realized drain latencies into the calibration table and run
+        #: periodic exploration; off = no writes and no exploration (routing
+        #: still honors whatever the global calibration table already holds)
+        self.feedback = feedback
+        #: every Nth drain of a bucket tries a route that still wants an
+        #: online sample (0 = never)
+        self.explore_every = explore_every
         self._next_rid = 0
         self._buckets: "OrderedDict[tuple, list]" = OrderedDict()
+        #: bucket key -> completed drain count (LRU, _ROUTE_STATE_MAX)
+        self._drains: "OrderedDict[tuple, int]" = OrderedDict()
+        #: (backend, shape_key, batch_size) triples this engine has already
+        #: executed once — only repeat runs are observed, so one-time jit
+        #: compilation never becomes a routing signal even on loop-fallback
+        #: routes whose inner solvers compile outside TRACE_LOG's view
+        #: (LRU, _ROUTE_STATE_MAX)
+        self._warmed: "OrderedDict[tuple, bool]" = OrderedDict()
         self.stats = {"submitted": 0, "completed": 0, "device_batches": 0,
                       "batched_requests": 0, "device_tracebacks": 0,
-                      "host_tracebacks": 0}
+                      "host_tracebacks": 0, "explore_dispatches": 0,
+                      "feedback_observations": 0}
 
     # -- admission ---------------------------------------------------------
     def submit(self, problem: str, reconstruct: bool = False,
@@ -93,6 +134,36 @@ class DPEngine:
     def bucket_sizes(self) -> dict:
         return {k: len(v) for k, v in self._buckets.items()}
 
+    # -- routing -----------------------------------------------------------
+    def _route(self, key: tuple, spec0: Spec, reconstruct: bool,
+               backend) -> tuple:
+        """Resolve the bucket's route: explicit override > periodic
+        exploration of an unmeasured candidate > measured-cost dispatch.
+        Returns ``(backend, explored)``."""
+        if backend is not None or not self.feedback:
+            return _routing.resolve_backend(spec0, backend, batch=True,
+                                            reconstruct=reconstruct), False
+        pool = _routing.batch_candidates(spec0, reconstruct=reconstruct)
+        count = self._drains.get(key, 0)
+        if (self.explore_every
+                and count % self.explore_every == self.explore_every - 1):
+            obs_key = self._obs_key(spec0, reconstruct)
+            wanting = [b for b in pool
+                       if not _autotune.has_measurement(b.name, obs_key)]
+            if wanting:
+                return wanting[0], True
+        return pool[0], False
+
+    @staticmethod
+    def _obs_key(spec0: Spec, reconstruct: bool) -> tuple:
+        """Calibration key of a drain: amortized bucket drains and
+        arg-emitting (reconstruct) solves cost differently from plain
+        single-instance runs, so each regime keys its own entries —
+        offline calibration (plain keys) is never conflated with either."""
+        suffix = (_routing.RECONSTRUCT_SUFFIX if reconstruct
+                  else _routing.BATCH_SUFFIX)
+        return spec0.shape_key() + suffix
+
     # -- one batched device call ------------------------------------------
     def step(self, backend: Optional[str] = None) -> list:
         """Drain up to ``max_batch`` requests from the fullest bucket with a
@@ -109,15 +180,27 @@ class DPEngine:
         # solve, traceback and decode all run BEFORE dequeuing: a failed
         # batch (bad backend override, transient device error, a decode bug)
         # must not lose requests
-        chosen = _routing.resolve_backend(specs[0], backend, batch=True,
-                                          reconstruct=reconstruct)
+        chosen, explored = self._route(key, specs[0], reconstruct, backend)
         source = None
+        obs_key = self._obs_key(specs[0], reconstruct)
+        warm_key = (chosen.name, obs_key, len(batch))
+        traces_before = _backends.TRACE_COUNT
+        t0 = time.perf_counter()
         if reconstruct:
             tables, argss, source = _routing.run_batch_with_args(chosen, specs)
+        else:
+            tables = _routing.run_batch(chosen, specs)
+        solve_ms = (time.perf_counter() - t0) * 1e3
+        # a drain is warm only if this engine already ran this exact
+        # (route, shape, batch size) — catching jit compiles TRACE_LOG can't
+        # see (loop-fallback solvers) — AND nothing retraced during the call
+        cold = (warm_key not in self._warmed
+                or _backends.TRACE_COUNT != traces_before)
+        _backends.lru_put(self._warmed, warm_key, True, _ROUTE_STATE_MAX)
+        if reconstruct:
             answers = _reconstruct.reconstruct_batch(prob, specs, tables,
                                                      argss, source)
         else:
-            tables = _routing.run_batch(chosen, specs)
             answers = [None] * len(batch)
         responses = [DPResponse(rid=r.rid, problem=r.problem,
                                 answer=prob.extract(t, r.spec),
@@ -129,9 +212,16 @@ class DPEngine:
             self._buckets[key] = rest
         else:
             del self._buckets[key]
+        _backends.lru_put(self._drains, key, self._drains.get(key, 0) + 1,
+                          _ROUTE_STATE_MAX)
         self.stats["device_batches"] += 1
         self.stats["completed"] += len(batch)
         self.stats["batched_requests"] += len(batch) if len(batch) > 1 else 0
+        if explored:
+            self.stats["explore_dispatches"] += 1
+        if self.feedback and not cold:
+            _autotune.observe(chosen.name, obs_key, solve_ms / len(batch))
+            self.stats["feedback_observations"] += 1
         if reconstruct:
             counter = ("device_tracebacks" if source == "device"
                        else "host_tracebacks")

@@ -28,11 +28,16 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from collections import OrderedDict
+
 from repro.dp import backends as _backends
 from repro.dp.problem import (Answer, DPProblem, LinearPath, Path, Spec,
                               TriangularPath)
 
-_TRACEBACK_CACHE: dict = {}
+#: jit-callable cache for batched tracebacks, LRU-bounded like
+#: ``backends._BATCH_CACHE`` so long-running engines stay bounded.
+_TRACEBACK_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+_TRACEBACK_CACHE_MAX = 64
 
 
 def supports_args(spec: Spec) -> bool:
@@ -88,19 +93,23 @@ def traceback_batch(argss: Sequence[np.ndarray], spec0: Spec,
         from repro.core.sdp import linear_traceback
 
         key = ("traceback", "linear", spec0.offsets, spec0.n)
-        if key not in _TRACEBACK_CACHE:
+
+        def build():
             offsets, n = spec0.offsets, spec0.n
 
             def call(args_b, starts_b):
-                _backends.TRACE_LOG.append(key)
+                _backends.log_trace(key)
                 return jax.vmap(
                     lambda a, s: linear_traceback(a, offsets, n, s)
                 )(args_b, starts_b)
 
-            _TRACEBACK_CACHE[key] = jax.jit(call)
+            return jax.jit(call)
+
+        walk = _backends.lru_cached(_TRACEBACK_CACHE, key, build,
+                                    _TRACEBACK_CACHE_MAX)
         if starts is None:
             starts = [spec0.n - 1] * len(argss)
-        cells, lanes, valid, stop = _TRACEBACK_CACHE[key](
+        cells, lanes, valid, stop = walk(
             jnp.stack([jnp.asarray(a) for a in argss]),
             jnp.asarray(np.asarray(starts, dtype=np.int32)))
         cells, lanes = np.asarray(cells), np.asarray(lanes)
@@ -112,15 +121,18 @@ def traceback_batch(argss: Sequence[np.ndarray], spec0: Spec,
     from repro.core.mcm import triangular_traceback
 
     key = ("traceback", "triangular", spec0.n)
-    if key not in _TRACEBACK_CACHE:
+
+    def build():
         n = spec0.n
 
         def call(args_b):
-            _backends.TRACE_LOG.append(key)
+            _backends.log_trace(key)
             return jax.vmap(lambda a: triangular_traceback(a, n))(args_b)
 
-        _TRACEBACK_CACHE[key] = jax.jit(call)
-    ii, dd, ee = _TRACEBACK_CACHE[key](
+        return jax.jit(call)
+
+    ii, dd, ee = _backends.lru_cached(
+        _TRACEBACK_CACHE, key, build, _TRACEBACK_CACHE_MAX)(
         jnp.stack([jnp.asarray(a) for a in argss]))
     nodes = np.stack([np.asarray(ii), np.asarray(dd), np.asarray(ee)], axis=2)
     return [TriangularPath(nodes=nodes[b].astype(np.int64))

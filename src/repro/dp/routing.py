@@ -1,9 +1,13 @@
 """Shape-aware routing of specs to solver backends, plus the single-call
 batched solve path.
 
-``dispatch(spec)`` ranks the registered backends that support the spec by
-their step-count cost model (``backends.linear_costs`` vocabulary) and
-returns the cheapest; ``solve`` / ``solve_spec`` execute the choice;
+``dispatch(spec)`` ranks the registered backends that support the spec with
+a two-tier cost resolution (DESIGN.md §6): *measured* latencies from the
+calibration table (``repro.dp.autotune`` — exact entries or nearest-shape
+interpolations) come first, and the step-count cost model
+(``backends.linear_costs`` vocabulary) is the prior for unmeasured routes
+and the tiebreak. With no calibration data the ranking is exactly the
+analytical one. ``solve`` / ``solve_spec`` execute the choice;
 ``batch_solve`` stacks B same-shape instances and issues ONE jitted
 vmapped device call (falling back to a loop only when the chosen backend
 has no batch path — e.g. the host-side table-building MCM pipeline).
@@ -25,6 +29,7 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from repro.dp import autotune as _autotune
 from repro.dp import backends as _backends
 from repro.dp import reconstruct as _reconstruct
 from repro.dp import registry as _registry
@@ -35,11 +40,21 @@ def _resolve(problem: Union[str, DPProblem]) -> DPProblem:
     return _registry.get(problem) if isinstance(problem, str) else problem
 
 
+#: calibration-key regime markers (see autotune / backends.SHAPE_KEY_REGIMES):
+#: arg-emitting solves and amortized bucket drains cost differently from
+#: plain single-instance solves and must not share entries
+RECONSTRUCT_SUFFIX = ("reconstruct",)
+BATCH_SUFFIX = ("batch",)
+
+
 def dispatch(spec_or_problem, reconstruct: bool = False,
              **instance) -> _backends.Backend:
     """Cheapest supporting backend for a spec (or a problem + instance).
     With ``reconstruct`` the cheapest *arg-capable* route wins when one
-    exists (host-fallback reconstruction costs an extra table re-rank)."""
+    exists (host-fallback reconstruction costs an extra table re-rank).
+    Both paths rank on plain (single-instance) entries: reconstruct-regime
+    entries are batch-amortized engine observations, the wrong figure for a
+    single-call caller."""
     if isinstance(spec_or_problem, (str, DPProblem)) or instance:
         spec = _resolve(spec_or_problem).encode(**instance)
     else:
@@ -50,15 +65,19 @@ def dispatch(spec_or_problem, reconstruct: bool = False,
     if reconstruct and _reconstruct.supports_args(spec):
         arg_capable = [b for b in cands if b.run_with_args is not None]
         if arg_capable:
-            return arg_capable[0]
-    return cands[0]
+            return _autotune.rank(spec, arg_capable)[0]
+    return _autotune.rank(spec, cands)[0]
 
 
-def select_batch_backend(spec: Spec,
-                         reconstruct: bool = False) -> _backends.Backend:
-    """Cheapest supporting backend, preferring ones that can batch the
-    whole group in one device call (and, under ``reconstruct``, ones that
-    emit arg tables device-side)."""
+def batch_candidates(spec: Spec, reconstruct: bool = False) -> list:
+    """Ordered route pool for a homogeneous batch. Structural preferences
+    come first — arg-capable backends under ``reconstruct``, and
+    batchable-before-loop-fallback otherwise — then the measured ranking is
+    applied on top (``autotune.rank_batch``: a loop-fallback route can only
+    overrule the batching prior on an online-amortized drain measurement,
+    never on an offline single-instance timing); with no measurements the
+    order is exactly the pre-calibration one. The engine explores
+    alternates from exactly this pool."""
     cands = _backends.candidates(spec)
     if not cands:
         raise RuntimeError(f"no backend supports spec {spec.shape_key()}")
@@ -66,9 +85,19 @@ def select_batch_backend(spec: Spec,
         for pool in ([c for c in cands if c.batch_run_with_args is not None],
                      [c for c in cands if c.run_with_args is not None]):
             if pool:
-                return pool[0]
+                return _autotune.rank(spec, pool, suffix=RECONSTRUCT_SUFFIX)
     batchable = [c for c in cands if c.batch_run is not None]
-    return batchable[0] if batchable else cands[0]
+    loop_only = [c for c in cands if c.batch_run is None]
+    return _autotune.rank_batch(spec, batchable, loop_only,
+                                batch_suffix=BATCH_SUFFIX)
+
+
+def select_batch_backend(spec: Spec,
+                         reconstruct: bool = False) -> _backends.Backend:
+    """Cheapest supporting backend, preferring ones that can batch the
+    whole group in one device call (and, under ``reconstruct``, ones that
+    emit arg tables device-side)."""
+    return batch_candidates(spec, reconstruct=reconstruct)[0]
 
 
 def resolve_backend(spec: Spec, backend=None, batch: bool = False,

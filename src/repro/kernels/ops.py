@@ -22,8 +22,16 @@ from repro.kernels.sdp_pipeline import sdp_pipeline_pallas
 from repro.kernels.semiring_matmul import tropical_matmul_pallas
 
 
+_KERNEL_MODES = ("auto", "pallas", "ref", "interpret")
+
+
 def kernel_mode() -> str:
     env = os.environ.get("REPRO_KERNELS", "auto")
+    if env not in _KERNEL_MODES:
+        # a typo like "palas" must not silently fall through to the ref path
+        raise ValueError(
+            f"REPRO_KERNELS={env!r} is not a valid kernel mode; "
+            f"expected one of {', '.join(_KERNEL_MODES)}")
     if env != "auto":
         return env
     return "pallas" if jax.default_backend() == "tpu" else "ref"

@@ -4,6 +4,8 @@ import importlib.util
 import os
 import sys
 
+import pytest
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _SRC = os.path.join(_ROOT, "src")
 if _SRC not in sys.path:
@@ -13,3 +15,21 @@ if importlib.util.find_spec("hypothesis") is None:
     _STUBS = os.path.join(_ROOT, "tests", "_stubs")
     if _STUBS not in sys.path:
         sys.path.insert(0, _STUBS)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_dp_calibration(monkeypatch):
+    """DPEngine feedback writes to the process-global calibration table;
+    without a per-test reset, dispatch in later tests would depend on which
+    engine tests ran before (order-dependent routing under -k / xdist).
+    The env var goes too — reset() re-resolves it, and a developer's
+    exported REPRO_DP_CALIB must not leak measured routing into tests."""
+    try:
+        from repro.dp import autotune
+    except Exception:  # collection of non-dp tests must not require jax/dp
+        yield
+        return
+    monkeypatch.delenv(autotune.ENV_PATH, raising=False)
+    autotune.reset()
+    yield
+    autotune.reset()

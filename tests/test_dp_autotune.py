@@ -1,0 +1,263 @@
+"""Calibration subsystem tests (DESIGN.md §6): measured costs override the
+analytical ranking, tables round-trip to disk (corrupt files degrade to the
+analytical model), nearest-shape interpolation transfers measurements, the
+cost-model floor fix, and the bounded jit-callable caches / trace log."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import dp
+from repro.dp import autotune, backends, routing
+
+# per-test calibration isolation (table reset + REPRO_DP_CALIB delenv) is
+# the autouse _isolated_dp_calibration fixture in tests/conftest.py
+
+
+def _lin_spec(n=24, op="min", offsets=(3, 2, 1)):
+    rng = np.random.default_rng(n)
+    return dp.LinearSpec(offsets=offsets, op=op, n=n,
+                         init=rng.normal(size=offsets[0]).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Two-tier cost resolution
+# ---------------------------------------------------------------------------
+def test_empty_table_is_bit_identical_to_analytical_dispatch():
+    spec = _lin_spec()
+    cands = backends.candidates(spec)
+    assert autotune.rank(spec, cands) == cands
+    assert dp.dispatch(spec).name == cands[0].name
+    assert routing.select_batch_backend(spec).name == cands[0].name
+
+
+def test_measured_costs_override_analytical_ranking():
+    spec = _lin_spec()
+    cands = backends.candidates(spec)
+    analytic_first, slow_on_paper = cands[0], cands[-1]
+    t = autotune.get_table()
+    t.record(analytic_first.name, spec.shape_key(), 5.0)
+    t.record(slow_on_paper.name, spec.shape_key(), 0.01)
+    assert dp.dispatch(spec).name == slow_on_paper.name
+    assert routing.select_batch_backend(spec).name == slow_on_paper.name
+
+
+def test_unmeasured_candidates_keep_analytical_order_as_prior():
+    spec = _lin_spec()
+    cands = backends.candidates(spec)
+    measured = cands[2]
+    autotune.get_table().record(measured.name, spec.shape_key(), 0.01)
+    ranked = autotune.rank(spec, cands)
+    assert ranked[0] is measured
+    # the unmeasured tail preserves the analytical relative order
+    assert ranked[1:] == [b for b in cands if b is not measured]
+
+
+def test_offline_entries_cannot_promote_loop_routes_in_batch_pools():
+    """Offline calibrate entries time a single run; they must not demote a
+    batchable route below a loop-fallback one (losing vmap amortization).
+    Only an amortized batch-regime drain observation earns a loop route
+    tier 0."""
+    spec = dp.get_problem("mcm").encode(
+        dims=np.arange(1.0, 9.0))  # n=7: wavefront batches, mcm_pipeline loops
+    t = autotune.get_table()
+    t.record("mcm_pipeline", spec.shape_key(), 1e-4)  # offline single-run
+    assert dp.routing.select_batch_backend(spec).name == "wavefront"
+    assert dp.dispatch(spec).name == "mcm_pipeline"  # single-solve regime may
+    # an amortized drain observation (what the engine records) flips it
+    t.observe("mcm_pipeline", spec.shape_key() + dp.routing.BATCH_SUFFIX, 1e-4)
+    assert dp.routing.select_batch_backend(spec).name == "mcm_pipeline"
+
+
+def test_amortized_batch_entries_cannot_pollute_single_dispatch():
+    """The inverse regime guard: a batched drain's amortized per-instance
+    latency must not make single-solve dispatch() pick that route."""
+    spec = _lin_spec()
+    cands = backends.candidates(spec)
+    slow_on_paper = cands[-1]
+    t = autotune.get_table()
+    # an absurdly good amortized figure under the batch regime only
+    t.observe(slow_on_paper.name, spec.shape_key() + dp.routing.BATCH_SUFFIX,
+              1e-6)
+    assert dp.dispatch(spec).name == cands[0].name  # singles stay analytical
+    assert dp.routing.select_batch_backend(spec).name == slow_on_paper.name
+
+
+def test_backend_override_ignores_calibration():
+    spec = _lin_spec(n=20)
+    override = backends.candidates(spec)[-1].name
+    before = dp.solve_spec(spec, backend=override)
+    t = autotune.get_table()
+    t.record(override, spec.shape_key(), 1e9)  # absurdly slow on record
+    assert routing.resolve_backend(spec, override).name == override
+    np.testing.assert_array_equal(dp.solve_spec(spec, backend=override),
+                                  before)
+
+
+# ---------------------------------------------------------------------------
+# Persistence
+# ---------------------------------------------------------------------------
+def test_table_round_trips_to_disk(tmp_path):
+    spec = _lin_spec()
+    other = backends.candidates(spec)[-1]
+    t = autotune.get_table()
+    t.record(other.name, spec.shape_key(), 0.02)
+    t.observe(other.name, spec.shape_key(), 0.04)  # EMA fold on top
+    path = str(tmp_path / "calib.json")
+    t.save(path)
+
+    loaded = autotune.CalibrationTable.load(path)
+    entry = loaded.lookup(other.name, spec.shape_key())
+    assert entry is not None
+    assert entry.ms == pytest.approx(0.7 * 0.02 + 0.3 * 0.04)
+    assert entry.count == 2
+    # the loaded table drives dispatch exactly like the live one did
+    autotune.set_table(loaded)
+    assert dp.dispatch(spec).name == other.name
+
+
+def test_corrupt_table_falls_back_to_analytical(tmp_path):
+    spec = _lin_spec()
+    analytic_first = backends.candidates(spec)[0].name
+    for content in ("{definitely not json", json.dumps({"version": 99}),
+                    json.dumps({"version": 1, "entries": [{"bad": "row"}]})):
+        path = tmp_path / "corrupt.json"
+        path.write_text(content)
+        with pytest.warns(UserWarning, match="corrupt calibration table"):
+            table = autotune.CalibrationTable.load(str(path))
+        assert len(table) == 0
+        autotune.set_table(table)
+        assert dp.dispatch(spec).name == analytic_first
+
+
+def test_missing_file_loads_empty_without_warning(tmp_path):
+    table = autotune.CalibrationTable.load(str(tmp_path / "absent.json"))
+    assert len(table) == 0
+    table.record("pipeline", ("linear", "min", (2, 1), 9, False), 0.5)
+    assert table.save() == str(tmp_path / "absent.json")
+
+
+# ---------------------------------------------------------------------------
+# Nearest-shape interpolation
+# ---------------------------------------------------------------------------
+def test_nearest_shape_interpolation_scales_by_analytical_ratio():
+    near, far = _lin_spec(n=24), _lin_spec(n=32)
+    b = backends.candidates(near)[0]
+    autotune.get_table().record(b.name, near.shape_key(), 1.0)
+    got = autotune.measured_ms(b, far)
+    want = 1.0 * b.cost(far) / b.cost(near)
+    assert got == pytest.approx(want)
+
+
+def test_interpolation_refuses_incompatible_and_distant_shapes():
+    spec = _lin_spec(n=24)
+    b = backends.candidates(spec)[0]
+    t = autotune.get_table()
+    # different offsets: the traced program differs, nothing transfers
+    t.record(b.name, ("linear", "min", (5, 1), 24, False), 1.0)
+    assert autotune.measured_ms(b, spec) is None
+    # same program family but 8× the size: outside MAX_INTERP_RATIO
+    t.record(b.name, _lin_spec(n=192).shape_key(), 1.0)
+    assert autotune.measured_ms(b, spec) is None
+    # within the ratio: transfers
+    t.record(b.name, _lin_spec(n=48).shape_key(), 1.0)
+    assert autotune.measured_ms(b, spec) is not None
+
+
+def test_shape_key_distance():
+    a = ("linear", "min", (3, 2, 1), 24, False)
+    assert backends.shape_key_distance(a, ("linear", "min", (3, 2, 1), 30, False)) == 6.0
+    assert backends.shape_key_distance(a, ("linear", "max", (3, 2, 1), 24, False)) is None
+    assert backends.shape_key_distance(a, ("triangular", 24)) is None
+    assert backends.shape_key_distance(("triangular", 8), ("triangular", 11)) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# calibrate() + routing_report()
+# ---------------------------------------------------------------------------
+def test_calibrate_populates_table_and_report(tmp_path):
+    path = str(tmp_path / "calib.json")
+    table = dp.calibrate(problems=["sdp"], sizes=(8,), repeats=1, path=path)
+    assert len(table) >= 2  # every supporting linear backend measured
+    report = dp.routing_report()
+    assert report["shapes"], "calibrated shapes must appear in the report"
+    row = report["shapes"][0]
+    assert {"measured_choice", "analytical_choice", "agree",
+            "analytical_regret", "measured_ms"} <= set(row)
+    assert row["analytical_regret"] >= 1.0
+    assert report["median_analytical_regret"] >= 1.0
+    # measured-best is what dispatch now picks for that exact shape
+    spec = backends.spec_from_shape_key(row["shape_key"])
+    assert dp.dispatch(spec).name == row["measured_choice"]
+    # and the sweep persisted
+    assert autotune.CalibrationTable.load(path).lookup(
+        row["measured_choice"], row["shape_key"]) is not None
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: cost floor, bounded caches, trace log
+# ---------------------------------------------------------------------------
+def test_linear_costs_floor_blocked_cannot_win_at_zero():
+    # preset-only table (n ≤ a_1, constructible without validate()) used to
+    # give blocked cost ceil((n-a1)/B)·(1+log k) = 0 — a degenerate auto-win
+    degenerate = dp.LinearSpec(offsets=(8, 4, 1), op="min", n=8,
+                               init=np.zeros(8, np.float32))
+    costs = backends.linear_costs(degenerate)
+    assert all(c >= 1.0 for c in costs.values()), costs
+    # valid specs are unchanged by the floor (all step counts were ≥ 1)
+    spec = _lin_spec(n=24)
+    costs = backends.linear_costs(spec)
+    assert costs["pipeline"] == float(spec.n + len(spec.offsets)
+                                      - spec.offsets[0] - 1)
+
+
+def test_batch_cache_is_lru_bounded(monkeypatch):
+    monkeypatch.setattr(backends, "_BATCH_CACHE_MAX", 3)
+    backends._BATCH_CACHE.clear()
+    rng = np.random.default_rng(0)
+    for n in (21, 22, 23, 24, 25):  # 5 distinct triangular shapes
+        instances = [{"dims": rng.integers(1, 9, size=n + 1).astype(np.float64)}
+                     for _ in range(2)]
+        dp.batch_solve("mcm", instances)
+    assert len(backends._BATCH_CACHE) <= 3
+    # most-recent shapes survive, the stalest were evicted
+    kept = {k[1][1] for k in backends._BATCH_CACHE if k[0] == "wavefront"}
+    assert 25 in kept and 21 not in kept
+    backends._BATCH_CACHE.clear()  # drop the tiny-bound leftovers
+
+
+def test_shape_key_regimes_never_cross_match():
+    """Batch, reconstruct, and plain entries are separate keyspaces: no
+    exact hits and no interpolation across regimes."""
+    plain = ("triangular", 41)
+    batch = plain + ("batch",)
+    recon = plain + ("reconstruct",)
+    assert backends.shape_key_distance(plain, batch) is None
+    assert backends.shape_key_distance(batch, recon) is None
+    assert backends.shape_key_distance(batch, ("triangular", 44, "batch")) == 3.0
+    assert backends.shape_key_size(batch) == 41
+    # phantom specs strip the marker
+    assert backends.spec_from_shape_key(batch).n == 41
+    t = autotune.get_table()
+    t.observe("wavefront", batch, 1.0)
+    assert autotune.has_measurement("wavefront", batch)
+    assert not autotune.has_measurement("wavefront", plain)
+    assert not autotune.has_measurement("wavefront", recon)
+
+
+def test_trace_log_capped_and_drainable(monkeypatch):
+    drained = backends.drain_trace_log()  # start clean, keep others' entries
+    try:
+        monkeypatch.setattr(backends, "TRACE_LOG_MAX", 5)
+        count_before = backends.TRACE_COUNT
+        for i in range(12):
+            backends.log_trace(("t", i))
+        assert backends.TRACE_LOG == [("t", i) for i in range(7, 12)]
+        # the monotonic counter keeps moving past the cap — this is what
+        # the engine's cold-drain detection reads, not the list length
+        assert backends.TRACE_COUNT == count_before + 12
+        got = backends.drain_trace_log()
+        assert got == [("t", i) for i in range(7, 12)]
+        assert backends.TRACE_LOG == []
+    finally:
+        backends.TRACE_LOG.extend(drained)

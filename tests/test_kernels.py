@@ -108,6 +108,19 @@ def test_flash_ref_chunked_matches_oracle():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
+def test_kernel_mode_rejects_invalid_env(monkeypatch):
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_KERNELS", "palas")  # the classic typo
+    with pytest.raises(ValueError, match="REPRO_KERNELS"):
+        ops.kernel_mode()
+    for mode in ("pallas", "ref", "interpret"):
+        monkeypatch.setenv("REPRO_KERNELS", mode)
+        assert ops.kernel_mode() == mode
+    monkeypatch.setenv("REPRO_KERNELS", "auto")
+    assert ops.kernel_mode() in ("ref", "pallas")
+
+
 def test_ops_dispatch_ref_on_cpu():
     from repro.kernels import ops
 
