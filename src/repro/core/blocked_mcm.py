@@ -238,8 +238,7 @@ def _dims_match_weights(spec) -> bool:
 _dp_backends.register(_dp_backends.Backend(
     name="blocked_mcm", geometry="triangular",
     run=_blocked_run,
-    # O(n) wavefront depth with GEMM-fed combines: favored beyond n ≈ 64
-    cost=lambda s: float(s.n) * 0.75 + 16.0,
+    cost=lambda s: _dp_backends.triangular_costs(s)["blocked_mcm"],
     supports=lambda s: (s.dims is not None and _pick_tile(s.n) is not None
                         and _dims_match_weights(s)),
     batch_run=None,

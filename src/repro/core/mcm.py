@@ -476,13 +476,13 @@ def _pipeline_run(spec) -> np.ndarray:
 def _register_backends() -> None:
     _dp_backends.register(_dp_backends.triangular_tab_backend(
         "wavefront", solve_wavefront_tab,
-        cost=lambda s: float(s.n),
+        cost=lambda s: _dp_backends.triangular_costs(s)["wavefront"],
         jax_arg_fn=solve_wavefront_tab_with_args,
         doc="dense masked per-diagonal combine (n-1 vectorized steps)"))
     _dp_backends.register(_dp_backends.Backend(
         name="mcm_pipeline", geometry="triangular",
         run=_pipeline_run,
-        cost=lambda s: float(num_cells(s.n) + s.n),
+        cost=lambda s: _dp_backends.triangular_costs(s)["mcm_pipeline"],
         supports=lambda s: True,
         batch_run=None,  # host-side table build per instance — loop fallback
         doc="paper Fig.-8 pipeline (order=safe); O(n²) outer steps"))

@@ -78,6 +78,16 @@ def _mul_for(op: str):
     return SEMIGROUP_TO_SEMIRING[op].mul
 
 
+def _init_table(init, a1: int, n: int):
+    """The preset table every solver starts from. Preset-only tables
+    (``n ≤ a_1`` — dispatchable since the cost floor of DESIGN.md §3, though
+    ``validate()`` rejects them) clamp the presets instead of broadcast-
+    crashing on ``.at[:a1].set``; the solver loops then run zero live steps."""
+    if n <= a1:
+        return jnp.asarray(init)[:n]
+    return jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
+
+
 # ---------------------------------------------------------------------------
 # Oracle (paper Fig. 1, numpy)
 # ---------------------------------------------------------------------------
@@ -94,6 +104,8 @@ def sdp_reference(init: np.ndarray, offsets: Sequence[int], op: str, n: int,
             raise ValueError(f"weights must be (n, k)=({n}, {len(a)}), "
                              f"got {weights.shape}")
     np_mul = SEMIGROUP_TO_SEMIRING[op].np_mul
+    if n <= a1:  # preset-only table: clamp, like the jnp solvers' _init_table
+        return np.asarray(init)[:n].copy()
     st = np.empty(n, dtype=np.asarray(init).dtype)
     st[:a1] = init
     for i in range(a1, n):
@@ -119,7 +131,7 @@ def solve_sequential(init: jnp.ndarray, offsets: tuple, op: str, n: int,
     mul = _mul_for(op)
     a1 = int(a[0])
     offs = jnp.asarray(a)
-    st = jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
+    st = _init_table(init, a1, n)
 
     def body(i, st):
         def term(j):
@@ -146,7 +158,7 @@ def solve_tournament(init: jnp.ndarray, offsets: tuple, op: str, n: int,
     mul = _mul_for(op)
     a1 = int(a[0])
     offs = jnp.asarray(a)
-    st = jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
+    st = _init_table(init, a1, n)
 
     def body(i, st):
         vals = st[i - offs]  # (k,) gather — k "threads"
@@ -175,7 +187,7 @@ def solve_pipeline(init: jnp.ndarray, offsets: tuple, op: str, n: int,
     k, a1 = len(a), int(a[0])
     offs = jnp.asarray(a)
     js = jnp.arange(k)
-    st = jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
+    st = _init_table(init, a1, n)
 
     def body(i, st):
         idx = i - js                                   # element served by stage j
@@ -207,7 +219,7 @@ def solve_blocked(init: jnp.ndarray, offsets: tuple, op: str, n: int, block: int
     a1, ak = int(a[0]), int(a[-1])
     B = max(1, min(ak, block))
     offs = jnp.asarray(a)
-    st = jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
+    st = _init_table(init, a1, n)
     num_blocks = -(-(n - a1) // B)
     lane = jnp.arange(B)
 
@@ -250,7 +262,7 @@ def solve_tournament_with_args(init: jnp.ndarray, offsets: tuple, op: str,
     argbest = _argbest_for(op)
     a1 = int(a[0])
     offs = jnp.asarray(a)
-    st = jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
+    st = _init_table(init, a1, n)
     ar = jnp.full((n,), -1, dtype=jnp.int32)
 
     def body(i, carry):
@@ -276,7 +288,7 @@ def solve_blocked_with_args(init: jnp.ndarray, offsets: tuple, op: str, n: int,
     a1, ak = int(a[0]), int(a[-1])
     B = max(1, min(ak, block))
     offs = jnp.asarray(a)
-    st = jnp.zeros((n,), dtype=init.dtype).at[:a1].set(init)
+    st = _init_table(init, a1, n)
     ar = jnp.full((n,), -1, dtype=jnp.int32)
     num_blocks = -(-(n - a1) // B)
     lane = jnp.arange(B)

@@ -68,9 +68,21 @@ Key = Tuple[str, str, tuple]  # (jax_backend, backend_name, shape_key)
 
 
 def _jax_backend() -> str:
+    """The platform axis of every measurement key. A non-default
+    ``REPRO_KERNELS`` override is part of the platform: the kernel-tier
+    routes trace a different program per mode (Pallas VMEM kernel vs jnp
+    fallback vs the ~32× Python interpreter), so a timing measured under an
+    overridden mode must never outrank the analytical model under another —
+    the measured-cost analogue of the batch-jit ``cache_tag``
+    (DESIGN.md §4)."""
     import jax
 
-    return jax.default_backend()
+    from repro.kernels import ops
+
+    jb = jax.default_backend()
+    mode = ops.kernel_mode()
+    default = "pallas" if jb == "tpu" else "ref"
+    return jb if mode == default else f"{jb}+{mode}"
 
 
 @dataclasses.dataclass

@@ -148,16 +148,33 @@ def ensure_registered() -> None:
 # ---------------------------------------------------------------------------
 # Builders used by the registering modules
 # ---------------------------------------------------------------------------
+def _cache_tagger(cache_tag: Optional[Callable]) -> Callable[[], tuple]:
+    """Normalize a builder's ``cache_tag`` hook. The tag is appended to every
+    batch-jit cache key (and hence TRACE_LOG entry): solver wrappers whose
+    traced program depends on ambient state — the kernel tier reads
+    ``REPRO_KERNELS`` at trace time — must fold that state into the key, or a
+    mode flip mid-process would keep serving programs traced under the old
+    mode."""
+    if cache_tag is None:
+        return lambda: ()
+    return lambda: tuple(cache_tag())
+
+
 def linear_backend(name: str, jax_fn: Callable, cost: Callable,
                    supports: Optional[Callable] = None,
                    jax_arg_fn: Optional[Callable] = None,
+                   cache_tag: Optional[Callable] = None,
                    doc: str = "") -> Backend:
     """Wrap a JAX S-DP solver ``fn(init, offsets, op, n, weights=None)``
     into a Backend with a single-call vmapped batch path. ``jax_arg_fn`` (same
     signature, returns ``(st, args)``) additionally equips the backend with
-    the ``*_with_args`` capability pair."""
+    the ``*_with_args`` capability pair. ``cache_tag`` (no-arg callable)
+    contributes trace-time ambient state to the batch-jit cache keys (see
+    :func:`_cache_tagger`)."""
     import jax
     import jax.numpy as jnp
+
+    tag = _cache_tagger(cache_tag)
 
     def _run(fn, spec: LinearSpec):
         w = None if spec.weights is None else jnp.asarray(spec.weights)
@@ -192,7 +209,8 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
         return cached(inits, jnp.stack([jnp.asarray(s.weights) for s in specs]))
 
     def batch_run(specs) -> list:
-        return list(np.asarray(_batch(jax_fn, specs, (name, specs[0].shape_key()))))
+        return list(np.asarray(_batch(
+            jax_fn, specs, (name, specs[0].shape_key()) + tag())))
 
     run_with_args = batch_run_with_args = None
     if jax_arg_fn is not None:
@@ -202,7 +220,7 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
 
         def batch_run_with_args(specs):
             sts, argss = _batch(jax_arg_fn, specs,
-                                (name, specs[0].shape_key(), "args"))
+                                (name, specs[0].shape_key()) + tag() + ("args",))
             return list(np.asarray(sts)), list(np.asarray(argss))
 
     return Backend(name=name, geometry="linear", run=run, cost=cost,
@@ -212,13 +230,19 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
 
 
 def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
+                           supports: Optional[Callable] = None,
                            jax_arg_fn: Optional[Callable] = None,
+                           cache_tag: Optional[Callable] = None,
                            doc: str = "") -> Backend:
     """Wrap a weight-table triangular solver ``fn(wtab, n)`` (e.g.
     ``core.mcm.solve_wavefront_tab``) with a vmapped batch path.
-    ``jax_arg_fn`` (returns ``(st, args)``) adds the arg-capability pair."""
+    ``jax_arg_fn`` (returns ``(st, args)``) adds the arg-capability pair;
+    ``supports`` gates eligibility (e.g. the Pallas route's VMEM budget);
+    ``cache_tag`` as in :func:`linear_backend`."""
     import jax
     import jax.numpy as jnp
+
+    tag = _cache_tagger(cache_tag)
 
     def run(spec: TriangularSpec) -> np.ndarray:
         return np.asarray(jax_fn(jnp.asarray(spec.weights), spec.n))
@@ -237,7 +261,8 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
             jnp.stack([jnp.asarray(s.weights) for s in specs]))
 
     def batch_run(specs) -> list:
-        return list(np.asarray(_batch(jax_fn, specs, (name, specs[0].shape_key()))))
+        return list(np.asarray(_batch(
+            jax_fn, specs, (name, specs[0].shape_key()) + tag())))
 
     run_with_args = batch_run_with_args = None
     if jax_arg_fn is not None:
@@ -247,11 +272,11 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
 
         def batch_run_with_args(specs):
             sts, argss = _batch(jax_arg_fn, specs,
-                                (name, specs[0].shape_key(), "args"))
+                                (name, specs[0].shape_key()) + tag() + ("args",))
             return list(np.asarray(sts)), list(np.asarray(argss))
 
     return Backend(name=name, geometry="triangular", run=run, cost=cost,
-                   supports=lambda s: True, batch_run=batch_run,
+                   supports=supports or (lambda s: True), batch_run=batch_run,
                    run_with_args=run_with_args,
                    batch_run_with_args=batch_run_with_args, doc=doc)
 
@@ -277,6 +302,21 @@ def linear_costs(spec: LinearSpec) -> dict:
         "blocked": blocked_steps * (1.0 + _log2(k)),
         # log-depth scan, O(n·a1³) work spread over the vector units
         "companion_scan": _log2(n) * (a1 ** 3) / 64.0 + a1,
+    }
+    return {name: max(1.0, c) for name, c in costs.items()}
+
+
+def triangular_costs(spec: TriangularSpec) -> dict:
+    """Step-count cost model for the triangular solver family (the §3/§6
+    vocabulary, consolidated here like :func:`linear_costs` so every
+    registering module prices against the same table). Units are
+    'vectorized device steps'; floored at one step like the linear family."""
+    n, cells = spec.n, num_cells(spec.n)
+    costs = {
+        "wavefront": float(n),                  # one masked combine/diagonal
+        "mcm_pipeline": float(cells + n),       # Fig.-8 skewed head + drain
+        # O(n) wavefront depth with GEMM-fed combines: favored beyond n ≈ 64
+        "blocked_mcm": float(n) * 0.75 + 16.0,
     }
     return {name: max(1.0, c) for name, c in costs.items()}
 

@@ -4,9 +4,11 @@ The solve contract (DESIGN.md §5) has three stages:
 
   1. *args* — the per-cell winning argument (lane index for linear specs,
      split offset for triangular ones). Arg-capable backends emit it device-
-     side alongside the cost table (``Backend.run_with_args``); for routes
-     that only return costs, :func:`args_from_table` recovers it on the host
-     by re-ranking each cell's candidates against the finished table.
+     side alongside the cost table (``Backend.run_with_args``) — including
+     the Pallas kernel tier, whose arg stores are bit-identical to the jnp
+     solvers' (DESIGN.md §4/§5); for routes that only return costs,
+     :func:`args_from_table` recovers it on the host by re-ranking each
+     cell's candidates against the finished table.
   2. *path* — the argument structure actually used by the optimum: a lane
      walk (:class:`LinearPath`) or a split tree in preorder
      (:class:`TriangularPath`). :func:`traceback_batch` walks a whole

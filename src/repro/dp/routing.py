@@ -17,7 +17,12 @@ through the same routes: dispatch prefers arg-capable backends (those with
 ``run_with_args``), and ``solve``/``batch_solve`` return :class:`Answer`
 objects carrying the decoded solution next to the cost optimum. Backends
 without arg output still reconstruct via the numpy from-the-cost-table
-fallback in ``repro.dp.reconstruct``.
+fallback in ``repro.dp.reconstruct``. The Pallas kernel tier
+(``kernel_blocked``/``kernel_wavefront``, DESIGN.md §4) registers through
+the same capability flags, so weighted and arg-emitting solves dispatch
+onto the VMEM kernels with no special casing here — kernel eligibility
+(VMEM budget, kernel mode) lives entirely in each backend's
+``supports``/``cost``.
 
 Validation happens once per call: an explicit ``backend=`` override is
 checked against the spec here, while a dispatched backend is trusted —

@@ -3,38 +3,99 @@ pure-jnp oracle in ``ref.py`` and a dispatching wrapper in ``ops.py``.
 
   * ``semiring_matmul`` — weighted tropical (min,+) GEMM (blocked MCM core)
   * ``sdp_pipeline``    — VMEM-resident blocked pipelined S-DP solver
+                          (weighted + arg-emitting variants, DESIGN.md §4)
+  * ``mcm_pipeline``    — VMEM-resident diagonal-pipeline triangular solver
   * ``chunked_scan``    — gated linear recurrence (SSM/RWKV layers)
   * ``flash_attention`` — causal online-softmax attention (prefill cells)
 """
 from repro.kernels import ops, ref  # noqa: F401
 
 # ---------------------------------------------------------------------------
-# Backend registration (repro.dp): the Pallas-backed blocked S-DP route.
-# Preferred over the plain jnp blocked solver on TPU (VMEM-resident table,
-# one HBM load+store); slightly penalized elsewhere, where ops.sdp_blocked
-# lowers the same jnp path anyway and the extra indirection buys nothing.
+# Backend registration (repro.dp): the Pallas kernel tier.
+#
+# ``kernel_blocked`` (linear) and ``kernel_wavefront`` (triangular) route
+# through ``ops`` wrappers, so one registered backend covers every kernel
+# mode: the Pallas VMEM kernels on TPU (or under REPRO_KERNELS=
+# pallas|interpret), the equivalent jnp solver elsewhere. Costs are honest
+# per mode — discounted where the VMEM-resident kernel actually lowers
+# (one HBM load + store of the table), penalized on the jnp fallback (same
+# program as the plain route plus indirection) and heavily penalized under
+# the Python interpreter. ``supports`` enforces the VMEM budget whenever the
+# kernel path would be taken, and ``cache_tag`` folds the kernel mode into
+# the batch-jit cache keys so a mid-process REPRO_KERNELS flip can never
+# serve a program traced under the old mode (DESIGN.md §4).
 # ---------------------------------------------------------------------------
 from repro.dp import backends as _dp_backends  # noqa: E402
 
+#: VMEM working-set budget for kernel-tier eligibility: half of a v5e core's
+#: ~16 MiB, leaving headroom for double-buffering and compiler spills.
+VMEM_BUDGET_BYTES = 8 << 20
+
+
+def _mode_factor() -> float:
+    mode = ops.kernel_mode()
+    if mode == "pallas":
+        return 0.5      # VMEM-resident table: one HBM load + one store
+    if mode == "interpret":
+        return 32.0     # Python-interpreted kernel body (test mode)
+    return 1.25         # jnp fallback — plain solver + wrapper indirection
+
+
+def _on_kernel_path() -> bool:
+    return ops.kernel_mode() in ("pallas", "interpret")
+
+
+def _linear_vmem_bytes(spec) -> int:
+    """f32 working set of the (weighted, arg-emitting) S-DP kernel: padded
+    table + int32 arg table + optional (n, k) weight slab, all VMEM-resident."""
+    n_pad = spec.n + int(spec.offsets[-1])           # ≤ one block of padding
+    k = len(spec.offsets) if spec.weights is not None else 0
+    return 4 * n_pad * (2 + k)
+
+
+def _triangular_vmem_bytes(spec) -> int:
+    """f32 working set of the triangular kernel: padded cost + arg tables
+    plus the dense (cells, n-1) weight table (the dominant ~2n³ bytes term).
+    Geometry comes from the kernel itself so the gate can't diverge from the
+    real buffer layout."""
+    from repro.kernels.mcm_pipeline import _geometry
+
+    lanes, size = _geometry(spec.n)
+    return 4 * size * (2 + lanes)
+
 
 def _kernel_blocked_cost(spec) -> float:
-    import jax
-
-    base = _dp_backends.linear_costs(spec)["blocked"]
-    # The Pallas VMEM kernel only exists for the unweighted form; weighted
-    # specs fall through to the same jnp solver as the plain blocked route,
-    # so the TPU discount would be fictitious there.
-    on_kernel_path = jax.default_backend() == "tpu" and spec.weights is None
-    return base * (0.5 if on_kernel_path else 1.25)
+    return _dp_backends.linear_costs(spec)["blocked"] * _mode_factor()
 
 
-# Arg tracking rides the jnp blocked solver: the Pallas kernel emits costs
-# only, and the arg table's argmin shares the kernel's gather structure, so
-# the jnp variant is the honest capability to advertise on every platform.
-from repro.core.sdp import solve_blocked_with_args as _blocked_args  # noqa: E402
+def _kernel_blocked_supports(spec) -> bool:
+    return (not _on_kernel_path()
+            or _linear_vmem_bytes(spec) <= VMEM_BUDGET_BYTES)
+
+
+def _kernel_wavefront_cost(spec) -> float:
+    return _dp_backends.triangular_costs(spec)["wavefront"] * _mode_factor()
+
+
+def _kernel_wavefront_supports(spec) -> bool:
+    return (not _on_kernel_path()
+            or _triangular_vmem_bytes(spec) <= VMEM_BUDGET_BYTES)
+
+
+def _mode_tag() -> tuple:
+    return (ops.kernel_mode(),)
+
 
 _dp_backends.register(_dp_backends.linear_backend(
     "kernel_blocked", ops.sdp_blocked, cost=_kernel_blocked_cost,
-    jax_arg_fn=_blocked_args,
-    doc="ops.sdp_blocked: Pallas VMEM-resident pipeline on TPU, "
-        "jnp blocked solver elsewhere"))
+    supports=_kernel_blocked_supports,
+    jax_arg_fn=ops.sdp_blocked_with_args, cache_tag=_mode_tag,
+    doc="ops.sdp_blocked: Pallas VMEM-resident pipeline (weighted + "
+        "arg-emitting) on the kernel path, jnp blocked solver elsewhere"))
+
+_dp_backends.register(_dp_backends.triangular_tab_backend(
+    "kernel_wavefront", ops.mcm_blocked, cost=_kernel_wavefront_cost,
+    supports=_kernel_wavefront_supports,
+    jax_arg_fn=ops.mcm_blocked_with_args, cache_tag=_mode_tag,
+    doc="ops.mcm_blocked: Pallas VMEM-resident diagonal pipeline over the "
+        "weight table on the kernel path, jnp wavefront solver elsewhere"))

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: blocked triangular pipeline for the MCM family.
+
+The canonical triangular recurrence (DESIGN.md §3) on the diagonal-major
+linearized table,
+
+    m[i, i+d] = min_{0≤e<d} ( m[i, i+e] + m[i+e+1, i+d] + W[lin(i,d), e] ),
+
+finalizes one whole diagonal per outer step — the TPU-blocked reading of the
+paper's Fig.-8 pipeline, with the diagonal playing the role the ``B``-element
+block plays for S-DP: every operand of diagonal ``d`` lives on a strictly
+earlier diagonal, so the step's reads touch only finalized cells and its
+writes are address-distinct (Theorem 1's argument at diagonal granularity).
+
+The key VMEM property mirroring ``sdp_pipeline``: both the cost table and the
+dense ``(cells, n-1)`` split-major ``weight_table`` stay VMEM-resident for the
+whole solve, so HBM traffic is one load of the weights plus one store of the
+table — the split-candidate loop never touches HBM. Because diagonal-major
+order makes each diagonal *contiguous*, candidate ``e`` of the whole diagonal
+is three dynamic-start constant-length VMEM slices (left operands start at
+``off(e)``, right operands at ``off(d-e-1) + e + 1``, weights at column ``e``
+of rows ``off(d)``…), i.e. no gather at all — the same no-gather discipline
+the S-DP kernel gets from its static offsets.
+
+Slices are padded to the longest diagonal (``n-1`` lanes); lanes past the
+diagonal's true length compute garbage that lands in cells of *later*
+diagonals, each of which is fully rewritten by its own step before anything
+reads it — so no masking is needed on the write side, only the semiring-zero
+mask on the (exact-count) candidate loop. The arg variant stores the winning
+split offset per cell with the same address vector as the cost store
+(DESIGN.md §5). VMEM budget: the weight table dominates at
+``≈ 2 n³ bytes`` f32, which bounds the kernel to n ≈ 160 under the 8 MiB
+budget enforced by the backend's ``supports`` (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.mcm import lin_index, num_cells
+
+INF = jnp.inf
+
+
+def _off(d, n):
+    """Linear index of the first cell of diagonal ``d``; ``lin_index`` is
+    pure int arithmetic, so it traces fine on kernel scalars."""
+    return lin_index(0, d, n)
+
+
+def _make_kernel(n, L, with_args):
+    def kernel(*refs):
+        refs = list(refs)
+        w_ref = refs.pop(0)
+        st_ref = refs.pop(0)
+        arg_ref = refs.pop(0) if with_args else None
+
+        # diagonal 0 is preset to 0; the rest is rewritten diagonal-by-diagonal
+        st_ref[...] = jnp.zeros_like(st_ref[...])
+        if with_args:
+            arg_ref[...] = jnp.full_like(arg_ref[...], -1)
+
+        def diag(d, _):
+            off_d = _off(d, n)
+
+            def cand(e, carry):
+                acc, arg = carry
+                left = st_ref[pl.ds(_off(e, n), L)]
+                right = st_ref[pl.ds(_off(d - e - 1, n) + e + 1, L)]
+                w = w_ref[pl.ds(off_d, L), pl.ds(e, 1)][:, 0]
+                val = (left + right) + w          # association of the jnp path
+                if with_args:
+                    arg = jnp.where(val < acc, e.astype(jnp.int32), arg)
+                return jnp.minimum(acc, val), arg
+
+            acc, arg = jax.lax.fori_loop(
+                0, d, cand,
+                (jnp.full((L,), INF, dtype=st_ref.dtype),
+                 jnp.zeros((L,), dtype=jnp.int32)))
+            st_ref[pl.ds(off_d, L)] = acc
+            if with_args:
+                arg_ref[pl.ds(off_d, L)] = arg
+            return 0
+
+        jax.lax.fori_loop(1, n, diag, 0)
+
+    return kernel
+
+
+def _padded_weights(wtab, n, size, L):
+    w = jnp.asarray(wtab)
+    return jnp.zeros((size, L), dtype=w.dtype).at[: num_cells(n)].set(w)
+
+
+def _geometry(n: int):
+    """(L, size): padded lane count and buffer length. Slices of length L
+    starting at any valid diagonal/operand offset stay inside ``size``."""
+    L = max(n - 1, 1)
+    return L, num_cells(n) + L + 1
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def mcm_pipeline_pallas(wtab, n: int, interpret: bool = False):
+    """wtab: (num_cells(n), n-1) split-major weights (``core.mcm.weight_table``).
+    Returns the linearized cost table, bit-equal to ``solve_wavefront_tab``."""
+    L, size = _geometry(n)
+    w = _padded_weights(wtab, n, size, L)
+    kernel = _make_kernel(n, L, with_args=False)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((size,), w.dtype),
+        interpret=interpret,
+    )(w)
+    return out[: num_cells(n)]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def mcm_pipeline_pallas_with_args(wtab, n: int, interpret: bool = False):
+    """``mcm_pipeline_pallas`` + the best-split table (−1 on diagonal 0),
+    matching ``solve_wavefront_tab_with_args``: splits scanned in ascending
+    ``e`` with a strict improve predicate = argmin's first-occurrence rule.
+    Returns ``(st, args)``."""
+    L, size = _geometry(n)
+    w = _padded_weights(wtab, n, size, L)
+    kernel = _make_kernel(n, L, with_args=True)
+    out, args = pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((size,), w.dtype),
+                   jax.ShapeDtypeStruct((size,), jnp.int32)),
+        interpret=interpret,
+    )(w)
+    return out[: num_cells(n)], args[: num_cells(n)]

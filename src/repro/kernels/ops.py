@@ -18,7 +18,10 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.chunked_scan import chunked_scan_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.sdp_pipeline import sdp_pipeline_pallas
+from repro.kernels.mcm_pipeline import (mcm_pipeline_pallas,
+                                        mcm_pipeline_pallas_with_args)
+from repro.kernels.sdp_pipeline import (sdp_pipeline_pallas,
+                                        sdp_pipeline_pallas_with_args)
 from repro.kernels.semiring_matmul import tropical_matmul_pallas
 
 
@@ -52,16 +55,50 @@ def sdp_blocked(init, offsets: tuple, op: str, n: int, block: int = 512,
     from repro.core.sdp import solve_blocked
 
     mode = kernel_mode()
-    # The Pallas kernel implements the pure (unweighted) S-DP form only; the
-    # weighted extension lowers the jnp blocked solver on every backend
-    # (DESIGN.md §4).
-    if weights is None:
-        if mode == "pallas":
-            return sdp_pipeline_pallas(init, offsets, op, n, block=block)
-        if mode == "interpret":
-            return sdp_pipeline_pallas(init, offsets, op, n, block=block,
-                                       interpret=True)
+    if mode in ("pallas", "interpret"):
+        return sdp_pipeline_pallas(init, offsets, op, n, block=block,
+                                   weights=weights,
+                                   interpret=(mode == "interpret"))
     return solve_blocked(init, offsets, op, n, block=block, weights=weights)
+
+
+def sdp_blocked_with_args(init, offsets: tuple, op: str, n: int,
+                          block: int = 512, weights=None):
+    """Arg-emitting blocked S-DP: the Pallas kernel writes the winning lane
+    next to each cost block on the kernel path, the jnp blocked solver
+    elsewhere — both with identical first-occurrence tie rules, so
+    ``reconstruct=True`` routes through Pallas bit-identically."""
+    from repro.core.sdp import solve_blocked_with_args
+
+    mode = kernel_mode()
+    if mode in ("pallas", "interpret"):
+        return sdp_pipeline_pallas_with_args(init, offsets, op, n, block=block,
+                                             weights=weights,
+                                             interpret=(mode == "interpret"))
+    return solve_blocked_with_args(init, offsets, op, n, block=block,
+                                   weights=weights)
+
+
+def mcm_blocked(wtab, n: int):
+    """Triangular (split-form) table solve: VMEM-resident diagonal-pipeline
+    Pallas kernel on the kernel path, jnp wavefront solver elsewhere."""
+    from repro.core.mcm import solve_wavefront_tab
+
+    mode = kernel_mode()
+    if mode in ("pallas", "interpret"):
+        return mcm_pipeline_pallas(wtab, n, interpret=(mode == "interpret"))
+    return solve_wavefront_tab(wtab, n)
+
+
+def mcm_blocked_with_args(wtab, n: int):
+    """``mcm_blocked`` + best-split table (device-side args on every path)."""
+    from repro.core.mcm import solve_wavefront_tab_with_args
+
+    mode = kernel_mode()
+    if mode in ("pallas", "interpret"):
+        return mcm_pipeline_pallas_with_args(wtab, n,
+                                             interpret=(mode == "interpret"))
+    return solve_wavefront_tab_with_args(wtab, n)
 
 
 def linear_scan(x, decay, h0, chunk: int = 128):
@@ -79,8 +116,32 @@ def linear_scan(x, decay, h0, chunk: int = 128):
 # ---------------------------------------------------------------------------
 def _gqa_broadcast(k, hq):
     b, hkv, s, d = k.shape
+    if hq % hkv != 0:
+        # floor-division repeat would silently drop heads (Hkv=3, Hq=7 -> 6)
+        raise ValueError(
+            f"GQA requires the query head count to be a multiple of the kv "
+            f"head count; got Hq={hq} query heads, Hkv={hkv} kv heads")
     rep = hq // hkv
     return jnp.repeat(k, rep, axis=1) if rep > 1 else k
+
+
+def _flash_chunk_env(default: int) -> int:
+    """Resolve the KV chunk size, validating ``REPRO_FLASH_CHUNK`` — a typo
+    must fail naming the env var, not as a bare int() ValueError from deep
+    inside ``flash_attention`` (the ``REPRO_KERNELS`` guard's pattern)."""
+    env = os.environ.get("REPRO_FLASH_CHUNK")
+    if env is None:
+        return default
+    try:
+        chunk = int(env)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_FLASH_CHUNK={env!r} is not a valid chunk size; "
+            f"expected a positive integer") from None
+    if chunk < 1:
+        raise ValueError(
+            f"REPRO_FLASH_CHUNK={env!r} must be a positive integer")
+    return chunk
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "chunk"))
@@ -90,7 +151,11 @@ def _flash_ref_chunked(q, k, v, causal: bool = True, chunk: int = 512):
     b, h, sq, d = q.shape
     sk = k.shape[2]
     chunk = min(chunk, sk)
-    nk = sk // chunk
+    nk = -(-sk // chunk)
+    padded = nk * chunk != sk
+    if padded:  # ragged tail: pad KV to whole chunks, mask below
+        pad = ((0, 0), (0, 0), (0, nk * chunk - sk), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
     scale = 1.0 / (d ** 0.5)
     qf = q.astype(jnp.float32) * scale
     q_pos = jnp.arange(sq) + (sk - sq)
@@ -102,9 +167,12 @@ def _flash_ref_chunked(q, k, v, causal: bool = True, chunk: int = 512):
         acc, m, l = carry
         kc, vc, k0 = kv
         s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc.astype(jnp.float32))
-        if causal:
+        if causal or padded:  # aligned non-causal stays mask-free
             k_pos = k0 + jnp.arange(chunk)
-            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, -jnp.inf)
+            valid = k_pos[None, :] < sk        # padded tail keys drop out
+            if causal:
+                valid = valid & (q_pos[:, None] >= k_pos[None, :])
+            s = jnp.where(valid, s, -jnp.inf)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
@@ -126,7 +194,7 @@ def flash_attention(q, k, v, causal: bool = True, chunk: int = 512):
     """q: (B, Hq, S, D); k, v: (B, Hkv, S, D). Returns (B, Hq, S, D)."""
     from repro.runtime.sharding import hint
 
-    chunk = int(os.environ.get("REPRO_FLASH_CHUNK", chunk))
+    chunk = _flash_chunk_env(chunk)
 
     hq = q.shape[1]
     k = _gqa_broadcast(k, hq)

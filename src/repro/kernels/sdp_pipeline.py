@@ -12,6 +12,17 @@ The whole table lives in VMEM (one f32 table of 2²⁰ elements = 4 MiB; VMEM is
 one load + one store of the table regardless of k — versus O(nk) HBM touches
 for the naive form. Tables beyond VMEM would stream via double-buffered DMA
 windows; that variant is out of scope here and noted in DESIGN.md.
+
+Weighted extension (DESIGN.md §3/§4): with ``(⊕, ⊙)`` the semiring whose
+``add`` matches the semigroup ``op``, passing an ``(n, k)`` ``weights`` array
+turns each step into one extra ``(B, k)`` VMEM slice-load plus a per-lane
+semiring-⊙ before the tree-⊕ — the recurrence becomes
+``ST[i] = ⊕_j (ST[i-a_j] ⊙ w[i, j])``, which is the form every weighted zoo
+problem (edit distance, LCS, Viterbi, knapsack) linearizes into. The
+arg-emitting variant (``sdp_pipeline_pallas_with_args``) additionally stores
+the winning lane index next to each cost block: the int32 arg store rides the
+same per-step address vector the cost store already proved conflict-free, so
+Theorem 1's write-distinctness argument extends verbatim (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -21,22 +32,58 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.semiring import SEMIGROUP_TO_SEMIRING
+
 _OPS = {"min": jnp.minimum, "max": jnp.maximum, "add": jnp.add}
+#: strict "new term wins" predicates reproducing jnp.arg{min,max}'s
+#: first-occurrence tie-breaking when lanes are scanned in ascending order
+_BEATS = {"min": jnp.less, "max": jnp.greater}
 
 
-def _make_kernel(offsets, op, B, num_blocks):
+def _plan(offsets, n: int, block: int):
+    """Shared block geometry: (B, num_blocks, n_pad)."""
+    a1, ak = offsets[0], offsets[-1]
+    B = max(1, min(ak, block))
+    num_blocks = -(-(n - a1) // B)
+    return B, num_blocks, a1 + num_blocks * B
+
+
+def _make_kernel(offsets, op, B, num_blocks, weighted, with_args):
     a1 = offsets[0]
     combine = _OPS[op]
+    mul = SEMIGROUP_TO_SEMIRING[op].mul
 
-    def kernel(st_ref, out_ref):
+    def kernel(*refs):
+        refs = list(refs)
+        st_ref = refs.pop(0)
+        w_ref = refs.pop(0) if weighted else None
+        out_ref = refs.pop(0)
+        arg_ref = refs.pop(0) if with_args else None
+
         out_ref[...] = st_ref[...]
+        if with_args:
+            arg_ref[...] = jnp.full_like(arg_ref[...], -1)
 
         def body(b, _):
             start = a1 + b * B
-            acc = out_ref[pl.ds(start - offsets[0], B)]
-            for aj in offsets[1:]:  # k unrolled static-offset slices
-                acc = combine(acc, out_ref[pl.ds(start - aj, B)])
+            if weighted:
+                wrow = w_ref[pl.ds(start, B), :]          # one (B, k) load
+
+            def term(j):
+                t = out_ref[pl.ds(start - offsets[j], B)]
+                return mul(t, wrow[:, j]) if weighted else t
+
+            acc = term(0)
+            if with_args:
+                arg = jnp.zeros((B,), dtype=jnp.int32)
+            for j in range(1, len(offsets)):  # k unrolled static-offset slices
+                val = term(j)
+                if with_args:
+                    arg = jnp.where(_BEATS[op](val, acc), jnp.int32(j), arg)
+                acc = combine(acc, val)
             out_ref[pl.ds(start, B)] = acc
+            if with_args:
+                arg_ref[pl.ds(start, B)] = arg
             return 0
 
         jax.lax.fori_loop(0, num_blocks, body, 0)
@@ -44,20 +91,56 @@ def _make_kernel(offsets, op, B, num_blocks):
     return kernel
 
 
+def _pad_inputs(init, weights, offsets, n, n_pad):
+    st0 = jnp.zeros((n_pad,), dtype=init.dtype).at[: offsets[0]].set(init)
+    ops = [st0]
+    if weights is not None:
+        ops.append(jnp.zeros((n_pad, len(offsets)),
+                             dtype=st0.dtype).at[:n].set(weights.astype(st0.dtype)))
+    return ops
+
+
 @functools.partial(jax.jit, static_argnames=("offsets", "op", "n", "block", "interpret"))
 def sdp_pipeline_pallas(init, offsets: tuple, op: str, n: int,
-                        block: int = 512, interpret: bool = False):
-    """init: (a_1,) preset values. Returns ST[0..n-1]."""
-    a1, ak = offsets[0], offsets[-1]
-    B = max(1, min(ak, block))
-    num_blocks = -(-(n - a1) // B)
-    n_pad = a1 + num_blocks * B  # pad the tail so every block is full-width
-
-    st0 = jnp.zeros((n_pad,), dtype=init.dtype).at[:a1].set(init)
-    kernel = _make_kernel(offsets, op, B, num_blocks)
+                        block: int = 512, weights=None,
+                        interpret: bool = False):
+    """init: (a_1,) preset values; optional (n, k) semiring ``weights``.
+    Returns ST[0..n-1]."""
+    a1 = offsets[0]
+    if n <= a1:  # preset-only table: nothing to pipeline, clamp the presets
+        return init[:n]
+    B, num_blocks, n_pad = _plan(offsets, n, block)
+    kernel = _make_kernel(offsets, op, B, num_blocks,
+                          weighted=weights is not None, with_args=False)
     out = pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct((n_pad,), init.dtype),
         interpret=interpret,
-    )(st0)
+    )(*_pad_inputs(init, weights, offsets, n, n_pad))
     return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "op", "n", "block", "interpret"))
+def sdp_pipeline_pallas_with_args(init, offsets: tuple, op: str, n: int,
+                                  block: int = 512, weights=None,
+                                  interpret: bool = False):
+    """``sdp_pipeline_pallas`` + the per-cell winning-lane index (preset cells
+    carry -1), matching ``core.sdp.solve_blocked_with_args`` exactly: lanes are
+    scanned in ascending order with a strict improve predicate, which is
+    jnp.arg{min,max}'s first-occurrence tie rule. Returns ``(st, args)``."""
+    if op not in _BEATS:
+        raise ValueError(f"argument tracking is undefined for op={op!r} "
+                         "(every lane contributes to the reduction)")
+    a1 = offsets[0]
+    if n <= a1:  # preset-only: clamped presets, every cell an init cell
+        return init[:n], jnp.full((n,), -1, dtype=jnp.int32)
+    B, num_blocks, n_pad = _plan(offsets, n, block)
+    kernel = _make_kernel(offsets, op, B, num_blocks,
+                          weighted=weights is not None, with_args=True)
+    out, args = pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((n_pad,), init.dtype),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.int32)),
+        interpret=interpret,
+    )(*_pad_inputs(init, weights, offsets, n, n_pad))
+    return out[:n], args[:n]

@@ -1,0 +1,319 @@
+"""Kernel-tier acceptance (DESIGN.md §4): the weighted / arg-emitting S-DP
+Pallas kernel and the triangular diagonal-pipeline kernel must be *bit-equal*
+to the jnp solvers they accelerate (min/max are exact, so no tolerance), the
+kernel routes must be offered for every weighted linear spec and the MCM
+family, and ``reconstruct=True`` through a Pallas route must decode solutions
+that recompute to the table optimum. All kernels run under interpret mode
+(the kernel body executes on CPU)."""
+import zlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import dp
+from repro.core.mcm import (solve_wavefront_tab, solve_wavefront_tab_with_args,
+                            weight_table)
+from repro.core.sdp import solve_blocked, solve_blocked_with_args
+from repro.kernels.mcm_pipeline import (mcm_pipeline_pallas,
+                                        mcm_pipeline_pallas_with_args)
+from repro.kernels.sdp_pipeline import (sdp_pipeline_pallas,
+                                        sdp_pipeline_pallas_with_args)
+
+WEIGHTED_LINEAR = ("edit_distance", "lcs", "viterbi", "unbounded_knapsack")
+TRIANGULAR = ("mcm", "optimal_bst", "polygon_triangulation")
+
+
+def _rng(tag: str) -> np.random.Generator:
+    return np.random.default_rng(zlib.crc32(tag.encode()))
+
+
+# ---------------------------------------------------------------------------
+# Bit-equality property sweep: every weighted zoo problem through the kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", WEIGHTED_LINEAR)
+@pytest.mark.parametrize("block", [3, 512])
+def test_weighted_kernel_bit_equal_on_zoo(name, block):
+    prob = dp.get_problem(name)
+    rng = _rng(f"{name}/{block}")
+    for trial in range(3):
+        spec = prob.encode(**prob.sample(rng, int(rng.integers(4, 12))))
+        init = jnp.asarray(spec.init)
+        w = jnp.asarray(spec.weights)
+        want = solve_blocked(init, spec.offsets, spec.op, spec.n,
+                             block=block, weights=w)
+        got = sdp_pipeline_pallas(init, spec.offsets, spec.op, spec.n,
+                                  block=block, weights=w, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"{name} trial {trial}")
+        wt, wa = solve_blocked_with_args(init, spec.offsets, spec.op, spec.n,
+                                         block=block, weights=w)
+        gt, ga = sdp_pipeline_pallas_with_args(
+            init, spec.offsets, spec.op, spec.n, block=block, weights=w,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(gt), np.asarray(wt))
+        np.testing.assert_array_equal(np.asarray(ga), np.asarray(wa),
+                                      err_msg=f"{name} args trial {trial}")
+
+
+@pytest.mark.parametrize("offsets,n,block", [
+    ((5, 3, 1), 64, 16), ((7, 4, 2), 257, 3), ((3, 2, 1), 41, 512),
+    ((16, 8, 4, 2), 100, 5), ((2, 1), 9, 1),
+])
+@pytest.mark.parametrize("op", ["min", "max", "add"])
+def test_weighted_kernel_ragged_sweep(offsets, n, block, op):
+    """Raw ragged (n, block) combinations with semiring-zero masked lanes —
+    the shape family the grid linearizations produce."""
+    rng = _rng(f"{offsets}/{n}/{block}/{op}")
+    init = jnp.asarray(rng.normal(size=(offsets[0],)), jnp.float32)
+    w = rng.normal(size=(n, len(offsets))).astype(np.float32)
+    if op != "add":  # mask ~20% of lanes with the semiring zero, like the zoo
+        mask = rng.random(w.shape) < 0.2
+        w[mask] = np.inf if op == "min" else -np.inf
+    w = jnp.asarray(w)
+    got = sdp_pipeline_pallas(init, offsets, op, n, block=block, weights=w,
+                              interpret=True)
+    want = solve_blocked(init, offsets, op, n, block=block, weights=w)
+    if op == "add":
+        # ⊕ is a float sum: the kernel's sequential lane combine and the jnp
+        # solver's tree reduce round differently, and plus-times ⊙ chains
+        # amplify the gap exponentially in depth (both stay within ~5e-4 of
+        # the f64 oracle on this sweep; min/max below are exact, no tolerance)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3)
+    else:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("name", TRIANGULAR)
+def test_triangular_kernel_bit_equal_on_zoo(name):
+    prob = dp.get_problem(name)
+    rng = _rng(name)
+    for size in (3, 7, 12):
+        spec = prob.encode(**prob.sample(rng, size))
+        w = jnp.asarray(spec.weights)
+        np.testing.assert_array_equal(
+            np.asarray(mcm_pipeline_pallas(w, spec.n, interpret=True)),
+            np.asarray(solve_wavefront_tab(w, spec.n)))
+        gt, ga = mcm_pipeline_pallas_with_args(w, spec.n, interpret=True)
+        wt, wa = solve_wavefront_tab_with_args(w, spec.n)
+        np.testing.assert_array_equal(np.asarray(gt), np.asarray(wt))
+        np.testing.assert_array_equal(np.asarray(ga), np.asarray(wa))
+
+
+def test_triangular_kernel_degenerate_widths():
+    for n in (1, 2):
+        wtab = jnp.asarray(np.arange(max(n - 1, 1) * (n * (n + 1) // 2),
+                                     dtype=np.float32)
+                           .reshape(n * (n + 1) // 2, max(n - 1, 1)))
+        np.testing.assert_array_equal(
+            np.asarray(mcm_pipeline_pallas(wtab, n, interpret=True)),
+            np.asarray(solve_wavefront_tab(wtab, n)))
+
+
+# ---------------------------------------------------------------------------
+# Preset-only guard: n ≤ a_1 must clamp + early-return, not crash broadcasting
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [3, 5])
+def test_preset_only_spec_returns_clamped_init(n):
+    init = jnp.asarray(np.arange(5, dtype=np.float32))
+    weights = jnp.zeros((n, 3), jnp.float32)
+    for w in (None, weights):
+        out = sdp_pipeline_pallas(init, (5, 3, 1), "min", n, weights=w,
+                                  interpret=True)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.arange(n, dtype=np.float32))
+        st, args = sdp_pipeline_pallas_with_args(init, (5, 3, 1), "min", n,
+                                                 weights=w, interpret=True)
+        np.testing.assert_array_equal(np.asarray(st),
+                                      np.arange(n, dtype=np.float32))
+        assert args.shape == (n,) and np.all(np.asarray(args) == -1)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_preset_only_guard_mode_independent(monkeypatch, mode):
+    """The kernel_blocked route must clamp preset-only specs identically on
+    every kernel mode — the core solvers and the Pallas kernels share the
+    same clamp semantics."""
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_KERNELS", mode)
+    init = np.arange(5, dtype=np.float32)
+    out = ops.sdp_blocked(jnp.asarray(init), (5, 3, 1), "min", 3)
+    np.testing.assert_array_equal(np.asarray(out), init[:3])
+    st, args = ops.sdp_blocked_with_args(jnp.asarray(init), (5, 3, 1), "min", 3)
+    np.testing.assert_array_equal(np.asarray(st), init[:3])
+    assert np.all(np.asarray(args) == -1)
+    # ... and through the routed backend on a dispatchable preset-only spec
+    spec = dp.LinearSpec(offsets=(5, 3, 1), op="min", n=3, init=init)
+    np.testing.assert_array_equal(
+        dp.solve_spec(spec, backend="kernel_blocked"), init[:3])
+
+
+def test_preset_only_spec_solves_on_every_linear_route():
+    """Preset-only specs are dispatchable (the §3 cost floor exists for
+    them), so EVERY linear backend — and the default dispatch — must clamp
+    instead of broadcast-crashing on the preset write."""
+    init = np.arange(5, dtype=np.float32)
+    for weights in (None, np.zeros((3, 3), np.float32)):
+        spec = dp.LinearSpec(offsets=(5, 3, 1), op="min", n=3, init=init,
+                             weights=weights)
+        for b in dp.backends.candidates(spec):
+            np.testing.assert_array_equal(
+                dp.solve_spec(spec, backend=b.name), init[:3],
+                err_msg=b.name)
+        np.testing.assert_array_equal(dp.solve_spec(spec), init[:3])
+        table, args, _ = dp.routing.solve_spec_with_args(spec)
+        np.testing.assert_array_equal(table, init[:3])
+        assert np.all(args == -1)
+    from repro.core.sdp import sdp_reference
+
+    np.testing.assert_array_equal(
+        sdp_reference(init, (5, 3, 1), "min", 3), init[:3])
+
+
+# ---------------------------------------------------------------------------
+# Dispatch integration: routes offered, honest gates, reconstruct via Pallas
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def interpret_mode(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+
+
+def test_dispatch_offers_kernel_routes(interpret_mode):
+    rng = _rng("offers")
+    for name in WEIGHTED_LINEAR:
+        prob = dp.get_problem(name)
+        spec = prob.encode(**prob.sample(rng, 6))
+        names = [b.name for b in dp.backends.candidates(spec)]
+        assert "kernel_blocked" in names, (name, names)
+    for name in TRIANGULAR:
+        prob = dp.get_problem(name)
+        spec = prob.encode(**prob.sample(rng, 6))
+        names = [b.name for b in dp.backends.candidates(spec)]
+        assert "kernel_wavefront" in names, (name, names)
+
+
+def test_vmem_budget_gates_kernel_eligibility(interpret_mode):
+    from repro import kernels
+
+    k = 4
+    big_n = (kernels.VMEM_BUDGET_BYTES // (4 * (2 + k))) + 8
+    spec = dp.LinearSpec(
+        offsets=(8, 4, 2, 1), op="min", n=int(big_n),
+        init=np.zeros(8, np.float32),
+        weights=np.broadcast_to(np.zeros(k, np.float32), (int(big_n), k)))
+    assert not dp.backends.get("kernel_blocked").supports(spec)
+    tri = dp.TriangularSpec(
+        n=256, weights=np.broadcast_to(np.float32(0.0), (256 * 257 // 2, 255)))
+    assert not dp.backends.get("kernel_wavefront").supports(tri)
+    # small instances stay eligible
+    small = dp.get_problem("edit_distance").encode(x=[1, 2], y=[2, 1])
+    assert dp.backends.get("kernel_blocked").supports(small)
+
+
+def test_vmem_gate_void_on_jnp_fallback(monkeypatch):
+    """Under REPRO_KERNELS=ref the kernel routes lower the plain jnp solvers,
+    where no VMEM budget applies — oversized specs stay supported."""
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    tri = dp.TriangularSpec(
+        n=256, weights=np.broadcast_to(np.float32(0.0), (256 * 257 // 2, 255)))
+    assert dp.backends.get("kernel_wavefront").supports(tri)
+
+
+def test_reconstruct_through_pallas_routes(interpret_mode):
+    """Acceptance: a Pallas route solves with device-emitted args and the
+    decoded solution independently recomputes to the table optimum."""
+    from test_dp_reconstruct import VERIFIERS
+
+    cases = [("edit_distance", "kernel_blocked"),
+             ("lcs", "kernel_blocked"),
+             ("viterbi", "kernel_blocked"),
+             ("unbounded_knapsack", "kernel_blocked"),
+             ("mcm", "kernel_wavefront"),
+             ("optimal_bst", "kernel_wavefront"),
+             ("polygon_triangulation", "kernel_wavefront")]
+    for name, backend in cases:
+        prob = dp.get_problem(name)
+        rng = _rng(f"reconstruct/{name}")
+        kw = prob.sample(rng, 7)
+        ans = dp.solve(name, backend=backend, reconstruct=True, **kw)
+        assert ans.source == "device", (name, backend)
+        got, want = VERIFIERS[name](kw, ans)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5,
+                                   err_msg=f"{name} via {backend}")
+
+
+def test_kernel_tables_match_dispatched_jnp_route(interpret_mode):
+    """Full-table equality through the public routing layer: the kernel
+    route's table is exactly the jnp blocked/wavefront table."""
+    rng = _rng("routing-tables")
+    spec = dp.get_problem("viterbi").encode(
+        **dp.get_problem("viterbi").sample(rng, 8))
+    np.testing.assert_array_equal(
+        dp.solve_spec(spec, backend="kernel_blocked"),
+        dp.solve_spec(spec, backend="blocked"))
+    tri = dp.get_problem("mcm").encode(
+        **dp.get_problem("mcm").sample(rng, 9))
+    np.testing.assert_array_equal(
+        dp.solve_spec(tri, backend="kernel_wavefront"),
+        dp.solve_spec(tri, backend="wavefront"))
+
+
+def test_batch_cache_keys_carry_kernel_mode(monkeypatch):
+    """A REPRO_KERNELS flip mid-process must retrace the kernel route's
+    batched program, not serve the one traced under the old mode — the
+    cache_tag folds the mode into the jit cache key (and TRACE_LOG entry)."""
+    rng = _rng("cache-tag")
+    kw = {"dims": rng.integers(1, 20, size=14).astype(np.float64)}
+    instances = [kw] * 3
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    before = len(dp.backends.TRACE_LOG)
+    dp.batch_solve("mcm", instances, backend="kernel_wavefront")
+    ref_keys = dp.backends.TRACE_LOG[before:]
+    assert ref_keys and all("ref" in k for k in ref_keys)
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    before = len(dp.backends.TRACE_LOG)
+    got = dp.batch_solve("mcm", instances, backend="kernel_wavefront")
+    interp_keys = dp.backends.TRACE_LOG[before:]
+    assert interp_keys and all("interpret" in k for k in interp_keys)
+    want = dp.batch_solve("mcm", instances, backend="wavefront")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_calibration_entries_keyed_by_kernel_mode(monkeypatch):
+    """Timings measured under a non-default REPRO_KERNELS mode must not
+    drive dispatch under another mode: the kernel routes trace different
+    programs per mode, so the measurement platform axis carries the
+    override (the measured-cost analogue of the batch-jit cache_tag)."""
+    from repro.dp import autotune
+
+    rng = _rng("calib-mode")
+    spec = dp.get_problem("mcm").encode(**dp.get_problem("mcm").sample(rng, 7))
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    autotune.get_table().record("kernel_wavefront", spec.shape_key(), 500.0)
+    assert autotune.has_measurement("kernel_wavefront", spec.shape_key())
+    b = dp.backends.get("kernel_wavefront")
+    assert autotune.measured_ms(b, spec) == 500.0
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    # same process, different mode: the interpret timing is invisible
+    assert not autotune.has_measurement("kernel_wavefront", spec.shape_key())
+    assert autotune.measured_ms(b, spec) is None
+
+
+def test_engine_drains_through_kernel_route(interpret_mode):
+    """A reconstruct bucket drained on a kernel route emits device args for
+    the whole batch and one traceback program (the §5 invariant holds through
+    the Pallas tier)."""
+    rng = _rng("engine")
+    eng = dp.DPEngine(max_batch=8, feedback=False)
+    kws = [{"x": rng.integers(0, 4, size=6), "y": rng.integers(0, 4, size=7)}
+           for _ in range(4)]
+    rids = [eng.submit("edit_distance", reconstruct=True, **kw) for kw in kws]
+    out = eng.run(backend="kernel_blocked")
+    assert eng.stats["device_tracebacks"] == 4
+    for rid, kw in zip(rids, kws):
+        ans = out[rid].solution
+        assert ans is not None and ans.source == "device"
+        assert out[rid].backend == "kernel_blocked"

@@ -64,6 +64,20 @@ def test_sdp_kernel_fp64_like_add():
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
 
 
+@pytest.mark.parametrize("offsets", [(5, 3, 1), (4, 1)])
+@pytest.mark.parametrize("op", ["min", "max"])
+def test_sdp_kernel_weighted_sweep(offsets, op):
+    a1, k = offsets[0], len(offsets)
+    for n in (33, 128):
+        init = jnp.asarray(rng.normal(size=(a1,)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+        want = sdp.sdp_reference(np.asarray(init), offsets, op, n,
+                                 weights=np.asarray(w))
+        got = sdp_pipeline_pallas(init, offsets, op, n, block=8, weights=w,
+                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # chunked linear scan
 # ---------------------------------------------------------------------------
@@ -106,6 +120,52 @@ def test_flash_ref_chunked_matches_oracle():
     got = _flash_ref_chunked(q, k, v, causal=True, chunk=32)
     want = ref.attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("s,chunk", [(5, 3), (7, 4), (130, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_ref_chunked_ragged_tail(s, chunk, causal):
+    """Regression: S % chunk != 0 used to crash the KV reshape; the tail is
+    now padded to a whole chunk with the padded keys masked to -inf."""
+    from repro.kernels.ops import _flash_ref_chunked
+
+    q = jnp.asarray(rng.normal(size=(2, 3, s, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 3, s, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 3, s, 16)), jnp.float32)
+    got = _flash_ref_chunked(q, k, v, causal=causal, chunk=chunk)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_broadcast_rejects_indivisible_heads():
+    """Regression: Hkv=3, Hq=7 used to silently produce 6 heads; the error
+    must name both counts."""
+    from repro.kernels.ops import _gqa_broadcast
+
+    k = jnp.zeros((1, 3, 8, 4), jnp.float32)
+    with pytest.raises(ValueError, match=r"Hq=7.*Hkv=3"):
+        _gqa_broadcast(k, 7)
+    assert _gqa_broadcast(k, 6).shape == (1, 6, 8, 4)
+    assert _gqa_broadcast(k, 3).shape == (1, 3, 8, 4)
+
+
+@pytest.mark.parametrize("bad", ["abc", "0", "-4", "1.5", ""])
+def test_flash_chunk_env_rejects_invalid(monkeypatch, bad):
+    """Regression: REPRO_FLASH_CHUNK=abc surfaced a bare int() ValueError
+    from deep inside flash_attention; it must name the env var."""
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_FLASH_CHUNK", bad)
+    with pytest.raises(ValueError, match="REPRO_FLASH_CHUNK"):
+        ops._flash_chunk_env(512)
+    q = jnp.asarray(rng.normal(size=(1, 2, 8, 4)), jnp.float32)
+    with pytest.raises(ValueError, match="REPRO_FLASH_CHUNK"):
+        ops.flash_attention(q, q, q)
+    monkeypatch.setenv("REPRO_FLASH_CHUNK", "64")
+    assert ops._flash_chunk_env(512) == 64
+    monkeypatch.delenv("REPRO_FLASH_CHUNK")
+    assert ops._flash_chunk_env(512) == 512
 
 
 def test_kernel_mode_rejects_invalid_env(monkeypatch):
