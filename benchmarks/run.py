@@ -12,7 +12,8 @@ import argparse
 
 
 def main(smoke: bool = False, check_dispatch: bool = False) -> None:
-    from benchmarks import dp_zoo_bench, mcm_bench, roofline, table1_sdp
+    from benchmarks import (dp_service_bench, dp_zoo_bench, mcm_bench,
+                            roofline, table1_sdp)
 
     if smoke:
         print("# smoke mode: reduced sizes, correctness checks only")
@@ -34,6 +35,15 @@ def main(smoke: bool = False, check_dispatch: bool = False) -> None:
     else:
         dp_zoo_bench.run(calibrate=check_dispatch,
                          check_dispatch=check_dispatch)
+    print("# DP service — sharded continuous-batching serving tier "
+          "(DESIGN.md §7)")
+    # smoke: in-process leg only — the forced-8-device comparison pays a
+    # second jax startup, which the dedicated CI sharded-test leg covers
+    if smoke:
+        dp_service_bench.run(out_path="", n_requests=64,
+                             subprocess_leg=False, check_perf=False)
+    else:
+        dp_service_bench.run()
     print("# Roofline — dry-run derived terms (EXPERIMENTS.md §Roofline)")
     roofline.run()
 

@@ -16,6 +16,12 @@ Layers (DESIGN.md §3, §5):
   reconstruct — arg tables → batched tracebacks → decoded Answers
   engine      — DPEngine: bucketed request/response serving front end,
                 folding realized drain latencies back into autotune
+  sharding    — ShardContext / ShardedDPEngine: bucket drains shard_mapped
+                over a device mesh, observed under the ("shard", ndev)
+                regime
+  service     — DPService: submit/poll handles, admission control with
+                deadlines/priorities, content-digest answer cache, the
+                continuous scheduling loop (DESIGN.md §7)
 
 Quickstart::
 
@@ -26,6 +32,9 @@ Quickstart::
     eng = dp.DPEngine(max_batch=32)
     rids = [eng.submit("mcm", reconstruct=True, dims=d) for d in batches]
     answers = eng.run()
+    svc = dp.DPService(max_batch=32)        # shards when >1 device visible
+    tid = svc.submit("mcm", dims=[30, 35, 15, 5], priority=1)
+    res = svc.run()[tid]                    # res.answer, res.backend
 """
 from repro.dp import autotune, backends, reconstruct, registry, routing, zoo  # noqa: F401
 from repro.dp.autotune import calibrate, routing_report  # noqa: F401
@@ -34,16 +43,21 @@ route = dispatch
 from repro.dp.engine import DPEngine, DPRequest, DPResponse  # noqa: F401
 from repro.dp.problem import (  # noqa: F401
     Answer, DPProblem, LinearPath, LinearSpec, Spec, TriangularPath,
-    TriangularSpec)
+    TriangularSpec, spec_digest)
 from repro.dp.registry import get as get_problem  # noqa: F401
 from repro.dp.registry import names as problem_names  # noqa: F401
 from repro.dp.registry import problems  # noqa: F401
+from repro.dp.service import AdmissionError, DPService, ServiceResult  # noqa: F401
+from repro.dp.sharding import ShardContext, ShardedDPEngine  # noqa: F401
+from repro.dp import service, sharding  # noqa: F401
 
 __all__ = [
-    "Answer", "DPEngine", "DPProblem", "DPRequest", "DPResponse",
-    "LinearPath", "LinearSpec", "Spec", "TriangularPath", "TriangularSpec",
-    "autotune", "backends", "batch_solve", "batch_solve_specs", "calibrate",
-    "dispatch", "route", "get_problem", "problem_names", "problems",
-    "reconstruct", "registry", "routing", "routing_report", "solve",
-    "solve_spec", "zoo",
+    "AdmissionError", "Answer", "DPEngine", "DPProblem", "DPRequest",
+    "DPResponse", "DPService", "LinearPath", "LinearSpec", "ServiceResult",
+    "ShardContext", "ShardedDPEngine", "Spec", "TriangularPath",
+    "TriangularSpec", "autotune", "backends", "batch_solve",
+    "batch_solve_specs", "calibrate", "dispatch", "route", "get_problem",
+    "problem_names", "problems", "reconstruct", "registry", "routing",
+    "routing_report", "service", "sharding", "solve", "solve_spec",
+    "spec_digest", "zoo",
 ]

@@ -74,7 +74,11 @@ def _jax_backend() -> str:
     fallback vs the ~32× Python interpreter), so a timing measured under an
     overridden mode must never outrank the analytical model under another —
     the measured-cost analogue of the batch-jit ``cache_tag``
-    (DESIGN.md §4)."""
+    (DESIGN.md §4). The visible device count is part of the platform for
+    the same reason: a process forced to N host devices
+    (``--xla_force_host_platform_device_count``) splits every core's cycles
+    N ways, so its timings must never pollute single-device calibration
+    entries (or vice versa)."""
     import jax
 
     from repro.kernels import ops
@@ -82,7 +86,9 @@ def _jax_backend() -> str:
     jb = jax.default_backend()
     mode = ops.kernel_mode()
     default = "pallas" if jb == "tpu" else "ref"
-    return jb if mode == default else f"{jb}+{mode}"
+    base = jb if mode == default else f"{jb}+{mode}"
+    ndev = jax.device_count()
+    return base if ndev == 1 else f"{base}x{ndev}dev"
 
 
 @dataclasses.dataclass
@@ -353,7 +359,8 @@ def rank(spec: Spec, cands: Sequence, suffix: tuple = ()) -> list:
 
 
 def rank_batch(spec: Spec, batchable: Sequence, loop_only: Sequence,
-               batch_suffix: tuple = ("batch",)) -> list:
+               batch_suffix: tuple = ("batch",),
+               loop_suffix: Optional[tuple] = None) -> list:
     """:func:`rank` for a batch pool, where single-instance entries and
     the batch regime can disagree: plain (offline) entries time a SINGLE
     ``run``, but a batchable route amortizes a whole bucket in one device
@@ -361,17 +368,24 @@ def rank_batch(spec: Spec, batchable: Sequence, loop_only: Sequence,
     amortized drain observations) first; a batchable route may fall back to
     its single-instance entry as a prior, a loop-fallback route may not —
     winning a single-run comparison never buys it the right to break
-    batching (tier 1 keeps batchable-first order)."""
+    batching (tier 1 keeps batchable-first order). ``loop_suffix``
+    (default: ``batch_suffix``) is the regime loop-fallback routes rank on —
+    the sharded engine ranks batchable routes on its ``("shard", ndev)``
+    regime while loop fallbacks, which it executes unsharded, stay on the
+    single-device batch regime."""
     t = get_table()
     pool = list(batchable) + list(loop_only)
     if not len(t):
         return pool
+    loop_suffix = batch_suffix if loop_suffix is None else loop_suffix
 
     def resolve(i, b):
-        ms = measured_ms(b, spec, table=t, suffix=batch_suffix)
-        if ms is None and i < len(batchable):
-            ms = measured_ms(b, spec, table=t)
-        return ms
+        if i < len(batchable):
+            ms = measured_ms(b, spec, table=t, suffix=batch_suffix)
+            if ms is None:
+                ms = measured_ms(b, spec, table=t)
+            return ms
+        return measured_ms(b, spec, table=t, suffix=loop_suffix)
 
     return _rank_by(pool, resolve)
 

@@ -85,11 +85,15 @@ def lru_cached(cache: "OrderedDict", key, build: Callable, max_entries: int):
 class Backend:
     """A solver route. ``run`` returns the full linearized table as numpy;
     ``batch_run`` (optional) solves a homogeneous list of specs in one
-    device call. Arg-capable routes additionally expose ``run_with_args`` /
-    ``batch_run_with_args`` returning ``(table, args)`` pairs — the winning
-    lane (linear) or best split (triangular) per cell — which the
-    reconstruction layer (``repro.dp.reconstruct``) prefers over its numpy
-    from-the-cost-table fallback."""
+    device call — builder-made batch runners additionally accept a
+    ``sharding=`` context (``repro.dp.sharding.ShardContext``) that splits
+    the batch axis over a device mesh via ``shard_map`` (batch size must be
+    a multiple of the mesh size; callers pad). Arg-capable routes
+    additionally expose ``run_with_args`` / ``batch_run_with_args``
+    returning ``(table, args)`` pairs — the winning lane (linear) or best
+    split (triangular) per cell — which the reconstruction layer
+    (``repro.dp.reconstruct``) prefers over its numpy from-the-cost-table
+    fallback."""
 
     name: str
     geometry: str
@@ -184,7 +188,7 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
     def run(spec: LinearSpec) -> np.ndarray:
         return np.asarray(_run(jax_fn, spec))
 
-    def _batch(fn, specs, key):
+    def _batch(fn, specs, key, sharding=None):
         spec0 = specs[0]
 
         def build():
@@ -200,17 +204,25 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
                     return jax.vmap(
                         lambda i, w: fn(i, offsets, op, n, weights=w)
                     )(inits, weights)
-            return jax.jit(call)
+            if sharding is None:
+                return jax.jit(call)
+            return sharding.wrap(call)
 
         cached = lru_cached(_BATCH_CACHE, key, build, _BATCH_CACHE_MAX)
-        inits = jnp.stack([jnp.asarray(s.init) for s in specs])
+        place = sharding.place if sharding is not None else (lambda x: x)
+        inits = place(jnp.stack([jnp.asarray(s.init) for s in specs]))
         if spec0.weights is None:
             return cached(inits)
-        return cached(inits, jnp.stack([jnp.asarray(s.weights) for s in specs]))
+        return cached(inits, place(
+            jnp.stack([jnp.asarray(s.weights) for s in specs])))
 
-    def batch_run(specs) -> list:
+    def _batch_key(specs, sharding) -> tuple:
+        shard_tag = sharding.cache_suffix() if sharding is not None else ()
+        return (name, specs[0].shape_key()) + tag() + shard_tag
+
+    def batch_run(specs, sharding=None) -> list:
         return list(np.asarray(_batch(
-            jax_fn, specs, (name, specs[0].shape_key()) + tag())))
+            jax_fn, specs, _batch_key(specs, sharding), sharding)))
 
     run_with_args = batch_run_with_args = None
     if jax_arg_fn is not None:
@@ -218,9 +230,10 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
             st, args = _run(jax_arg_fn, spec)
             return np.asarray(st), np.asarray(args)
 
-        def batch_run_with_args(specs):
+        def batch_run_with_args(specs, sharding=None):
             sts, argss = _batch(jax_arg_fn, specs,
-                                (name, specs[0].shape_key()) + tag() + ("args",))
+                                _batch_key(specs, sharding) + ("args",),
+                                sharding)
             return list(np.asarray(sts)), list(np.asarray(argss))
 
     return Backend(name=name, geometry="linear", run=run, cost=cost,
@@ -247,7 +260,7 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
     def run(spec: TriangularSpec) -> np.ndarray:
         return np.asarray(jax_fn(jnp.asarray(spec.weights), spec.n))
 
-    def _batch(fn, specs, key):
+    def _batch(fn, specs, key, sharding=None):
         def build():
             n = specs[0].n
 
@@ -255,14 +268,22 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
                 log_trace(key)
                 return jax.vmap(lambda w: fn(w, n))(wtabs)
 
-            return jax.jit(call)
+            if sharding is None:
+                return jax.jit(call)
+            return sharding.wrap(call)
 
-        return lru_cached(_BATCH_CACHE, key, build, _BATCH_CACHE_MAX)(
-            jnp.stack([jnp.asarray(s.weights) for s in specs]))
+        wtabs = jnp.stack([jnp.asarray(s.weights) for s in specs])
+        if sharding is not None:
+            wtabs = sharding.place(wtabs)
+        return lru_cached(_BATCH_CACHE, key, build, _BATCH_CACHE_MAX)(wtabs)
 
-    def batch_run(specs) -> list:
+    def _batch_key(specs, sharding) -> tuple:
+        shard_tag = sharding.cache_suffix() if sharding is not None else ()
+        return (name, specs[0].shape_key()) + tag() + shard_tag
+
+    def batch_run(specs, sharding=None) -> list:
         return list(np.asarray(_batch(
-            jax_fn, specs, (name, specs[0].shape_key()) + tag())))
+            jax_fn, specs, _batch_key(specs, sharding), sharding)))
 
     run_with_args = batch_run_with_args = None
     if jax_arg_fn is not None:
@@ -270,9 +291,10 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
             st, args = jax_arg_fn(jnp.asarray(spec.weights), spec.n)
             return np.asarray(st), np.asarray(args)
 
-        def batch_run_with_args(specs):
+        def batch_run_with_args(specs, sharding=None):
             sts, argss = _batch(jax_arg_fn, specs,
-                                (name, specs[0].shape_key()) + tag() + ("args",))
+                                _batch_key(specs, sharding) + ("args",),
+                                sharding)
             return list(np.asarray(sts)), list(np.asarray(argss))
 
     return Backend(name=name, geometry="triangular", run=run, cost=cost,
@@ -324,14 +346,26 @@ def triangular_costs(spec: TriangularSpec) -> dict:
 # shape-key plumbing for the calibration layer (repro.dp.autotune) ----------
 #: measurement-regime markers a calibration key may be suffixed with:
 #: ``batch`` = amortized per-instance ms observed from a vmapped bucket
-#: drain, ``reconstruct`` = the arg-emitting solve. Plain keys hold
-#: single-instance offline timings. The regimes never cross-match.
+#: drain, ``reconstruct`` = the arg-emitting solve. Sharded drains
+#: (repro.dp.sharding) append a tuple marker ``("shard", ndev)`` — or
+#: ``("shard", ndev, "reconstruct")`` for sharded arg-emitting drains — so
+#: multi-device amortization never shares entries with any single-device
+#: regime. Plain keys hold single-instance offline timings. The regimes
+#: never cross-match.
 SHAPE_KEY_REGIMES = ("batch", "reconstruct")
+
+
+def is_regime_marker(x) -> bool:
+    """Whether ``x`` is a measurement-regime marker (string or the sharded
+    tuple form)."""
+    if x in SHAPE_KEY_REGIMES:
+        return True
+    return isinstance(x, tuple) and len(x) >= 2 and x[0] == "shard"
 
 
 def split_shape_key(key: tuple) -> tuple:
     """``(geometric_key, regime_marker_or_None)`` of a calibration key."""
-    if key and key[-1] in SHAPE_KEY_REGIMES:
+    if key and is_regime_marker(key[-1]):
         return key[:-1], key[-1]
     return key, None
 

@@ -11,8 +11,8 @@ Reconstruction: ``submit(..., reconstruct=True)`` routes the request into a
 separate bucket (same shape, arg-tracking treatment) whose drain issues the
 batched arg-emitting solve plus ONE vmapped traceback walk for the whole
 bucket; responses then carry the decoded :class:`Answer` in ``solution``.
-``stats`` counts how many requests reconstructed device-side vs through the
-numpy from-the-cost-table fallback.
+``stats`` counts traceback walks executed device-side vs through the numpy
+from-the-cost-table fallback (deduped lanes, not fan-out).
 
 Online routing feedback (DESIGN.md §6): every warm drain's realized solve
 latency is folded into the calibration table (``repro.dp.autotune``) by EMA,
@@ -40,7 +40,7 @@ from repro.dp import backends as _backends
 from repro.dp import reconstruct as _reconstruct
 from repro.dp import registry as _registry
 from repro.dp import routing as _routing
-from repro.dp.problem import Answer, Spec
+from repro.dp.problem import Answer, Spec, spec_digest
 
 #: LRU bound on the engine's per-route bookkeeping (_drains / _warmed) —
 #: endless fresh shapes must not grow process memory (same invariant as the
@@ -57,6 +57,9 @@ class DPRequest:
     payload: dict
     spec: Spec = None
     reconstruct: bool = False
+    #: content digest of the encoded spec (``problem.spec_digest``) — the
+    #: intra-drain dedup key: equal digests imply bit-equal Answers
+    digest: str = ""
 
 
 @dataclasses.dataclass
@@ -96,9 +99,9 @@ class DPEngine:
         #: (LRU, _ROUTE_STATE_MAX)
         self._warmed: "OrderedDict[tuple, bool]" = OrderedDict()
         self.stats = {"submitted": 0, "completed": 0, "device_batches": 0,
-                      "batched_requests": 0, "device_tracebacks": 0,
-                      "host_tracebacks": 0, "explore_dispatches": 0,
-                      "feedback_observations": 0}
+                      "batched_requests": 0, "dedup_hits": 0,
+                      "device_tracebacks": 0, "host_tracebacks": 0,
+                      "explore_dispatches": 0, "feedback_observations": 0}
 
     # -- admission ---------------------------------------------------------
     def submit(self, problem: str, reconstruct: bool = False,
@@ -108,25 +111,39 @@ class DPEngine:
         bucket and resolve to responses carrying a decoded solution."""
         prob = _registry.get(problem)
         spec = prob.encode(**payload)
+        return self.submit_spec(prob, spec, reconstruct=reconstruct,
+                                payload=payload)
+
+    def submit_spec(self, problem, spec: Spec, reconstruct: bool = False,
+                    payload: Optional[dict] = None,
+                    digest: Optional[str] = None) -> int:
+        """Admit an already-encoded spec (the :class:`repro.dp.service.
+        DPService` path — the service encoded it for cache keying and must
+        not pay a second encode, nor a second content hash: pass its
+        ``digest`` through). Returns rid."""
+        prob = (_registry.get(problem) if isinstance(problem, str)
+                else problem)
         if reconstruct:
-            if prob.decode is None:
-                raise ValueError(f"problem {problem!r} does not define decode()")
-            if not _reconstruct.supports_args(spec):
-                # reject at admission: drain-time failure would poison the
-                # bucket forever (solve-before-dequeue keeps it enqueued)
-                raise ValueError(
-                    f"problem {problem!r} instance has no argument structure "
-                    f"to reconstruct (op={spec.op!r} folds every lane)")
+            # reject at admission: drain-time failure would poison the
+            # bucket forever (solve-before-dequeue keeps it enqueued)
+            _reconstruct.check_reconstructable(prob, spec)
         rid = self._next_rid
         self._next_rid += 1
-        key = (prob.name, spec.shape_key())
-        if reconstruct:
-            key += ("reconstruct",)
+        key = self.bucket_key(prob.name, spec, reconstruct)
         self._buckets.setdefault(key, []).append(
-            DPRequest(rid=rid, problem=prob.name, payload=payload, spec=spec,
-                      reconstruct=reconstruct))
+            DPRequest(rid=rid, problem=prob.name, payload=payload or {},
+                      spec=spec, reconstruct=reconstruct,
+                      digest=digest or spec_digest(spec)))
         self.stats["submitted"] += 1
         return rid
+
+    @staticmethod
+    def bucket_key(problem_name: str, spec: Spec, reconstruct: bool) -> tuple:
+        """The bucket a request lands in. The single source of truth for
+        bucket keying — admission uses it, and the DPService drain
+        targeting (``step(bucket=…)``) builds its keys through it too."""
+        key = (problem_name, spec.shape_key())
+        return key + ("reconstruct",) if reconstruct else key
 
     def pending(self) -> int:
         return sum(len(v) for v in self._buckets.values())
@@ -143,34 +160,74 @@ class DPEngine:
         if backend is not None or not self.feedback:
             return _routing.resolve_backend(spec0, backend, batch=True,
                                             reconstruct=reconstruct), False
-        pool = _routing.batch_candidates(spec0, reconstruct=reconstruct)
+        pool = _routing.batch_candidates(
+            spec0, reconstruct=reconstruct,
+            batch_suffix=self._batch_regime(reconstruct),
+            loop_suffix=self._loop_regime(reconstruct))
         count = self._drains.get(key, 0)
         if (self.explore_every
                 and count % self.explore_every == self.explore_every - 1):
-            obs_key = self._obs_key(spec0, reconstruct)
-            wanting = [b for b in pool
-                       if not _autotune.has_measurement(b.name, obs_key)]
+            wanting = [
+                b for b in pool
+                if not _autotune.has_measurement(
+                    b.name,
+                    spec0.shape_key() + self._obs_suffix(b, spec0,
+                                                         reconstruct))]
             if wanting:
                 return wanting[0], True
         return pool[0], False
 
-    @staticmethod
-    def _obs_key(spec0: Spec, reconstruct: bool) -> tuple:
-        """Calibration key of a drain: amortized bucket drains and
-        arg-emitting (reconstruct) solves cost differently from plain
-        single-instance runs, so each regime keys its own entries —
-        offline calibration (plain keys) is never conflated with either."""
-        suffix = (_routing.RECONSTRUCT_SUFFIX if reconstruct
-                  else _routing.BATCH_SUFFIX)
-        return spec0.shape_key() + suffix
+    # -- drain internals (regime + execution hooks) ------------------------
+    # ``ShardedDPEngine`` (repro.dp.sharding) overrides these three to run
+    # batchable drains over a device mesh and key their observations under
+    # the ("shard", ndev) regime; everything else in step() is shared.
+    def _batch_regime(self, reconstruct: bool) -> tuple:
+        """Measurement-regime suffix batchable routes rank/observe under:
+        amortized bucket drains and arg-emitting (reconstruct) solves cost
+        differently from plain single-instance runs, so each regime keys
+        its own entries — offline calibration (plain keys) is never
+        conflated with either."""
+        return (_routing.RECONSTRUCT_SUFFIX if reconstruct
+                else _routing.BATCH_SUFFIX)
+
+    def _loop_regime(self, reconstruct: bool) -> tuple:
+        """Regime suffix loop-fallback routes rank/observe under (the same
+        as batchable ones on a single device)."""
+        return self._batch_regime(reconstruct)
+
+    def _obs_suffix(self, backend, spec0: Spec, reconstruct: bool) -> tuple:
+        """Regime suffix a drain on ``backend`` would actually be observed
+        under."""
+        if backend.batch_run is None:
+            return self._loop_regime(reconstruct)
+        return self._batch_regime(reconstruct)
+
+    def _run_bucket(self, backend, specs, reconstruct: bool):
+        """Execute one routed bucket; returns ``(tables, argss, source)``
+        (``argss``/``source`` are None for plain solves)."""
+        if reconstruct:
+            return _routing.run_batch_with_args(backend, specs)
+        return _routing.run_batch(backend, specs), None, None
 
     # -- one batched device call ------------------------------------------
-    def step(self, backend: Optional[str] = None) -> list:
-        """Drain up to ``max_batch`` requests from the fullest bucket with a
-        single batched solve. Returns the finished DPResponses."""
+    def step(self, backend: Optional[str] = None,
+             bucket: Optional[tuple] = None) -> list:
+        """Drain up to ``max_batch`` requests from one bucket with a single
+        batched solve — the fullest bucket by default, or exactly
+        ``bucket`` when given (the DPService scheduler picks by
+        priority/deadline instead of size). Identical instances in the
+        bucket (equal spec digests) solve once and fan the result out to
+        every rid (``stats["dedup_hits"]``). Returns the finished
+        DPResponses."""
         if not self._buckets:
             return []
-        key = max(self._buckets, key=lambda k: len(self._buckets[k]))
+        if bucket is not None:
+            if bucket not in self._buckets:
+                raise KeyError(f"no such bucket {bucket!r}; "
+                               f"pending: {list(self._buckets)}")
+            key = bucket
+        else:
+            key = max(self._buckets, key=lambda k: len(self._buckets[k]))
         queue = self._buckets[key]
         batch, rest = queue[: self.max_batch], queue[self.max_batch:]
 
@@ -181,16 +238,31 @@ class DPEngine:
         # batch (bad backend override, transient device error, a decode bug)
         # must not lose requests
         chosen, explored = self._route(key, specs[0], reconstruct, backend)
-        source = None
-        obs_key = self._obs_key(specs[0], reconstruct)
-        warm_key = (chosen.name, obs_key, len(batch))
+        # intra-drain dedup: one solve lane per distinct digest — equal
+        # digests imply bit-equal answers (problem.spec_digest), so the
+        # extract/decode of the shared lane serves every duplicate rid
+        uniq_idx: "OrderedDict[str, int]" = OrderedDict()
+        for i, r in enumerate(batch):
+            uniq_idx.setdefault(r.digest, i)
+        lane_of = {d: j for j, d in enumerate(uniq_idx)}
+        uniq_specs = [specs[i] for i in uniq_idx.values()]
+
+        obs_key = specs[0].shape_key() + self._obs_suffix(chosen, specs[0],
+                                                          reconstruct)
+        warm_key = (chosen.name, obs_key, len(uniq_specs))
         traces_before = _backends.TRACE_COUNT
         t0 = time.perf_counter()
-        if reconstruct:
-            tables, argss, source = _routing.run_batch_with_args(chosen, specs)
-        else:
-            tables = _routing.run_batch(chosen, specs)
+        tables, argss, source = self._run_bucket(chosen, uniq_specs,
+                                                 reconstruct)
         solve_ms = (time.perf_counter() - t0) * 1e3
+        # dedup fan-out (and the service answer cache) hand the SAME
+        # arrays to multiple consumers — freeze them so a caller's
+        # in-place edit raises instead of silently corrupting the
+        # duplicates' and future cache hits' answers
+        for arr in tables:
+            arr.setflags(write=False)
+        for arr in argss or ():
+            arr.setflags(write=False)
         # a drain is warm only if this engine already ran this exact
         # (route, shape, batch size) — catching jit compiles TRACE_LOG can't
         # see (loop-fallback solvers) — AND nothing retraced during the call
@@ -198,15 +270,18 @@ class DPEngine:
                 or _backends.TRACE_COUNT != traces_before)
         _backends.lru_put(self._warmed, warm_key, True, _ROUTE_STATE_MAX)
         if reconstruct:
-            answers = _reconstruct.reconstruct_batch(prob, specs, tables,
+            answers = _reconstruct.reconstruct_batch(prob, uniq_specs, tables,
                                                      argss, source)
         else:
-            answers = [None] * len(batch)
-        responses = [DPResponse(rid=r.rid, problem=r.problem,
-                                answer=prob.extract(t, r.spec),
-                                backend=chosen.name, batch_size=len(batch),
-                                solution=ans)
-                     for r, t, ans in zip(batch, tables, answers)]
+            answers = [None] * len(uniq_specs)
+        responses = []
+        for r in batch:
+            j = lane_of[r.digest]
+            responses.append(
+                DPResponse(rid=r.rid, problem=r.problem,
+                           answer=prob.extract(tables[j], r.spec),
+                           backend=chosen.name, batch_size=len(batch),
+                           solution=answers[j]))
 
         if rest:
             self._buckets[key] = rest
@@ -217,15 +292,22 @@ class DPEngine:
         self.stats["device_batches"] += 1
         self.stats["completed"] += len(batch)
         self.stats["batched_requests"] += len(batch) if len(batch) > 1 else 0
+        self.stats["dedup_hits"] += len(batch) - len(uniq_specs)
         if explored:
             self.stats["explore_dispatches"] += 1
         if self.feedback and not cold:
-            _autotune.observe(chosen.name, obs_key, solve_ms / len(batch))
+            # per-instance cost of what the device actually solved — the
+            # deduped lane count, not the fan-out count
+            _autotune.observe(chosen.name, obs_key,
+                              solve_ms / len(uniq_specs))
             self.stats["feedback_observations"] += 1
         if reconstruct:
+            # count walks actually executed (the deduped lanes), matching
+            # the feedback accounting — duplicate traffic must not inflate
+            # the device-vs-host traceback picture
             counter = ("device_tracebacks" if source == "device"
                        else "host_tracebacks")
-            self.stats[counter] += len(batch)
+            self.stats[counter] += len(uniq_specs)
         return responses
 
     def run(self, backend: Optional[str] = None) -> dict:

@@ -31,6 +31,7 @@ sweep need to treat problems uniformly.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Callable, Optional, Union
 
 import numpy as np
@@ -108,6 +109,40 @@ class TriangularSpec:
 Spec = Union[LinearSpec, TriangularSpec]
 
 
+def _hash_array(h, a: Optional[np.ndarray]) -> None:
+    if a is None:
+        h.update(b"\x00none")
+        return
+    a = np.ascontiguousarray(a)
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(a.tobytes())
+
+
+def spec_digest(spec: Spec) -> str:
+    """Content digest of a canonical instance. Two payloads that encode to
+    the same spec digest identically — which is exactly the dedup/cache
+    contract: ``extract`` and ``decode`` read only (table, args, spec, path),
+    all functions of the spec, so equal digests imply bit-equal Answers.
+    A problem whose answer depended on payload data *outside* its encoded
+    spec would break this invariant (DESIGN.md §7) — encode() must
+    materialize everything answer-relevant."""
+    h = hashlib.sha256()
+    if spec.geometry == "linear":
+        h.update(b"linear")
+        h.update(spec.op.encode())
+        h.update(repr(tuple(int(a) for a in spec.offsets)).encode())
+        h.update(str(int(spec.n)).encode())
+        _hash_array(h, spec.init)
+        _hash_array(h, spec.weights)
+    else:
+        h.update(b"triangular")
+        h.update(str(int(spec.n)).encode())
+        _hash_array(h, spec.weights)
+        _hash_array(h, spec.dims)
+    return h.hexdigest()
+
+
 # --- reconstruction vocabulary ---------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class LinearPath:
@@ -142,6 +177,11 @@ class Answer:
     alignment, state path, …); ``table``/``args`` are the linearized cost and
     argument tables; ``source`` records where the args came from: ``"device"``
     (arg-emitting solver) or ``"host"`` (numpy fallback from the cost table).
+
+    Treat Answers as immutable: the engine's dedup fan-out and the service's
+    answer cache share one Answer across requests, and engine-produced
+    ``table``/``args`` arrays are frozen (non-writeable) for exactly that
+    reason.
     """
 
     value: Any

@@ -49,6 +49,19 @@ def supports_args(spec: Spec) -> bool:
     return spec.geometry == "triangular" or spec.op in ("min", "max")
 
 
+def check_reconstructable(prob: DPProblem, spec: Spec) -> None:
+    """Raise ValueError unless ``reconstruct=True`` is admissible for this
+    (problem, instance) — THE admission check both the engine and the
+    service run, so a request rejected at either door is rejected for the
+    same reasons with the same message."""
+    if prob.decode is None:
+        raise ValueError(f"problem {prob.name!r} does not define decode()")
+    if not supports_args(spec):
+        raise ValueError(
+            f"problem {prob.name!r} instance has no argument structure "
+            f"to reconstruct (op={spec.op!r} folds every lane)")
+
+
 def args_from_table(table: np.ndarray, spec: Spec) -> np.ndarray:
     """Numpy fallback: winning-argument table recomputed from a finished cost
     table (backends that only return costs)."""

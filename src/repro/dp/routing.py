@@ -74,7 +74,9 @@ def dispatch(spec_or_problem, reconstruct: bool = False,
     return _autotune.rank(spec, cands)[0]
 
 
-def batch_candidates(spec: Spec, reconstruct: bool = False) -> list:
+def batch_candidates(spec: Spec, reconstruct: bool = False,
+                     batch_suffix: Optional[tuple] = None,
+                     loop_suffix: Optional[tuple] = None) -> list:
     """Ordered route pool for a homogeneous batch. Structural preferences
     come first — arg-capable backends under ``reconstruct``, and
     batchable-before-loop-fallback otherwise — then the measured ranking is
@@ -82,19 +84,29 @@ def batch_candidates(spec: Spec, reconstruct: bool = False) -> list:
     overrule the batching prior on an online-amortized drain measurement,
     never on an offline single-instance timing); with no measurements the
     order is exactly the pre-calibration one. The engine explores
-    alternates from exactly this pool."""
+    alternates from exactly this pool.
+
+    ``batch_suffix`` / ``loop_suffix`` select the measurement regimes the
+    batchable and loop-fallback pools rank on (defaults: the single-device
+    batch/reconstruct regimes). The sharded engine passes its
+    ``("shard", ndev)`` regime as ``batch_suffix`` — loop-fallback routes
+    execute unsharded there, so they keep ranking on their own regime."""
     cands = _backends.candidates(spec)
     if not cands:
         raise RuntimeError(f"no backend supports spec {spec.shape_key()}")
     if reconstruct and _reconstruct.supports_args(spec):
-        for pool in ([c for c in cands if c.batch_run_with_args is not None],
-                     [c for c in cands if c.run_with_args is not None]):
+        for pool, sfx in (
+                ([c for c in cands if c.batch_run_with_args is not None],
+                 batch_suffix or RECONSTRUCT_SUFFIX),
+                ([c for c in cands if c.run_with_args is not None],
+                 loop_suffix or RECONSTRUCT_SUFFIX)):
             if pool:
-                return _autotune.rank(spec, pool, suffix=RECONSTRUCT_SUFFIX)
+                return _autotune.rank(spec, pool, suffix=sfx)
     batchable = [c for c in cands if c.batch_run is not None]
     loop_only = [c for c in cands if c.batch_run is None]
     return _autotune.rank_batch(spec, batchable, loop_only,
-                                batch_suffix=BATCH_SUFFIX)
+                                batch_suffix=batch_suffix or BATCH_SUFFIX,
+                                loop_suffix=loop_suffix or BATCH_SUFFIX)
 
 
 def select_batch_backend(spec: Spec,
@@ -152,19 +164,29 @@ def solve(problem: Union[str, DPProblem], backend: Optional[str] = None,
     return _reconstruct.reconstruct_one(prob, spec, table, args, source)
 
 
-def run_batch(b: _backends.Backend, specs: Sequence[Spec]) -> list:
-    """Execute a resolved route over a homogeneous batch."""
+def run_batch(b: _backends.Backend, specs: Sequence[Spec],
+              sharding=None) -> list:
+    """Execute a resolved route over a homogeneous batch. ``sharding``
+    (a ``repro.dp.sharding.ShardContext``) splits the batch axis over a
+    device mesh — only meaningful on batchable routes whose batch size the
+    caller already padded to the mesh size."""
     if b.batch_run is not None:
+        if sharding is not None:
+            return b.batch_run(list(specs), sharding=sharding)
         return b.batch_run(list(specs))
     return [b.run(s) for s in specs]
 
 
-def run_batch_with_args(b: _backends.Backend, specs: Sequence[Spec]):
+def run_batch_with_args(b: _backends.Backend, specs: Sequence[Spec],
+                        sharding=None):
     """Batched :func:`run_with_args`; returns ``(tables, argss, source)``."""
     specs = list(specs)
     if _reconstruct.supports_args(specs[0]):
         if b.batch_run_with_args is not None:
-            tables, argss = b.batch_run_with_args(specs)
+            if sharding is not None:
+                tables, argss = b.batch_run_with_args(specs, sharding=sharding)
+            else:
+                tables, argss = b.batch_run_with_args(specs)
             return tables, argss, "device"
         if b.run_with_args is not None:
             pairs = [b.run_with_args(s) for s in specs]

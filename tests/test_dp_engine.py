@@ -134,6 +134,67 @@ def test_engine_raising_solve_keeps_bucket_intact(monkeypatch):
         assert out[rid].answer == pytest.approx(ref, rel=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# Intra-drain dedup: identical (problem, payload-digest) requests solve once
+# ---------------------------------------------------------------------------
+def test_engine_intra_drain_dedup_fans_out_answers():
+    rng = np.random.default_rng(8)
+    kw_dup = _mcm_kw(rng, 7)
+    kw_other = _mcm_kw(rng, 7)
+    eng = dp.DPEngine(max_batch=8)
+    dup_rids = [eng.submit("mcm", **kw_dup) for _ in range(3)]
+    other_rid = eng.submit("mcm", **kw_other)
+    resp = {r.rid: r for r in eng.step()}
+    assert len(resp) == 4                       # every rid answered
+    assert eng.stats["dedup_hits"] == 2         # 4 requests, 2 unique solves
+    assert eng.stats["completed"] == 4
+    ref = dp.get_problem("mcm").solve_reference(**kw_dup)
+    for rid in dup_rids:
+        assert resp[rid].answer == pytest.approx(ref, rel=1e-4)
+        assert resp[rid].batch_size == 4        # fan-out count, not lanes
+    assert resp[other_rid].answer == pytest.approx(
+        dp.get_problem("mcm").solve_reference(**kw_other), rel=1e-4)
+
+
+def test_engine_dedup_reconstruct_decodes_once_and_shares_answer():
+    rng = np.random.default_rng(9)
+    kw = _mcm_kw(rng, 6)
+    eng = dp.DPEngine(max_batch=8)
+    rids = [eng.submit("mcm", reconstruct=True, **kw) for _ in range(3)]
+    resp = {r.rid: r for r in eng.step()}
+    assert eng.stats["dedup_hits"] == 2
+    first = resp[rids[0]].solution
+    for rid in rids[1:]:
+        # the shared lane's decoded Answer serves every duplicate rid
+        assert resp[rid].solution is first
+    assert first.solution["string"]
+
+
+def test_engine_answers_are_frozen_shared_buffers():
+    """Dedup fan-out (and the service cache) share arrays across requests:
+    a consumer's in-place edit must raise, not corrupt its neighbors."""
+    rng = np.random.default_rng(11)
+    kw = _mcm_kw(rng, 6)
+    eng = dp.DPEngine(max_batch=4)
+    rid = eng.submit("mcm", reconstruct=True, **kw)
+    ans = eng.run()[rid].solution
+    with pytest.raises(ValueError):
+        ans.table[0] = 0.0
+    with pytest.raises(ValueError):
+        ans.args[0] = 0
+
+
+def test_engine_dedup_distinguishes_content_not_object_identity():
+    rng = np.random.default_rng(10)
+    dims = rng.integers(1, 20, size=8).astype(np.float64)
+    eng = dp.DPEngine(max_batch=8)
+    eng.submit("mcm", dims=dims)
+    eng.submit("mcm", dims=dims.copy())         # equal content → dedups
+    eng.submit("mcm", dims=dims + 1.0)          # different content → doesn't
+    eng.step()
+    assert eng.stats["dedup_hits"] == 1
+
+
 def test_engine_multi_bucket_drain_order_and_completeness():
     """Mixed problems: fullest-first drain, every request answered once."""
     rng = np.random.default_rng(7)

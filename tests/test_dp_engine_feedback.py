@@ -191,6 +191,37 @@ def test_reconstruct_observations_keyed_separately_from_plain():
         "wavefront", plain_key + dp.routing.BATCH_SUFFIX)
 
 
+def test_route_state_lru_eviction_rewarms_instead_of_recording_cold(
+        monkeypatch):
+    """The _ROUTE_STATE_MAX satellite: evicted _warmed/_drains entries make
+    the next drain of that route cold again (skipped, no observation — even
+    though the jit program is still cached), and the drain after that
+    re-warms and is observed."""
+    import repro.dp.engine as engine_mod
+
+    monkeypatch.setattr(engine_mod, "_ROUTE_STATE_MAX", 2)
+    rng = np.random.default_rng(8)
+    eng = dp.DPEngine(max_batch=4, explore_every=0)
+
+    def drain(n):
+        for _ in range(2):
+            eng.submit("mcm", **_mcm_kw(rng, n))
+        eng.step()
+
+    drain(11)
+    drain(11)                       # warm → first observation
+    assert eng.stats["feedback_observations"] == 1
+    drain(12)                       # two fresh routes push the n=11
+    drain(13)                       # triples out of the capacity-2 LRUs
+    assert len(eng._warmed) <= 2 and len(eng._drains) <= 2
+    assert all(key[1][:2] != ("triangular", 11) for key in eng._warmed), \
+        "the n=11 warm state must actually have been evicted"
+    drain(11)                       # evicted → cold again: NOT recorded
+    assert eng.stats["feedback_observations"] == 1
+    drain(11)                       # re-warmed → observed again
+    assert eng.stats["feedback_observations"] == 2
+
+
 def test_ema_fold_tracks_latest_observations():
     key = ("triangular", 33)
     t = autotune.get_table()

@@ -1,0 +1,193 @@
+"""Sharded bucket drains (DESIGN.md §7): ShardContext mechanics, the
+("shard", ndev) measurement regime, and — under a multi-device process
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the CI leg) —
+bit-identical Answers to the single-device engine for every zoo problem,
+including ``reconstruct=True``."""
+import numpy as np
+import pytest
+
+from repro import dp
+from repro.dp import autotune, backends
+from repro.dp.sharding import (ShardContext, ShardedDPEngine, default_mesh,
+                               device_count)
+
+multi_device = pytest.mark.skipif(
+    device_count() < 2,
+    reason="needs >1 device; run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _mcm_kw(rng, n):
+    return {"dims": rng.integers(1, 20, size=n + 1).astype(np.float64)}
+
+
+# ---------------------------------------------------------------------------
+# Regime plumbing (device-count independent)
+# ---------------------------------------------------------------------------
+def test_shard_regime_marker_recognized():
+    key = ("triangular", 9)
+    marked = key + (("shard", 8),)
+    assert backends.is_regime_marker(("shard", 8))
+    assert backends.is_regime_marker(("shard", 8, "reconstruct"))
+    assert not backends.is_regime_marker(("triangular", 9))
+    assert backends.split_shape_key(marked) == (key, ("shard", 8))
+    assert backends.shape_key_size(marked) == 9
+
+
+def test_shard_regime_never_cross_matches():
+    key = ("triangular", 9)
+    shard = key + (("shard", 8),)
+    assert backends.shape_key_distance(shard, key + ("batch",)) is None
+    assert backends.shape_key_distance(shard, key) is None
+    assert backends.shape_key_distance(
+        shard, key + (("shard", 4),)) is None          # other mesh size
+    assert backends.shape_key_distance(
+        shard, key + (("shard", 8, "reconstruct"),)) is None
+    assert backends.shape_key_distance(
+        ("triangular", 12) + (("shard", 8),), shard) == 3.0
+
+
+def test_shard_regime_survives_json_roundtrip(tmp_path):
+    t = autotune.CalibrationTable()
+    key = ("triangular", 9) + (("shard", 8),)
+    t.record("wavefront", key, 1.25, jax_backend="cpux8dev")
+    path = str(tmp_path / "calib.json")
+    t.save(path)
+    t2 = autotune.CalibrationTable.load(path)
+    entry = t2.lookup("wavefront", key, jax_backend="cpux8dev")
+    assert entry is not None and entry.ms == pytest.approx(1.25)
+
+
+def test_single_device_mesh_falls_back_to_plain_drains():
+    import jax
+
+    rng = np.random.default_rng(0)
+    mesh = default_mesh(devices=jax.devices()[:1])
+    eng = ShardedDPEngine(mesh=mesh, max_batch=8)
+    assert eng.ctx.ndev == 1
+    want = {}
+    for _ in range(3):
+        kw = _mcm_kw(rng, 7)
+        want[eng.submit("mcm", **kw)] = \
+            dp.get_problem("mcm").solve_reference(**kw)
+    out = eng.run()
+    for rid, ref in want.items():
+        assert out[rid].answer == pytest.approx(ref, rel=1e-4)
+    assert eng.stats["sharded_drains"] == 0
+    assert eng.stats["padded_lanes"] == 0
+
+
+def test_shard_context_pad_math():
+    import jax
+
+    ctx = ShardContext(mesh=default_mesh(devices=jax.devices()[:1]))
+    padded, n_pad = ctx.pad(["a", "b", "c"])
+    assert padded == ["a", "b", "c"] and n_pad == 0   # ndev=1: no padding
+    with pytest.raises(ValueError):
+        ShardContext(mesh=default_mesh(), axis="nope")
+
+
+# ---------------------------------------------------------------------------
+# Multi-device behavior (the CI XLA_FLAGS leg)
+# ---------------------------------------------------------------------------
+@multi_device
+def test_sharded_answers_bit_identical_for_every_zoo_problem():
+    """The acceptance sweep: values, solutions, and args from a sharded
+    drain equal the single-device engine's bit for bit — including
+    reconstruct=True — for every registered problem."""
+    rng_a = np.random.default_rng(42)
+    rng_b = np.random.default_rng(42)
+    plain = dp.DPEngine(max_batch=16, feedback=False)
+    shard = ShardedDPEngine(max_batch=16, feedback=False)
+    pairs = []          # (plain_rid, shard_rid)
+    for name in dp.problem_names():
+        prob = dp.get_problem(name)
+        for reconstruct in (False, True):
+            for _ in range(3):  # ragged vs the 8-device mesh: padding runs
+                kw_a = prob.sample(rng_a, 8)
+                kw_b = prob.sample(rng_b, 8)
+                pairs.append((plain.submit(name, reconstruct=reconstruct,
+                                           **kw_a),
+                              shard.submit(name, reconstruct=reconstruct,
+                                           **kw_b)))
+    out_p, out_s = plain.run(), shard.run()
+    assert shard.stats["sharded_drains"] > 0
+    for rid_p, rid_s in pairs:
+        p, s = out_p[rid_p], out_s[rid_s]
+        assert np.array_equal(np.asarray(p.answer), np.asarray(s.answer)), \
+            (p.problem, p.answer, s.answer)
+        assert (p.solution is None) == (s.solution is None)
+        if p.solution is not None:
+            assert np.array_equal(p.solution.table, s.solution.table)
+            assert np.array_equal(p.solution.args, s.solution.args)
+            assert p.solution.solution == s.solution.solution
+            assert np.array_equal(np.asarray(p.solution.value),
+                                  np.asarray(s.solution.value))
+
+
+@multi_device
+def test_sharded_observations_only_under_shard_regime():
+    rng = np.random.default_rng(1)
+    ndev = device_count()
+    eng = ShardedDPEngine(max_batch=8, explore_every=0)
+    for _ in range(2):                    # second drain is warm → observed
+        for _ in range(3):
+            eng.submit("mcm", **_mcm_kw(rng, 9))
+        eng.step()
+    assert eng.stats["feedback_observations"] >= 1
+    regimes = {backends.split_shape_key(shape_key)[1]
+               for (_, _, shape_key), _ in autotune.get_table().items()}
+    assert regimes == {("shard", ndev)}
+    rep = dp.routing_report()
+    assert [s["regime"] for s in rep["shapes"]] == [("shard", ndev)]
+    assert f"x{ndev}dev" in rep["jax_backend"]
+
+
+@multi_device
+def test_ragged_bucket_pads_to_mesh_and_strips_pad_lanes():
+    rng = np.random.default_rng(2)
+    ndev = device_count()
+    eng = ShardedDPEngine(max_batch=16, feedback=False)
+    want = {}
+    b = ndev - 3 if ndev > 3 else ndev + 1          # deliberately ragged
+    for _ in range(b):
+        kw = _mcm_kw(rng, 7)
+        want[eng.submit("mcm", **kw)] = \
+            dp.get_problem("mcm").solve_reference(**kw)
+    out = eng.run()
+    assert len(out) == b                            # pad lanes never escape
+    for rid, ref in want.items():
+        assert out[rid].answer == pytest.approx(ref, rel=1e-4)
+    assert eng.stats["padded_lanes"] == (-(-b // ndev) * ndev) - b
+
+
+@multi_device
+def test_loop_fallback_route_runs_unsharded_under_batch_regime():
+    rng = np.random.default_rng(3)
+    eng = ShardedDPEngine(max_batch=8)
+    batch_key = None
+    for _ in range(2):                    # warm the loop route, then observe
+        for _ in range(2):
+            kw = _mcm_kw(rng, 11)
+            batch_key = (dp.get_problem("mcm").encode(**kw).shape_key()
+                         + dp.routing.BATCH_SUFFIX)
+            eng.submit("mcm", **kw)
+        eng.step(backend="mcm_pipeline")
+    assert eng.stats["sharded_drains"] == 0         # no batch path to shard
+    assert autotune.has_measurement("mcm_pipeline", batch_key)
+
+
+@multi_device
+def test_service_auto_mesh_shards_and_matches_oracles():
+    rng = np.random.default_rng(4)
+    svc = dp.DPService(max_batch=16)                # mesh="auto"
+    assert isinstance(svc.engine, ShardedDPEngine)
+    want = {}
+    for _ in range(6):
+        kw = _mcm_kw(rng, 8)
+        want[svc.submit("mcm", **kw)] = \
+            dp.get_problem("mcm").solve_reference(**kw)
+    out = svc.run()
+    assert svc.engine.stats["sharded_drains"] >= 1
+    for tid, ref in want.items():
+        assert out[tid].answer == pytest.approx(ref, rel=1e-4)
