@@ -3,11 +3,14 @@
 Drives a :class:`repro.dp.DPService` with a mixed-problem request stream
 (four problems × two shapes, ~3 requests per unique instance so the digest
 cache and intra-drain dedup both engage, a reconstruct slice, random
-priorities) and reports requests/sec, p50/p99 completion latency, cache
-hit rate, and the engine's dedup/shard counters.
+priorities) and reports requests/sec, p50/p99 completion latency with the
+per-phase queue/dispatch/solve/traceback/decode breakdown from the
+telemetry histograms (DESIGN.md §8), cache hit rate, and the engine's
+dedup/shard counters.
 
 Prints ``service,<devices>,<requests>,<req_per_s>,<p50_ms>,<p99_ms>,
-<cache_hit_rate>,<ok>`` CSV lines and writes ``BENCH_dp_service.json``.
+<cache_hit_rate>,<ok>`` CSV lines, writes ``BENCH_dp_service.json`` and a
+full telemetry snapshot to ``TELEMETRY_dp_service.json``.
 
 The 1-vs-N forced-host-devices comparison runs the same measurement in a
 subprocess under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
@@ -16,9 +19,18 @@ clean way to get both legs): on CPU runners the N-way leg exercises the
 sharded drain path end-to-end — the number is a *functional* check of the
 mesh pipeline, not a speedup claim, since N forced host devices split the
 same cores. ``--inner`` is that subprocess entry point.
+
+``--telemetry-gate`` is the CI overhead gate: the same traffic with
+telemetry ``off`` vs ``spans`` (routing feedback disabled and the
+calibration table reset per leg, so routing is a deterministic function of
+the analytical model), asserting bit-identical routing and answers between
+the modes and ≤``GATE_OVERHEAD_FRACTION`` span-mode wall-time overhead
+(with an absolute floor — sub-second walls on shared CI runners would
+otherwise turn scheduler noise into failures).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import subprocess
@@ -32,6 +44,12 @@ FORCED_DEVICES = 8
 UNIQUE_FRACTION = 3          # ~N/3 unique instances → repeats hit the cache
 RECONSTRUCT_EVERY = 4        # every 4th request asks for a decoded solution
 SUBPROCESS_TIMEOUT_S = 600
+#: telemetry-gate budget: spans-mode wall ≤ off-mode wall × (1 + fraction),
+#: with an absolute slack floor so short walls don't gate on timer noise
+GATE_OVERHEAD_FRACTION = 0.05
+GATE_ABS_FLOOR_S = 0.15
+#: phases exported per leg (the service histograms feeding them)
+PHASES = ("queue", "dispatch", "solve", "traceback", "decode")
 
 
 def _traffic(rng, n_requests: int) -> list:
@@ -56,19 +74,38 @@ def _traffic(rng, n_requests: int) -> list:
     return reqs
 
 
-def _measure(n_requests: int, seed: int = 0) -> dict:
+def _phase_quantiles(telemetry) -> dict:
+    """p50/p99 (+ sample count) per service phase from the registry
+    histograms — {} for phases with no samples (e.g. telemetry off)."""
+    hists = telemetry.REGISTRY.histograms()
+    out = {}
+    for ph in PHASES:
+        h = hists.get(f"dp_service_{ph}_ms")
+        if h is not None and h.count:
+            out[ph] = {"p50_ms": round(h.quantile(0.5), 3),
+                       "p99_ms": round(h.quantile(0.99), 3),
+                       "samples": h.count}
+    return out
+
+
+def _measure(n_requests: int, seed: int = 0, telemetry_mode: str = "spans",
+             feedback: bool = True) -> dict:
     """One leg: mixed traffic through a DPService on THIS process's
-    devices. Returns the metrics row."""
+    devices under the given telemetry mode. Returns the metrics row
+    (latency quantiles from the telemetry histograms when they have
+    samples, the raw latency list otherwise)."""
     import jax
 
     from repro import dp
+    from repro.dp import telemetry
 
+    prev_mode = telemetry.configure(telemetry_mode)
     rng = np.random.default_rng(seed)
     reqs = _traffic(rng, n_requests)
 
     # warm the jit caches with one instance per (problem, shape, regime):
     # compile time is a one-off, not a serving-throughput signal
-    warm = dp.DPService(max_batch=32)
+    warm = dp.DPService(max_batch=32, feedback=feedback)
     seen = set()
     for name, kw, reconstruct, _ in reqs:
         spec = dp.get_problem(name).encode(**kw)
@@ -77,8 +114,12 @@ def _measure(n_requests: int, seed: int = 0) -> dict:
             seen.add(key)
             warm.submit(name, reconstruct=reconstruct, **kw)
     warm.run()
+    # the warm leg's telemetry is not part of the measurement
+    telemetry.REGISTRY.reset()
+    telemetry.clear_spans()
+    telemetry.clear_audit()
 
-    svc = dp.DPService(max_batch=32)
+    svc = dp.DPService(max_batch=32, feedback=feedback)
     submit_t = {}
     latencies = []
     checks = {}          # tid -> (name, kw): gate on SERVICE answers
@@ -123,21 +164,51 @@ def _measure(n_requests: int, seed: int = 0) -> dict:
         ref = dp.get_problem(name).solve_reference(**kw)
         if not np.allclose(answers[tid], ref, rtol=1e-4, atol=1e-4):
             ok = False
+
+    # end-to-end latency quantiles: service-side histogram when telemetry
+    # recorded one (its sample count covers EVERY resolution — including
+    # cache hits the old percentile-of-collected-list reporting undercounted
+    # when a checked tid was polled late), client-side list otherwise
+    lat_hist = telemetry.REGISTRY.histograms().get("dp_service_latency_ms")
+    if lat_hist is not None and lat_hist.count:
+        p50 = lat_hist.quantile(0.5)
+        p99 = lat_hist.quantile(0.99)
+        samples = lat_hist.count
+    else:
+        p50 = float(np.percentile(latencies, 50))
+        p99 = float(np.percentile(latencies, 99))
+        samples = len(latencies)
+
+    # routing/answer fingerprint — the telemetry gate's bit-identical check
+    digest = hashlib.sha256()
+    for tid in sorted(answers):
+        digest.update(repr((tid, answers[tid])).encode())
+    fingerprint = {
+        "routes": sorted(f"{p}:{b}={n}" for (p, b), n in svc.routes.items()),
+        "answers_sha256": digest.hexdigest(),
+    }
+
     eng = svc.engine.stats
-    return {
+    row = {
         "devices": jax.device_count(),
         "requests": n_requests,
+        "telemetry_mode": telemetry_mode,
         "wall_s": round(wall, 4),
         "req_per_s": round(n_requests / max(wall, 1e-9), 1),
-        "p50_ms": round(float(np.percentile(latencies, 50)), 3),
-        "p99_ms": round(float(np.percentile(latencies, 99)), 3),
+        "p50_ms": round(p50, 3),
+        "p99_ms": round(p99, 3),
+        "latency_samples": samples,
+        "phases": _phase_quantiles(telemetry),
         "cache_hit_rate": round(svc.cache_stats()["hit_rate"], 3),
         "dedup_hits": eng["dedup_hits"],
         "device_batches": eng["device_batches"],
         "sharded_drains": eng.get("sharded_drains", 0),
         "expired": svc.stats["expired"],
+        "fingerprint": fingerprint,
         "ok": ok,
     }
+    telemetry.configure(prev_mode)
+    return row
 
 
 def _csv(row: dict) -> None:
@@ -183,12 +254,19 @@ def _subprocess_leg(n_requests: int, devices: int) -> dict:
 
 
 def run(out_path: str = "BENCH_dp_service.json",
+        telemetry_out_path: str = "TELEMETRY_dp_service.json",
         n_requests: int = N_REQUESTS, forced_devices: int = FORCED_DEVICES,
         subprocess_leg: bool = True, check_perf: bool = True) -> dict:
     import jax
 
+    from repro.dp import telemetry
+
     legs = [_measure(n_requests)]
     _csv(legs[0])
+    if telemetry_out_path:
+        # the CI artifact: full spans/metrics/audit state of the local leg
+        # (saved before the subprocess leg — a child crash must not lose it)
+        print(f"# wrote {telemetry.save_snapshot(telemetry_out_path)}")
     if subprocess_leg and jax.device_count() != forced_devices:
         legs.append(_subprocess_leg(n_requests, forced_devices))
         _csv(legs[1])
@@ -208,6 +286,65 @@ def run(out_path: str = "BENCH_dp_service.json",
     return report
 
 
+def telemetry_gate(n_requests: int = N_REQUESTS,
+                   out_path: str = "TELEMETRY_gate.json") -> dict:
+    """CI gate: spans-mode overhead and off-mode transparency.
+
+    Runs the identical traffic under telemetry ``off`` and ``spans`` with
+    routing feedback disabled and the calibration table reset before every
+    leg — routing then depends only on the analytical cost model, so any
+    fingerprint divergence is caused by telemetry, not by timing-dependent
+    EMA feedback. Each mode runs twice interleaved and keeps its best wall
+    (min-of-2 rejects one-off scheduler hiccups); the spans wall must stay
+    within ``GATE_OVERHEAD_FRACTION`` of the off wall plus an absolute
+    floor, and routing + answers must be bit-identical across modes."""
+    from repro.dp import autotune
+
+    def leg(mode_name: str) -> dict:
+        autotune.reset()
+        return _measure(n_requests, telemetry_mode=mode_name,
+                        feedback=False)
+
+    runs = {"off": [], "spans": []}
+    for _ in range(2):
+        for mode_name in ("off", "spans"):
+            runs[mode_name].append(leg(mode_name))
+
+    best = {m: min(rs, key=lambda r: r["wall_s"]) for m, rs in runs.items()}
+    fp_off = [r["fingerprint"] for r in runs["off"]]
+    fp_spans = [r["fingerprint"] for r in runs["spans"]]
+    identical = all(fp == fp_off[0] for fp in fp_off + fp_spans)
+    wall_off, wall_spans = best["off"]["wall_s"], best["spans"]["wall_s"]
+    budget = wall_off * (1.0 + GATE_OVERHEAD_FRACTION) + GATE_ABS_FLOOR_S
+    overhead = (wall_spans - wall_off) / max(wall_off, 1e-9)
+    report = {
+        "n_requests": n_requests,
+        "wall_off_s": wall_off,
+        "wall_spans_s": wall_spans,
+        "overhead_fraction": round(overhead, 4),
+        "budget_s": round(budget, 4),
+        "fingerprints_identical": identical,
+        "legs": {m: rs for m, rs in runs.items()},
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {os.path.abspath(out_path)}")
+    print(f"telemetry-gate,off={wall_off}s,spans={wall_spans}s,"
+          f"overhead={overhead:+.1%},identical={int(identical)}")
+    if not identical:
+        raise SystemExit(
+            "telemetry gate: routing/answers differ between "
+            f"REPRO_TELEMETRY=off and spans:\noff:   {fp_off}\n"
+            f"spans: {fp_spans}")
+    if wall_spans > budget:
+        raise SystemExit(
+            f"telemetry gate: spans-mode wall {wall_spans:.3f}s exceeds "
+            f"budget {budget:.3f}s (off {wall_off:.3f}s + "
+            f"{GATE_OVERHEAD_FRACTION:.0%} + {GATE_ABS_FLOOR_S}s floor)")
+    return report
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -218,8 +355,13 @@ if __name__ == "__main__":
     ap.add_argument("--requests", type=int, default=N_REQUESTS)
     ap.add_argument("--no-subprocess", action="store_true",
                     help="skip the forced-N-devices comparison leg")
+    ap.add_argument("--telemetry-gate", action="store_true",
+                    help="run the off-vs-spans overhead/transparency gate "
+                         "instead of the throughput legs")
     args = ap.parse_args()
     if args.inner:
         print(json.dumps(_measure(args.requests)))
+    elif args.telemetry_gate:
+        telemetry_gate(args.requests)
     else:
         run(n_requests=args.requests, subprocess_leg=not args.no_subprocess)

@@ -22,6 +22,8 @@ Layers (DESIGN.md §3, §5):
   service     — DPService: submit/poll handles, admission control with
                 deadlines/priorities, content-digest answer cache, the
                 continuous scheduling loop (DESIGN.md §7)
+  telemetry   — request spans, metrics registry, routing audit, exporters
+                (REPRO_TELEMETRY={off,basic,spans,profile}; DESIGN.md §8)
 
 Quickstart::
 
@@ -49,15 +51,16 @@ from repro.dp.registry import names as problem_names  # noqa: F401
 from repro.dp.registry import problems  # noqa: F401
 from repro.dp.service import AdmissionError, DPService, ServiceResult  # noqa: F401
 from repro.dp.sharding import ShardContext, ShardedDPEngine  # noqa: F401
-from repro.dp import service, sharding  # noqa: F401
+from repro.dp.telemetry import Span  # noqa: F401
+from repro.dp import service, sharding, telemetry  # noqa: F401
 
 __all__ = [
     "AdmissionError", "Answer", "DPEngine", "DPProblem", "DPRequest",
     "DPResponse", "DPService", "LinearPath", "LinearSpec", "ServiceResult",
-    "ShardContext", "ShardedDPEngine", "Spec", "TriangularPath",
+    "ShardContext", "ShardedDPEngine", "Span", "Spec", "TriangularPath",
     "TriangularSpec", "autotune", "backends", "batch_solve",
     "batch_solve_specs", "calibrate", "dispatch", "route", "get_problem",
     "problem_names", "problems", "reconstruct", "registry", "routing",
     "routing_report", "service", "sharding", "solve", "solve_spec",
-    "spec_digest", "zoo",
+    "spec_digest", "telemetry", "zoo",
 ]

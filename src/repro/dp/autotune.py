@@ -46,14 +46,16 @@ import dataclasses
 import json
 import os
 import time
-import warnings
 from collections import OrderedDict
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.dp import backends as _backends
+from repro.dp import telemetry as _telemetry
 from repro.dp.problem import Spec
+
+_log = _telemetry.get_logger("autotune")
 
 #: EMA weight of one online observation folded into an existing entry.
 EMA_ALPHA = 0.3
@@ -220,8 +222,8 @@ class CalibrationTable:
                     ms=float(row["ms"]), count=int(row.get("count", 1)),
                     source=str(row.get("source", "calibrate"))))
         except Exception as exc:  # corrupt cache must never break dispatch
-            warnings.warn(f"ignoring corrupt calibration table {path!r}: "
-                          f"{exc} (falling back to the analytical model)")
+            _log.warning("ignoring corrupt calibration table %r: %s "
+                         "(falling back to the analytical model)", path, exc)
             table._entries.clear()
             table._by_backend.clear()
             table._memo.clear()
@@ -346,16 +348,49 @@ def _rank_by(pool: list, resolve) -> list:
     return [d[3] for d in decorated]
 
 
+def _audit_decision(kind: str, spec: Spec, regime, pool: list,
+                    scores: dict, ranked: list) -> None:
+    """File one rank decision into the telemetry routing audit: every
+    candidate with its measured ms (None = unmeasured in this regime) and
+    analytical cost, plus the winner. No-op unless audit is enabled, so
+    routing pays nothing by default."""
+    if not _telemetry.audit_enabled() or not ranked:
+        return
+    rows = []
+    for b in pool:
+        try:
+            analytic = float(b.cost(spec))
+        except Exception:
+            analytic = float("inf")
+        ms = scores.get(b.name)
+        rows.append({"backend": b.name,
+                     "measured_ms": None if ms is None else round(ms, 6),
+                     "analytical_cost": round(analytic, 3)})
+    _telemetry.record_route_decision(
+        kind, spec.shape_key(), regime, rows, ranked[0].name)
+
+
 def rank(spec: Spec, cands: Sequence, suffix: tuple = ()) -> list:
     """Two-tier ordering of candidate backends: tier 0 = measured cost,
     tier 1 = unmeasured in analytical order (the model as prior and
     tiebreak). ``suffix`` selects the measurement regime (see
-    :func:`measured_ms`)."""
+    :func:`measured_ms`). Each call files a routing-audit entry when
+    telemetry runs in ``spans`` mode."""
     t = get_table()
+    scores: dict = {}
     if not len(t):
-        return list(cands)
-    return _rank_by(list(cands),
-                    lambda i, b: measured_ms(b, spec, table=t, suffix=suffix))
+        ranked = list(cands)
+        _audit_decision("rank", spec, suffix, ranked, scores, ranked)
+        return ranked
+
+    def resolve(i, b):
+        ms = measured_ms(b, spec, table=t, suffix=suffix)
+        scores[b.name] = ms
+        return ms
+
+    ranked = _rank_by(list(cands), resolve)
+    _audit_decision("rank", spec, suffix, ranked, scores, ranked)
+    return ranked
 
 
 def rank_batch(spec: Spec, batchable: Sequence, loop_only: Sequence,
@@ -375,7 +410,9 @@ def rank_batch(spec: Spec, batchable: Sequence, loop_only: Sequence,
     single-device batch regime."""
     t = get_table()
     pool = list(batchable) + list(loop_only)
+    scores: dict = {}
     if not len(t):
+        _audit_decision("rank_batch", spec, batch_suffix, pool, scores, pool)
         return pool
     loop_suffix = batch_suffix if loop_suffix is None else loop_suffix
 
@@ -384,10 +421,14 @@ def rank_batch(spec: Spec, batchable: Sequence, loop_only: Sequence,
             ms = measured_ms(b, spec, table=t, suffix=batch_suffix)
             if ms is None:
                 ms = measured_ms(b, spec, table=t)
-            return ms
-        return measured_ms(b, spec, table=t, suffix=loop_suffix)
+        else:
+            ms = measured_ms(b, spec, table=t, suffix=loop_suffix)
+        scores[b.name] = ms
+        return ms
 
-    return _rank_by(pool, resolve)
+    ranked = _rank_by(pool, resolve)
+    _audit_decision("rank_batch", spec, batch_suffix, ranked, scores, ranked)
+    return ranked
 
 
 # ---------------------------------------------------------------------------
@@ -447,14 +488,20 @@ def calibrate(problems: Optional[Sequence[str]] = None,
 # ---------------------------------------------------------------------------
 # Reporting
 # ---------------------------------------------------------------------------
-def routing_report(table: Optional[CalibrationTable] = None) -> dict:
+def routing_report(table: Optional[CalibrationTable] = None,
+                   decisions_limit: int = 256) -> dict:
     """Measured-vs-analytical dispatch audit over every calibrated shape on
     the current JAX backend: which route each policy picks, whether they
     agree, and the *analytical regret* — measured ms of the analytical pick
     over measured ms of the true fastest (1.0 = the model was right).
     Rows are grouped per (shape, measurement regime); only rows where at
     least two routes were measured enter the agree/regret statistics —
-    a single-backend row can't disagree with anything."""
+    a single-backend row can't disagree with anything.
+
+    ``decisions`` holds the most recent per-decision telemetry audit
+    entries (``spans`` mode) — each live ``rank``/``rank_batch``/drain
+    resolution with its candidates' measured-vs-analytical scores, regime
+    key, and chosen backend; empty below ``spans`` mode."""
     t = table if table is not None else get_table()
     jb = _jax_backend()
     by_shape: Dict[tuple, Dict[str, Entry]] = {}
@@ -498,4 +545,5 @@ def routing_report(table: Optional[CalibrationTable] = None) -> dict:
         "median_analytical_regret":
             float(np.median(regrets)) if regrets else 1.0,
         "max_analytical_regret": float(max(regrets)) if regrets else 1.0,
+        "decisions": _telemetry.routing_audit(limit=decisions_limit),
     }

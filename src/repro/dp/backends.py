@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from collections import OrderedDict
 from typing import Callable, Optional
 
@@ -34,6 +35,10 @@ TRACE_LOG_MAX = 4096
 #: after the cap trims the list, so delta-based cold-call detection
 #: (``DPEngine``) stays sound in arbitrarily long sessions.
 TRACE_COUNT = 0
+#: append/drain interleave once drains run off more than one thread (the
+#: service's slot-recycling loop + concurrent drains) — writers and the
+#: snapshot-and-clear must not race
+_TRACE_LOCK = threading.Lock()
 
 _BACKENDS: dict = {}
 #: jit-callable cache, LRU-bounded (the blocked_mcm guard-cache pattern).
@@ -43,18 +48,25 @@ _LOADED = False
 
 
 def log_trace(key) -> None:
-    """Record a trace event, keeping the log bounded."""
+    """Record a trace event, keeping the log bounded. Thread-safe: traced
+    callables may compile from concurrent drain threads."""
     global TRACE_COUNT
-    TRACE_COUNT += 1
-    TRACE_LOG.append(key)
-    if len(TRACE_LOG) > TRACE_LOG_MAX:
-        del TRACE_LOG[: len(TRACE_LOG) - TRACE_LOG_MAX]
+    with _TRACE_LOCK:
+        TRACE_COUNT += 1
+        TRACE_LOG.append(key)
+        if len(TRACE_LOG) > TRACE_LOG_MAX:
+            del TRACE_LOG[: len(TRACE_LOG) - TRACE_LOG_MAX]
+    from repro.dp import telemetry as _telemetry
+
+    _telemetry.count("dp_backend_traces_total")
 
 
 def drain_trace_log() -> list:
-    """Snapshot and clear the trace log (tests; bounds long sessions)."""
-    out = list(TRACE_LOG)
-    TRACE_LOG.clear()
+    """Snapshot and clear the trace log (tests; bounds long sessions).
+    Atomic with respect to concurrent :func:`log_trace` appends."""
+    with _TRACE_LOCK:
+        out = list(TRACE_LOG)
+        TRACE_LOG.clear()
     return out
 
 

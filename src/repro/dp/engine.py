@@ -40,7 +40,10 @@ from repro.dp import backends as _backends
 from repro.dp import reconstruct as _reconstruct
 from repro.dp import registry as _registry
 from repro.dp import routing as _routing
+from repro.dp import telemetry as _telemetry
 from repro.dp.problem import Answer, Spec, spec_digest
+
+_log = _telemetry.get_logger("engine")
 
 #: LRU bound on the engine's per-route bookkeeping (_drains / _warmed) —
 #: endless fresh shapes must not grow process memory (same invariant as the
@@ -70,6 +73,9 @@ class DPResponse:
     backend: str
     batch_size: int
     solution: Optional[Answer] = None
+    #: this rid shared another request's solve lane (intra-drain dedup
+    #: fan-out) — telemetry marks its span instead of re-counting work
+    deduped: bool = False
 
 
 class DPEngine:
@@ -102,6 +108,11 @@ class DPEngine:
                       "batched_requests": 0, "dedup_hits": 0,
                       "device_tracebacks": 0, "host_tracebacks": 0,
                       "explore_dispatches": 0, "feedback_observations": 0}
+        #: :class:`repro.dp.telemetry.DrainReport` of the most recent
+        #: drain (None below ``basic`` telemetry) — the service reads it to
+        #: attribute span events and per-phase histograms per request
+        self.last_drain = None
+        _telemetry.REGISTRY.register_source("dp_engine", self)
 
     # -- admission ---------------------------------------------------------
     def submit(self, problem: str, reconstruct: bool = False,
@@ -249,39 +260,55 @@ class DPEngine:
 
         obs_key = specs[0].shape_key() + self._obs_suffix(chosen, specs[0],
                                                           reconstruct)
+        if _telemetry.audit_enabled():
+            _telemetry.record_route_decision(
+                "drain", specs[0].shape_key(),
+                self._obs_suffix(chosen, specs[0], reconstruct), [],
+                chosen.name, bucket=repr(key), batch_size=len(batch),
+                unique=len(uniq_specs), explored=explored,
+                override=backend is not None)
         warm_key = (chosen.name, obs_key, len(uniq_specs))
-        traces_before = _backends.TRACE_COUNT
-        t0 = time.perf_counter()
-        tables, argss, source = self._run_bucket(chosen, uniq_specs,
-                                                 reconstruct)
-        solve_ms = (time.perf_counter() - t0) * 1e3
-        # dedup fan-out (and the service answer cache) hand the SAME
-        # arrays to multiple consumers — freeze them so a caller's
-        # in-place edit raises instead of silently corrupting the
-        # duplicates' and future cache hits' answers
-        for arr in tables:
-            arr.setflags(write=False)
-        for arr in argss or ():
-            arr.setflags(write=False)
-        # a drain is warm only if this engine already ran this exact
-        # (route, shape, batch size) — catching jit compiles TRACE_LOG can't
-        # see (loop-fallback solvers) — AND nothing retraced during the call
-        cold = (warm_key not in self._warmed
-                or _backends.TRACE_COUNT != traces_before)
-        _backends.lru_put(self._warmed, warm_key, True, _ROUTE_STATE_MAX)
-        if reconstruct:
-            answers = _reconstruct.reconstruct_batch(prob, uniq_specs, tables,
-                                                     argss, source)
-        else:
-            answers = [None] * len(uniq_specs)
+        with _telemetry.drain_scope(key, chosen.name, len(batch),
+                                    len(uniq_specs)) as drain_rep:
+            traces_before = _backends.TRACE_COUNT
+            t0 = time.perf_counter()
+            tables, argss, source = self._run_bucket(chosen, uniq_specs,
+                                                     reconstruct)
+            solve_ms = (time.perf_counter() - t0) * 1e3
+            _telemetry.add_phase("solve", solve_ms)
+            # dedup fan-out (and the service answer cache) hand the SAME
+            # arrays to multiple consumers — freeze them so a caller's
+            # in-place edit raises instead of silently corrupting the
+            # duplicates' and future cache hits' answers
+            for arr in tables:
+                arr.setflags(write=False)
+            for arr in argss or ():
+                arr.setflags(write=False)
+            # a drain is warm only if this engine already ran this exact
+            # (route, shape, batch size) — catching jit compiles TRACE_LOG
+            # can't see (loop-fallback solvers) — AND nothing retraced
+            # during the call
+            cold = (warm_key not in self._warmed
+                    or _backends.TRACE_COUNT != traces_before)
+            _backends.lru_put(self._warmed, warm_key, True, _ROUTE_STATE_MAX)
+            if drain_rep is not None:
+                drain_rep.cold = cold
+                drain_rep.explored = explored
+            if reconstruct:
+                answers = _reconstruct.reconstruct_batch(
+                    prob, uniq_specs, tables, argss, source)
+            else:
+                answers = [None] * len(uniq_specs)
+        self.last_drain = drain_rep
         responses = []
-        for r in batch:
+        for i, r in enumerate(batch):
             j = lane_of[r.digest]
             responses.append(
                 DPResponse(rid=r.rid, problem=r.problem,
                            answer=prob.extract(tables[j], r.spec),
                            backend=chosen.name, batch_size=len(batch),
-                           solution=answers[j]))
+                           solution=answers[j],
+                           deduped=uniq_idx[r.digest] != i))
 
         if rest:
             self._buckets[key] = rest
@@ -308,6 +335,20 @@ class DPEngine:
             counter = ("device_tracebacks" if source == "device"
                        else "host_tracebacks")
             self.stats[counter] += len(uniq_specs)
+        if _telemetry.enabled("basic"):
+            _telemetry.count("dp_engine_drains_total")
+            _telemetry.count("dp_engine_requests_total", len(batch))
+            _telemetry.count("dp_engine_dedup_fanout_total",
+                             len(batch) - len(uniq_specs))
+            if cold:
+                _telemetry.count("dp_engine_cold_drains_total")
+            _telemetry.observe_ms("dp_engine_batch_size", len(batch),
+                                  buckets=_telemetry.DEFAULT_SIZE_BUCKETS)
+            _telemetry.set_gauge("dp_engine_pending", self.pending())
+            _log.debug("drain %r: %d req (%d unique) via %s in %.3f ms "
+                       "(cold=%s explored=%s)", key, len(batch),
+                       len(uniq_specs), chosen.name, solve_ms, cold,
+                       explored)
         return responses
 
     def run(self, backend: Optional[str] = None) -> dict:

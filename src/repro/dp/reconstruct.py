@@ -174,8 +174,17 @@ def reconstruct_batch(prob: DPProblem, specs: Sequence[Spec],
                       tables: Sequence[np.ndarray],
                       argss: Sequence[np.ndarray], source: str) -> list:
     """Batch assembly. Device-sourced args are walked by ONE vmapped
-    traceback program; host-sourced args fall back to host walks."""
+    traceback program; host-sourced args fall back to host walks. The walk
+    and the decode loop each report their duration as a telemetry phase
+    (``traceback`` / ``decode``) — onto the engine's active drain report
+    when one is open, always into the registry histograms (no-op when
+    telemetry is off)."""
+    import time
+
+    from repro.dp import telemetry as _telemetry
+
     spec0 = specs[0]
+    t0 = time.perf_counter()
     if source == "device":
         starts = None
         if spec0.geometry == "linear":
@@ -186,5 +195,9 @@ def reconstruct_batch(prob: DPProblem, specs: Sequence[Spec],
                                 start_cell(prob, t, s)
                                 if s.geometry == "linear" else -1)
                  for a, s, t in zip(argss, specs, tables)]
-    return [reconstruct_one(prob, s, t, a, source, path=p)
-            for s, t, a, p in zip(specs, tables, argss, paths)]
+    t1 = time.perf_counter()
+    _telemetry.add_phase("traceback", (t1 - t0) * 1e3)
+    answers = [reconstruct_one(prob, s, t, a, source, path=p)
+               for s, t, a, p in zip(specs, tables, argss, paths)]
+    _telemetry.add_phase("decode", (time.perf_counter() - t1) * 1e3)
+    return answers

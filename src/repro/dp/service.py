@@ -39,8 +39,11 @@ from typing import Any, Optional
 from repro.dp import backends as _backends
 from repro.dp import reconstruct as _reconstruct
 from repro.dp import registry as _registry
+from repro.dp import telemetry as _telemetry
 from repro.dp.engine import DPEngine
 from repro.dp.problem import Answer, Spec, spec_digest
+
+_log = _telemetry.get_logger("service")
 
 
 class AdmissionError(RuntimeError):
@@ -59,13 +62,19 @@ class Ticket:
     priority: int
     deadline: Optional[float]      # absolute time.monotonic() start-by bound
     submitted_at: float
+    #: telemetry timestamps on the ``telemetry.clock`` timebase (set in
+    #: ``basic`` mode and above; 0.0 when telemetry is off)
+    t_enqueued: float = 0.0
+    t_dispatched: float = 0.0
 
 
 @dataclasses.dataclass
 class ServiceResult:
     """Resolution of one ticket. ``status`` is ``"done"`` or ``"expired"``;
     ``cached`` marks answers served from the digest cache without a device
-    call; ``latency_ms`` is submit→resolve wall time."""
+    call; ``latency_ms`` is submit→resolve wall time. In ``spans``
+    telemetry mode ``span`` carries the request's full timestamped
+    lifecycle (:class:`repro.dp.telemetry.Span`)."""
 
     tid: int
     problem: str
@@ -75,6 +84,7 @@ class ServiceResult:
     backend: Optional[str] = None
     cached: bool = False
     latency_ms: float = 0.0
+    span: Optional[_telemetry.Span] = None
 
 
 @dataclasses.dataclass
@@ -156,9 +166,16 @@ class DPService:
         #: (problem, backend) -> drained request count (the demo's
         #: per-route view; per-regime detail lives in routing_report())
         self.routes: dict = {}
+        #: ``shed`` and ``rejected`` are the same count (``shed`` is the
+        #: telemetry-conventional name; ``rejected`` the original); the
+        #: service invariant is
+        #: ``submitted == completed + pending() + expired + shed``
         self.stats = {"submitted": 0, "completed": 0, "cache_hits": 0,
                       "cache_misses": 0, "expired": 0, "rejected": 0,
-                      "admitted": 0, "service_steps": 0}
+                      "shed": 0, "admitted": 0, "service_steps": 0}
+        #: tid -> live telemetry Span (``spans`` mode only)
+        self._spans: dict = {}
+        _telemetry.REGISTRY.register_source("dp_service", self)
 
     # -- admission ---------------------------------------------------------
     def backlog(self) -> int:
@@ -189,30 +206,53 @@ class DPService:
         now = time.monotonic()
         ckey = (prob.name, digest, reconstruct)
         hit = self._cache.get(ckey)
+        # submitted counts every request that reached admission — including
+        # shed ones — so the §8 invariant
+        # submitted == completed + pending + expired + shed always balances
+        self.stats["submitted"] += 1
+        span = _telemetry.new_span(self._next_tid, prob.name)
+        if span is not None:
+            span.add("admitted")
         if hit is None and self.backlog() >= self.max_pending:
             self.stats["rejected"] += 1
+            self.stats["shed"] += 1
+            _telemetry.count("dp_service_shed_total")
+            if span is not None:
+                span.meta["status"] = "shed"
+                _telemetry.finish_span(span.add("shed"))
             raise AdmissionError(
                 f"backlog full ({self.max_pending} pending); retry later")
         tid = self._next_tid
         self._next_tid += 1
-        self.stats["submitted"] += 1
+        _telemetry.count("dp_service_submitted_total")
         if hit is not None:
             self._cache.move_to_end(ckey)
             self.stats["cache_hits"] += 1
             self.stats["completed"] += 1
+            _telemetry.count("dp_service_cache_hits_total")
+            _telemetry.observe_ms("dp_service_latency_ms", 0.0)
+            if span is not None:
+                span.meta.update(status="done", cached=True,
+                                 backend=hit.backend)
+                _telemetry.finish_span(span.add("cache_hit").add("resolved"))
             _backends.lru_put(self._results, tid, ServiceResult(
                 tid=tid, problem=prob.name, status="done", answer=hit.answer,
                 solution=hit.solution, backend=hit.backend, cached=True,
-                latency_ms=0.0), self.results_max)
+                latency_ms=0.0, span=span), self.results_max)
             return tid
         self.stats["cache_misses"] += 1
         deadline = None if deadline_ms is None else now + deadline_ms / 1e3
         key = (prob.name, spec.shape_key(), reconstruct)
         self._unresolved.add(tid)
-        self._backlog.setdefault(key, []).append(Ticket(
+        ticket = Ticket(
             tid=tid, problem=prob.name, spec=spec, digest=digest,
             reconstruct=reconstruct, priority=priority, deadline=deadline,
-            submitted_at=now))
+            submitted_at=now,
+            t_enqueued=_telemetry.clock() if _telemetry.enabled() else 0.0)
+        self._backlog.setdefault(key, []).append(ticket)
+        if span is not None:
+            span.add("enqueued", ticket.t_enqueued)
+            self._spans[tid] = span
         return tid
 
     def poll(self, tid: int):
@@ -241,9 +281,14 @@ class DPService:
                     self.stats["expired"] += 1
                     expired.append(t.tid)
                     self._unresolved.discard(t.tid)
+                    _telemetry.count("dp_service_expired_total")
+                    span = self._spans.pop(t.tid, None)
+                    if span is not None:
+                        span.meta["status"] = "expired"
+                        _telemetry.finish_span(span.add("expired"))
                     _backends.lru_put(self._results, t.tid, ServiceResult(
                         tid=t.tid, problem=t.problem, status="expired",
-                        latency_ms=(now - t.submitted_at) * 1e3),
+                        latency_ms=(now - t.submitted_at) * 1e3, span=span),
                         self.results_max)
                 else:
                     live.append(t)
@@ -305,11 +350,16 @@ class DPService:
                                       t.deadline if t.deadline is not None
                                       else float("inf"), t.tid))
             take, rest = queue[:budget], queue[budget:]
+            t_dispatch = _telemetry.clock() if _telemetry.enabled() else 0.0
             for t in take:
                 rid = self.engine.submit_spec(t.problem, t.spec,
                                               reconstruct=t.reconstruct,
                                               digest=t.digest)
                 self._inflight[rid] = t
+                t.t_dispatched = t_dispatch
+                span = self._spans.get(t.tid)
+                if span is not None:
+                    span.add("dispatched", t_dispatch)
             admitted += len(take)
             budget -= len(take)
             if rest:
@@ -325,18 +375,27 @@ class DPService:
         expired)."""
         resolved = self._expire()
         self._admit()
-        for resp in self.engine.step(backend=backend,
-                                     bucket=self._drain_target()):
+        responses = self.engine.step(backend=backend,
+                                     bucket=self._drain_target())
+        drain = self.engine.last_drain if _telemetry.enabled() else None
+        t_done = _telemetry.clock() if _telemetry.enabled() else 0.0
+        for resp in responses:
             t = self._inflight.pop(resp.rid)
             self._unresolved.discard(t.tid)
+            span = self._spans.pop(t.tid, None)
             res = ServiceResult(
                 tid=t.tid, problem=t.problem, status="done",
                 answer=resp.answer, solution=resp.solution,
                 backend=resp.backend,
-                latency_ms=(time.monotonic() - t.submitted_at) * 1e3)
+                latency_ms=(time.monotonic() - t.submitted_at) * 1e3,
+                span=span)
+            if drain is not None:
+                self._observe_phases(t, resp, drain, span, t_done)
             _backends.lru_put(self._results, t.tid, res, self.results_max)
             resolved.append(t.tid)
             self.stats["completed"] += 1
+            _telemetry.count("dp_service_completed_total")
+            _telemetry.observe_ms("dp_service_latency_ms", res.latency_ms)
             rkey = (t.problem, resp.backend)
             self.routes[rkey] = self.routes.get(rkey, 0) + 1
             ckey = (t.problem, t.digest, t.reconstruct)
@@ -346,7 +405,48 @@ class DPService:
                                           backend=resp.backend),
                               self.cache_size)
         self.stats["service_steps"] += 1
+        _telemetry.set_gauge("dp_service_backlog", self.backlog())
+        _telemetry.set_gauge("dp_service_inflight", len(self._inflight))
+        _telemetry.set_gauge("dp_service_cache_size", len(self._cache))
         return resolved
+
+    def _observe_phases(self, t: Ticket, resp, drain, span, t_done: float):
+        """Per-request latency attribution from the drain report: feed the
+        queue/dispatch/solve/traceback/decode histograms, and (``spans``
+        mode) replay the drain's timeline into the request's span. Solve/
+        traceback/decode are drain-level durations — each request in the
+        batch waited for the whole batched call, so the drain's duration IS
+        its latency contribution."""
+        phases = {
+            "queue": (t.t_dispatched - t.t_enqueued) * 1e3,
+            "dispatch": (drain.t_start - t.t_dispatched) * 1e3,
+            "solve": drain.phases.get("solve", 0.0),
+        }
+        for ph in ("traceback", "decode"):
+            if ph in drain.phases:
+                phases[ph] = drain.phases[ph]
+        for ph, ms in phases.items():
+            _telemetry.observe_ms(f"dp_service_{ph}_ms", max(ms, 0.0))
+        if span is None:
+            return
+        span.meta.update(status="done", backend=resp.backend,
+                         batch_size=resp.batch_size, bucket=repr(drain.bucket),
+                         cold=drain.cold, sharded=drain.sharded)
+        tt = drain.t_start
+        span.add("batched", tt)
+        if drain.cold:
+            span.add("retraced", tt)
+        tt += drain.phases.get("solve", 0.0) / 1e3
+        span.add("solved", tt)
+        if "traceback" in drain.phases:
+            tt += drain.phases["traceback"] / 1e3
+            span.add("traceback", tt)
+        if "decode" in drain.phases:
+            tt += drain.phases["decode"] / 1e3
+            span.add("decoded", tt)
+        if resp.deduped:
+            span.add("dedup_fanout", tt)
+        _telemetry.finish_span(span.add("resolved", t_done))
 
     def run(self, backend: Optional[str] = None) -> dict:
         """Drive the loop until backlog and engine are empty; returns

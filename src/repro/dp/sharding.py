@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.dp import reconstruct as _reconstruct
 from repro.dp import routing as _routing
+from repro.dp import telemetry as _telemetry
 from repro.dp.engine import DPEngine
 
 #: mesh axis name of the bucket's batch dimension
@@ -187,4 +188,9 @@ class ShardedDPEngine(DPEngine):
             argss, source = None, None
         self.stats["sharded_drains"] += 1
         self.stats["padded_lanes"] += n_pad
+        rep = _telemetry.current_drain()
+        if rep is not None:
+            rep.sharded = True
+        _telemetry.count("dp_engine_sharded_drains_total")
+        _telemetry.count("dp_engine_padded_lanes_total", n_pad)
         return tables, argss, source

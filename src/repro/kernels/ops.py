@@ -28,6 +28,16 @@ from repro.kernels.semiring_matmul import tropical_matmul_pallas
 _KERNEL_MODES = ("auto", "pallas", "ref", "interpret")
 
 
+def _count_entry(fn: str, mode: str) -> None:
+    """Telemetry counter ``dp_kernel_<fn>_<mode>_total`` for one kernel-tier
+    entry call. Imported lazily at call time (never at module import — the
+    dp package pulls this module in through route registration) and a
+    guarded no-op below ``basic``."""
+    from repro.dp import telemetry
+
+    telemetry.count(f"dp_kernel_{fn}_{mode}_total")
+
+
 def kernel_mode() -> str:
     env = os.environ.get("REPRO_KERNELS", "auto")
     if env not in _KERNEL_MODES:
@@ -43,6 +53,7 @@ def kernel_mode() -> str:
 # ---------------------------------------------------------------------------
 def tropical_matmul(a, b, av=None, gv=None, bv=None, **blocks):
     mode = kernel_mode()
+    _count_entry("tropical_matmul", mode)
     if mode == "pallas":
         return tropical_matmul_pallas(a, b, av, gv, bv, **blocks)
     if mode == "interpret":
@@ -55,6 +66,7 @@ def sdp_blocked(init, offsets: tuple, op: str, n: int, block: int = 512,
     from repro.core.sdp import solve_blocked
 
     mode = kernel_mode()
+    _count_entry("sdp_blocked", mode)
     if mode in ("pallas", "interpret"):
         return sdp_pipeline_pallas(init, offsets, op, n, block=block,
                                    weights=weights,
@@ -71,6 +83,7 @@ def sdp_blocked_with_args(init, offsets: tuple, op: str, n: int,
     from repro.core.sdp import solve_blocked_with_args
 
     mode = kernel_mode()
+    _count_entry("sdp_blocked_with_args", mode)
     if mode in ("pallas", "interpret"):
         return sdp_pipeline_pallas_with_args(init, offsets, op, n, block=block,
                                              weights=weights,
@@ -85,6 +98,7 @@ def mcm_blocked(wtab, n: int):
     from repro.core.mcm import solve_wavefront_tab
 
     mode = kernel_mode()
+    _count_entry("mcm_blocked", mode)
     if mode in ("pallas", "interpret"):
         return mcm_pipeline_pallas(wtab, n, interpret=(mode == "interpret"))
     return solve_wavefront_tab(wtab, n)
@@ -95,6 +109,7 @@ def mcm_blocked_with_args(wtab, n: int):
     from repro.core.mcm import solve_wavefront_tab_with_args
 
     mode = kernel_mode()
+    _count_entry("mcm_blocked_with_args", mode)
     if mode in ("pallas", "interpret"):
         return mcm_pipeline_pallas_with_args(wtab, n,
                                              interpret=(mode == "interpret"))
@@ -104,6 +119,7 @@ def mcm_blocked_with_args(wtab, n: int):
 def linear_scan(x, decay, h0, chunk: int = 128):
     """h_t = decay_t ⊙ h_{t-1} + x_t; returns (h_all, h_final)."""
     mode = kernel_mode()
+    _count_entry("linear_scan", mode)
     if mode == "pallas":
         return chunked_scan_pallas(x, decay, h0, chunk=chunk)
     if mode == "interpret":
@@ -204,6 +220,7 @@ def flash_attention(q, k, v, causal: bool = True, chunk: int = 512):
     ax = ("act_batch", "act_heads", "act_seq_attn", None)
     q, k, v = hint(q, ax), hint(k, ax), hint(v, ax)
     mode = kernel_mode()
+    _count_entry("flash_attention", mode)
     if mode in ("pallas", "interpret"):
         b, h, s, d = q.shape
         out = flash_attention_pallas(

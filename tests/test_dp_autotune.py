@@ -116,15 +116,20 @@ def test_table_round_trips_to_disk(tmp_path):
     assert dp.dispatch(spec).name == other.name
 
 
-def test_corrupt_table_falls_back_to_analytical(tmp_path):
+def test_corrupt_table_falls_back_to_analytical(tmp_path, caplog):
     spec = _lin_spec()
     analytic_first = backends.candidates(spec)[0].name
     for content in ("{definitely not json", json.dumps({"version": 99}),
                     json.dumps({"version": 1, "entries": [{"bad": "row"}]})):
         path = tmp_path / "corrupt.json"
         path.write_text(content)
-        with pytest.warns(UserWarning, match="corrupt calibration table"):
+        # diagnostics go through the repro.dp logging hierarchy, not
+        # warnings.warn (DESIGN.md §8)
+        with caplog.at_level("WARNING", logger="repro.dp.autotune"):
+            caplog.clear()
             table = autotune.CalibrationTable.load(str(path))
+        assert any("corrupt calibration table" in r.getMessage()
+                   for r in caplog.records)
         assert len(table) == 0
         autotune.set_table(table)
         assert dp.dispatch(spec).name == analytic_first

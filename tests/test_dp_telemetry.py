@@ -1,0 +1,372 @@
+"""Telemetry layer (DESIGN.md §8): mode knobs, metrics registry, request
+spans, routing audit, drain attribution, thread safety, exporters, and the
+service accounting invariant."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro import dp
+from repro.dp import backends, telemetry
+
+
+@pytest.fixture(autouse=True)
+def _telemetry_isolated(monkeypatch):
+    """Telemetry state is process-global (cached mode, registry, rings);
+    every test starts and ends at a clean ``off``."""
+    monkeypatch.delenv(telemetry.ENV_MODE, raising=False)
+    monkeypatch.delenv(telemetry.ENV_LOG, raising=False)
+
+    def clean():
+        telemetry.reset()
+        telemetry.REGISTRY.reset()
+        telemetry.clear_spans()
+        telemetry.clear_audit()
+
+    clean()
+    yield
+    clean()
+
+
+def _mcm_payloads(n, rng=None, size=6):
+    rng = rng or np.random.default_rng(0)
+    return [dp.get_problem("mcm").sample(rng, size) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Mode / log knobs
+# ---------------------------------------------------------------------------
+def test_mode_env_validated(monkeypatch):
+    monkeypatch.setenv(telemetry.ENV_MODE, "span")   # typo, not "spans"
+    telemetry.reset()
+    with pytest.raises(ValueError, match="REPRO_TELEMETRY"):
+        telemetry.mode()
+
+
+def test_mode_env_resolves_and_caches(monkeypatch):
+    monkeypatch.setenv(telemetry.ENV_MODE, "basic")
+    telemetry.reset()
+    assert telemetry.mode() == "basic"
+    assert telemetry.enabled("basic")
+    assert not telemetry.enabled("spans")
+
+
+def test_configure_validates_and_returns_previous():
+    assert telemetry.configure("spans") == "off"
+    assert telemetry.enabled("spans")
+    assert telemetry.configure("off") == "spans"
+    with pytest.raises(ValueError, match="invalid telemetry mode"):
+        telemetry.configure("verbose")
+
+
+def test_log_level_env_validated(monkeypatch):
+    monkeypatch.setenv(telemetry.ENV_LOG, "loud")
+    with pytest.raises(ValueError, match="REPRO_LOG"):
+        telemetry.log_level()
+
+
+def test_get_logger_hierarchy():
+    log = telemetry.get_logger("engine")
+    assert log.name == "repro.dp.engine"
+
+
+# ---------------------------------------------------------------------------
+# Registry primitives
+# ---------------------------------------------------------------------------
+def test_counter_is_monotonic():
+    c = telemetry.REGISTRY.counter("t_total")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+
+
+def test_metric_kind_collision_raises():
+    telemetry.REGISTRY.counter("t_name")
+    with pytest.raises(ValueError, match="already registered"):
+        telemetry.REGISTRY.gauge("t_name")
+
+
+def test_histogram_quantiles_clamped_to_observed():
+    h = telemetry.REGISTRY.histogram("t_ms", buckets=(1.0, 10.0, 100.0))
+    for v in (2.0, 3.0, 4.0, 5.0, 200.0):
+        h.observe(v)
+    assert h.count == 5
+    assert 2.0 <= h.quantile(0.5) <= 10.0
+    assert h.quantile(0.99) <= 200.0      # clamped to observed max
+    assert h.quantile(0.0) >= 2.0         # clamped to observed min
+    d = h.to_dict()
+    assert d["count"] == 5 and d["buckets"][-1] == ["+inf", 1]
+
+
+def test_helpers_are_noop_when_off():
+    telemetry.count("t_off_total")
+    telemetry.observe_ms("t_off_ms", 1.0)
+    telemetry.set_gauge("t_off_gauge", 1.0)
+    assert telemetry.REGISTRY.counters() == {}
+    assert telemetry.new_span(0, "mcm") is None
+
+
+def test_registry_source_absorbs_engine_stats():
+    telemetry.configure("basic")
+    eng = dp.DPEngine(max_batch=8)
+    eng.submit("mcm", dims=[4, 5, 6, 7])
+    eng.run()
+    sources = telemetry.REGISTRY.sources()
+    row = next(v for k, v in sources.items() if k.startswith("dp_engine/"))
+    assert row["completed"] == 1           # the compatibility stats view
+
+
+# ---------------------------------------------------------------------------
+# Thread safety
+# ---------------------------------------------------------------------------
+def test_registry_counter_thread_safe():
+    telemetry.configure("basic")
+    n_threads, per = 8, 500
+
+    def worker():
+        for _ in range(per):
+            telemetry.count("t_conc_total")
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert telemetry.REGISTRY.counter("t_conc_total").value == n_threads * per
+
+
+def test_trace_log_concurrent_append_and_drain():
+    backends.drain_trace_log()
+    n_threads, per = 4, 200
+    drained = []
+    stop = threading.Event()
+
+    def appender(i):
+        for j in range(per):
+            backends.log_trace(("t_trace", i, j))
+
+    def drainer():
+        while not stop.is_set():
+            drained.extend(backends.drain_trace_log())
+
+    dt = threading.Thread(target=drainer)
+    threads = [threading.Thread(target=appender, args=(i,))
+               for i in range(n_threads)]
+    dt.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    dt.join()
+    drained.extend(backends.drain_trace_log())
+    # every append lands in exactly one drain — none lost, none doubled
+    assert sorted(drained) == sorted(
+        ("t_trace", i, j) for i in range(n_threads) for j in range(per))
+
+
+# ---------------------------------------------------------------------------
+# Engine drains: counters + drain reports
+# ---------------------------------------------------------------------------
+def test_counters_monotonic_across_drains():
+    telemetry.configure("basic")
+    eng = dp.DPEngine(max_batch=4)
+    seen = []
+    for kw in _mcm_payloads(6):
+        eng.submit("mcm", **kw)
+    while eng.pending():
+        eng.step()
+        c = telemetry.REGISTRY.counters()
+        seen.append((c["dp_engine_drains_total"],
+                     c["dp_engine_requests_total"]))
+    assert seen == sorted(seen)            # never decreases
+    assert seen[-1][0] == len(seen)        # one drain per step
+    assert seen[-1][1] == 6
+
+
+def test_drain_report_phases():
+    telemetry.configure("basic")
+    eng = dp.DPEngine(max_batch=8)
+    eng.submit("mcm", reconstruct=True, dims=[4, 5, 6, 7, 8])
+    eng.run()
+    rep = eng.last_drain
+    assert rep is not None and rep.backend
+    assert {"solve", "traceback", "decode"} <= set(rep.phases)
+    assert all(ms >= 0.0 for ms in rep.phases.values())
+    hists = telemetry.REGISTRY.histograms()
+    assert hists["dp_engine_solve_ms"].count == 1
+    assert hists["dp_engine_traceback_ms"].count == 1
+
+
+# ---------------------------------------------------------------------------
+# Service spans
+# ---------------------------------------------------------------------------
+def test_completed_poll_returns_span_with_phase_events():
+    telemetry.configure("spans")
+    svc = dp.DPService(max_batch=8, mesh=None)
+    tid = svc.submit("mcm", reconstruct=True, dims=[4, 5, 6, 7])
+    res = svc.run()[tid]
+    span = res.span
+    assert span is not None and span.tid == tid
+    names = set(span.event_names())
+    # the ≥5-distinct-phase-events acceptance bar, comfortably cleared
+    assert {"admitted", "enqueued", "dispatched", "batched", "solved",
+            "traceback", "decoded", "resolved"} <= names
+    phases = span.phases()
+    assert {"queue", "dispatch", "solve", "traceback", "decode",
+            "total"} <= set(phases)
+    assert span.meta["backend"] == res.backend
+    ts = [t for _, t in span.events]
+    assert ts == sorted(ts)                # one monotonic timebase
+    # the completed span also landed in the export ring
+    assert any(s["tid"] == tid for s in telemetry.spans_snapshot())
+
+
+def test_cache_hit_span():
+    telemetry.configure("spans")
+    svc = dp.DPService(max_batch=8, mesh=None)
+    kw = {"dims": [4, 5, 6, 7]}
+    first = svc.submit("mcm", **kw)
+    svc.run()[first]
+    hit = svc.submit("mcm", **kw)
+    res = svc.poll(hit)
+    assert res.cached
+    assert "cache_hit" in res.span.event_names()
+    assert res.span.meta["cached"] is True
+
+
+def test_expired_span():
+    telemetry.configure("spans")
+    svc = dp.DPService(max_batch=8, mesh=None)
+    tid = svc.submit("mcm", deadline_ms=0.0001, dims=[4, 5, 6, 7])
+    import time
+    time.sleep(0.002)
+    res = svc.run()[tid]
+    assert res.status == "expired"
+    assert "expired" in res.span.event_names()
+
+
+def test_per_phase_service_histograms():
+    telemetry.configure("basic")      # histograms need no span machinery
+    svc = dp.DPService(max_batch=8, mesh=None)
+    for kw in _mcm_payloads(5):
+        svc.submit("mcm", **kw)
+    svc.run()
+    hists = telemetry.REGISTRY.histograms()
+    for ph in ("queue", "dispatch", "solve"):
+        assert hists[f"dp_service_{ph}_ms"].count >= 5, ph
+    assert hists["dp_service_latency_ms"].count == 5
+
+
+# ---------------------------------------------------------------------------
+# Service accounting invariant
+# ---------------------------------------------------------------------------
+def test_submitted_balances_under_mixed_traffic():
+    telemetry.configure("spans")
+    svc = dp.DPService(max_batch=4, max_pending=6, mesh=None)
+    rng = np.random.default_rng(1)
+    shed = 0
+    for i, kw in enumerate(_mcm_payloads(24, rng)):
+        try:
+            svc.submit("mcm", reconstruct=(i % 5 == 0),
+                       deadline_ms=0.0001 if i % 7 == 3 else None, **kw)
+        except dp.AdmissionError:
+            shed += 1
+        if i % 9 == 8:
+            svc.step()
+    svc.run()
+    s = svc.stats
+    assert shed > 0 and s["expired"] > 0       # both paths exercised
+    assert s["shed"] == s["rejected"] == shed
+    assert s["submitted"] == (s["completed"] + svc.pending()
+                              + s["expired"] + s["shed"])
+    assert svc.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# Routing audit
+# ---------------------------------------------------------------------------
+def test_routing_report_carries_audit_decisions():
+    telemetry.configure("spans")
+    eng = dp.DPEngine(max_batch=8)
+    for kw in _mcm_payloads(3):
+        eng.submit("mcm", **kw)
+    eng.run()
+    decisions = dp.routing_report()["decisions"]
+    assert decisions
+    kinds = {d["kind"] for d in decisions}
+    assert "drain" in kinds and ("rank" in kinds or "rank_batch" in kinds)
+    ranked = next(d for d in decisions if d["kind"].startswith("rank"))
+    assert ranked["chosen"]
+    assert all({"backend", "measured_ms", "analytical_cost"} <= set(c)
+               for c in ranked["candidates"])
+
+
+def test_audit_silent_below_spans():
+    telemetry.configure("basic")
+    eng = dp.DPEngine(max_batch=8)
+    eng.submit("mcm", dims=[4, 5, 6, 7])
+    eng.run()
+    assert telemetry.routing_audit() == []
+
+
+def test_off_mode_routing_bit_identical():
+    """REPRO_TELEMETRY must be observability only: same traffic, same
+    routes, same answers with it off and on."""
+    def leg():
+        from repro.dp import autotune
+        autotune.reset()
+        eng = dp.DPEngine(max_batch=8, feedback=False)
+        rids = [eng.submit("mcm", **kw) for kw in _mcm_payloads(4)]
+        out = eng.run()
+        return [(out[r].backend, out[r].answer) for r in rids]
+
+    telemetry.configure("off")
+    off = leg()
+    telemetry.configure("spans")
+    spans = leg()
+    assert off == spans
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+def test_snapshot_and_save(tmp_path):
+    telemetry.configure("spans")
+    svc = dp.DPService(max_batch=8, mesh=None)
+    tid = svc.submit("mcm", dims=[4, 5, 6, 7])
+    svc.run()[tid]
+    snap = telemetry.snapshot()
+    assert snap["mode"] == "spans"
+    assert snap["counters"]["dp_service_completed_total"] == 1
+    assert "dp_service_latency_ms" in snap["histograms"]
+    assert any(s["tid"] == tid for s in snap["spans"])
+    assert snap["routing_audit"]
+    path = telemetry.save_snapshot(str(tmp_path / "snap.json"))
+    assert json.load(open(path))["mode"] == "spans"
+
+
+def test_prometheus_exposition_format():
+    telemetry.configure("basic")
+    telemetry.count("t_reqs_total", 3)
+    telemetry.set_gauge("t_depth", 7)
+    telemetry.observe_ms("t_lat_ms", 12.0)
+    text = telemetry.to_prometheus()
+    assert "# TYPE t_reqs_total counter\nt_reqs_total 3" in text
+    assert "# TYPE t_depth gauge\nt_depth 7" in text
+    assert "# TYPE t_lat_ms histogram" in text
+    assert 't_lat_ms_bucket{le="+Inf"} 1' in text
+    assert "t_lat_ms_count 1" in text
+
+
+def test_kernel_entry_counter():
+    telemetry.configure("basic")
+    from repro.kernels import ops
+    x = np.zeros((4, 4), np.float32)
+    ops.tropical_matmul(x, x)
+    mode = ops.kernel_mode()
+    assert telemetry.REGISTRY.counters()[
+        f"dp_kernel_tropical_matmul_{mode}_total"] == 1
