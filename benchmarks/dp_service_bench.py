@@ -10,7 +10,11 @@ dedup/shard counters.
 
 Prints ``service,<devices>,<requests>,<req_per_s>,<p50_ms>,<p99_ms>,
 <cache_hit_rate>,<ok>`` CSV lines, writes ``BENCH_dp_service.json`` and a
-full telemetry snapshot to ``TELEMETRY_dp_service.json``.
+compact telemetry *summary* (counters + per-histogram count/p50/p99, a few
+hundred lines) to ``TELEMETRY_dp_service_summary.json`` — the file that is
+committed run-over-run. The full snapshot (every span, every routing-audit
+row; tens of thousands of lines) still goes to ``TELEMETRY_dp_service.json``
+but is a CI artifact only, never committed.
 
 The 1-vs-N forced-host-devices comparison runs the same measurement in a
 subprocess under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
@@ -253,8 +257,25 @@ def _subprocess_leg(n_requests: int, devices: int) -> dict:
             + "\n".join(out.stdout.strip().splitlines()[-5:]))
 
 
+def _telemetry_summary(telemetry) -> dict:
+    """Compact, committable digest of the registry: counters/gauges plus
+    count/p50/p99 per histogram — no span bodies, no audit rows (those stay
+    in the full snapshot, which is a CI artifact only)."""
+    snap = telemetry.snapshot(spans_limit=1, audit_limit=1)
+    return {
+        "mode": snap["mode"],
+        "counters": snap["counters"],
+        "gauges": snap["gauges"],
+        "histograms": {
+            name: {"count": h.get("count"), "p50": h.get("p50"),
+                   "p99": h.get("p99")}
+            for name, h in snap["histograms"].items()},
+    }
+
+
 def run(out_path: str = "BENCH_dp_service.json",
         telemetry_out_path: str = "TELEMETRY_dp_service.json",
+        telemetry_summary_path: str = "TELEMETRY_dp_service_summary.json",
         n_requests: int = N_REQUESTS, forced_devices: int = FORCED_DEVICES,
         subprocess_leg: bool = True, check_perf: bool = True) -> dict:
     import jax
@@ -267,6 +288,12 @@ def run(out_path: str = "BENCH_dp_service.json",
         # the CI artifact: full spans/metrics/audit state of the local leg
         # (saved before the subprocess leg — a child crash must not lose it)
         print(f"# wrote {telemetry.save_snapshot(telemetry_out_path)}")
+    if telemetry_summary_path:
+        # the committed file: small enough to diff run-over-run
+        with open(telemetry_summary_path, "w") as f:
+            json.dump(_telemetry_summary(telemetry), f, indent=1,
+                      default=str)
+        print(f"# wrote {os.path.abspath(telemetry_summary_path)}")
     if subprocess_leg and jax.device_count() != forced_devices:
         legs.append(_subprocess_leg(n_requests, forced_devices))
         _csv(legs[1])

@@ -27,22 +27,82 @@ from repro import dp
 SIZES = (8, 16, 32)
 BATCH = 16
 REPEATS = 3
+#: calibration medians need more samples than the regret re-timer: the
+#: measured tier ranks on these entries, and 3-sample medians of sub-ms
+#: host timings flip near-tied routes run to run (the PR-4 regret
+#: regression was mostly this)
+CALIBRATE_REPEATS = 5
+#: triangular sizes of the large-n leg — the regime the tiled HBM-resident
+#: kernels exist for (beyond any VMEM-resident table)
+LARGE_N = (256, 512, 1024)
 MEDIAN_REGRET_GATE = 1.5
 MAX_REGRET_GATE = 3.0
 
 
-def _time(fn) -> float:
+def _time(fn, repeats: int = REPEATS) -> float:
     fn()  # compile / warm
     best = float("inf")
-    for _ in range(REPEATS):
+    for _ in range(repeats):
         t0 = time.perf_counter()
         fn()
         best = min(best, time.perf_counter() - t0)
     return best * 1e3
 
 
+def _large_n_leg(sizes) -> list:
+    """Triangular large-n leg: the regime past every VMEM-resident kernel.
+    Times the plain jnp wavefront against the tiled HBM-resident route
+    (``kernel_tiled_wavefront``) on random f32 weight tables (bit-equality
+    cross-checked), and the fused single-launch ``reconstruct`` against the
+    classic two-dispatch solve+traceback. One timed repeat after warmup —
+    these are multi-hundred-ms solves, not sub-ms noise."""
+    from repro.dp import backends as _backends
+    from repro.dp import reconstruct as _reconstruct
+
+    rng = np.random.default_rng(7)
+    tiled = _backends.get("kernel_tiled_wavefront")
+    out = []
+    for n in sizes:
+        cells = n * (n + 1) // 2
+        spec = dp.TriangularSpec(
+            n=n, weights=rng.standard_normal((cells, n - 1)).astype(np.float32))
+        wave_tab = dp.solve_spec(spec, backend="wavefront")
+        tiled_tab = dp.solve_spec(spec, backend="kernel_tiled_wavefront")
+        ok = bool(np.array_equal(wave_tab, tiled_tab))
+        wave_ms = _time(lambda: dp.solve_spec(spec, backend="wavefront"),
+                        repeats=1)
+        tiled_ms = _time(
+            lambda: dp.solve_spec(spec, backend="kernel_tiled_wavefront"),
+            repeats=1)
+
+        # fused one-launch reconstruct vs the classic two dispatches
+        def two_dispatch():
+            _, args, _ = dp.routing.run_with_args(tiled, spec)
+            _reconstruct.traceback_batch([args], spec)
+
+        fused_ms = _time(lambda: tiled.run_fused(spec), repeats=1)
+        two_ms = _time(two_dispatch, repeats=1)
+        row = {"n": n, "cells": cells, "ok": ok,
+               "wavefront_ms": round(wave_ms, 2),
+               "tiled_ms": round(tiled_ms, 2),
+               "tiled_speedup": round(wave_ms / max(tiled_ms, 1e-9), 3),
+               "fused_reconstruct_ms": round(fused_ms, 2),
+               "two_dispatch_reconstruct_ms": round(two_ms, 2),
+               "fused_speedup": round(two_ms / max(fused_ms, 1e-9), 3)}
+        out.append(row)
+        print(f"zoo_large_n,{n},{cells},{int(ok)},{wave_ms:.2f},{tiled_ms:.2f},"
+              f"{row['tiled_speedup']}x,{fused_ms:.2f},{two_ms:.2f},"
+              f"{row['fused_speedup']}x")
+        if not ok:
+            raise SystemExit(
+                f"large-n correctness failure at n={n}: tiled route table "
+                "diverges from the jnp wavefront")
+    return out
+
+
 def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None,
-        calibrate: bool = False, check_dispatch: bool = False) -> dict:
+        calibrate: bool = False, check_dispatch: bool = False,
+        large_n=None) -> dict:
     from repro.dp import autotune
 
     sizes = sizes or SIZES
@@ -60,7 +120,7 @@ def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None,
             if calibrate:
                 # exact-shape entries first, so the dispatch below (and the
                 # regret gate) run against measured costs
-                autotune.calibrate_spec(spec, repeats=REPEATS)
+                autotune.calibrate_spec(spec, repeats=CALIBRATE_REPEATS)
             dispatched_name = dp.dispatch(spec).name
             cell_ms = {}
             cell_rows = {}
@@ -116,6 +176,8 @@ def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None,
         print(f"zoo_batch,{name},{batch},{loop_ms:.4f},{batch_ms:.4f},"
               f"{loop_ms / max(batch_ms, 1e-9):.2f}x")
 
+    large_rows = _large_n_leg(large_n) if large_n else None
+
     regrets = [c["dispatch_regret"] for c in regret_cells]
     median_regret = float(np.median(regrets)) if regrets else 1.0
     max_regret = float(max(regrets)) if regrets else 1.0
@@ -131,6 +193,8 @@ def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None,
                            "cells": regret_cells},
               "problems": dp.problem_names(),
               "backends": dp.backends.names()}
+    if large_rows is not None:
+        report["large_n"] = large_rows
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=1)
@@ -159,6 +223,13 @@ if __name__ == "__main__":
     ap.add_argument("--check-dispatch", action="store_true",
                     help="fail if post-calibration median regret exceeds "
                          "1.5x or any cell exceeds 3x")
+    ap.add_argument("--large-n", nargs="?", const=",".join(map(str, LARGE_N)),
+                    default=None, metavar="N,N,...",
+                    help="run the triangular large-n leg (tiled HBM kernel "
+                         "vs jnp wavefront + fused-reconstruct delta); "
+                         f"default sizes {LARGE_N}")
     args = ap.parse_args()
     run(calibrate=args.calibrate or args.check_dispatch,
-        check_dispatch=args.check_dispatch)
+        check_dispatch=args.check_dispatch,
+        large_n=(tuple(int(s) for s in args.large_n.split(","))
+                 if args.large_n else None))

@@ -80,7 +80,10 @@ def _jax_backend() -> str:
     the same reason: a process forced to N host devices
     (``--xla_force_host_platform_device_count``) splits every core's cycles
     N ways, so its timings must never pollute single-device calibration
-    entries (or vice versa)."""
+    entries (or vice versa). A non-default ``REPRO_VMEM_BUDGET`` joins the
+    key too: the budget sizes the tiled kernels' streaming windows (a
+    different traced program with different tile shapes), so timings under
+    an overridden budget would mislead the default-budget ranking."""
     import jax
 
     from repro.kernels import ops
@@ -89,6 +92,9 @@ def _jax_backend() -> str:
     mode = ops.kernel_mode()
     default = "pallas" if jb == "tpu" else "ref"
     base = jb if mode == default else f"{jb}+{mode}"
+    budget = ops.vmem_budget_bytes()
+    if budget != ops.DEFAULT_VMEM_BUDGET_BYTES:
+        base += f"+vmem{budget}"
     ndev = jax.device_count()
     return base if ndev == 1 else f"{base}x{ndev}dev"
 

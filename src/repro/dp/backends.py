@@ -105,7 +105,11 @@ class Backend:
     returning ``(table, args)`` pairs — the winning lane (linear) or best
     split (triangular) per cell — which the reconstruction layer
     (``repro.dp.reconstruct``) prefers over its numpy from-the-cost-table
-    fallback."""
+    fallback. Fused routes (``run_fused`` / ``batch_run_fused``) go one
+    further: solve + args + traceback in ONE dispatch, returning
+    ``(table, args, path)`` — the routing layer prefers them whenever a
+    reconstruction was requested, which is what makes ``reconstruct=True``
+    a single launch on the tiled kernel tier (DESIGN.md §5)."""
 
     name: str
     geometry: str
@@ -115,6 +119,8 @@ class Backend:
     batch_run: Optional[Callable] = None
     run_with_args: Optional[Callable] = None
     batch_run_with_args: Optional[Callable] = None
+    run_fused: Optional[Callable] = None
+    batch_run_fused: Optional[Callable] = None
     doc: str = ""
 
 
@@ -257,13 +263,16 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
 def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
                            supports: Optional[Callable] = None,
                            jax_arg_fn: Optional[Callable] = None,
+                           jax_fused_fn: Optional[Callable] = None,
                            cache_tag: Optional[Callable] = None,
                            doc: str = "") -> Backend:
     """Wrap a weight-table triangular solver ``fn(wtab, n)`` (e.g.
     ``core.mcm.solve_wavefront_tab``) with a vmapped batch path.
     ``jax_arg_fn`` (returns ``(st, args)``) adds the arg-capability pair;
-    ``supports`` gates eligibility (e.g. the Pallas route's VMEM budget);
-    ``cache_tag`` as in :func:`linear_backend`."""
+    ``jax_fused_fn`` (returns ``(st, args, (ii, dd, ee))`` with the node
+    arrays in ``triangular_traceback``'s preorder contract) adds the fused
+    solve+traceback pair; ``supports`` gates eligibility (e.g. the Pallas
+    route's VMEM budget); ``cache_tag`` as in :func:`linear_backend`."""
     import jax
     import jax.numpy as jnp
 
@@ -309,10 +318,34 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
                                 sharding)
             return list(np.asarray(sts)), list(np.asarray(argss))
 
+    run_fused = batch_run_fused = None
+    if jax_fused_fn is not None:
+        from repro.dp.problem import TriangularPath
+
+        def run_fused(spec: TriangularSpec):
+            st, args, (ii, dd, ee) = jax_fused_fn(
+                jnp.asarray(spec.weights), spec.n)
+            path = TriangularPath(nodes=np.stack(
+                [np.asarray(ii), np.asarray(dd), np.asarray(ee)],
+                axis=1).astype(np.int64))
+            return np.asarray(st), np.asarray(args), path
+
+        def batch_run_fused(specs, sharding=None):
+            sts, argss, (ii, dd, ee) = _batch(
+                jax_fused_fn, specs,
+                _batch_key(specs, sharding) + ("fused",), sharding)
+            nodes = np.stack([np.asarray(ii), np.asarray(dd),
+                              np.asarray(ee)], axis=2)
+            return (list(np.asarray(sts)), list(np.asarray(argss)),
+                    [TriangularPath(nodes=nodes[b].astype(np.int64))
+                     for b in range(len(specs))])
+
     return Backend(name=name, geometry="triangular", run=run, cost=cost,
                    supports=supports or (lambda s: True), batch_run=batch_run,
                    run_with_args=run_with_args,
-                   batch_run_with_args=batch_run_with_args, doc=doc)
+                   batch_run_with_args=batch_run_with_args,
+                   run_fused=run_fused, batch_run_fused=batch_run_fused,
+                   doc=doc)
 
 
 # shared cost vocabulary -----------------------------------------------------
@@ -320,12 +353,29 @@ def _log2(x: float) -> float:
     return math.log2(max(x, 2.0))
 
 
+#: n below which the analytical prior prices fixed dispatch overhead: at
+#: tiny n the solve itself is a handful of device steps, so the per-route
+#: launch/gather/vmap machinery dominates wall time. Without these floors
+#: the step-count model calls every fancy route ~free at n ≤ 16 and the
+#: unmeasured prior routes small instances to device pipelines that lose to
+#: the plain sequential loop (the PR-4 dispatch-regret regression).
+_SMALL_N = 16
+#: per-route fixed-overhead floors, in the same 'vectorized device steps'
+#: unit — rough dispatch-cost ranks, not measurements (calibration
+#: overwrites them with real timings).
+_LINEAR_OVERHEAD = {"sequential": 0.0, "tournament": 8.0, "pipeline": 8.0,
+                    "blocked": 6.0, "companion_scan": 16.0}
+_TRIANGULAR_OVERHEAD = {"wavefront": 0.0, "mcm_pipeline": 64.0,
+                        "blocked_mcm": 24.0, "tiled_wavefront": 0.0}
+
+
 def linear_costs(spec: LinearSpec) -> dict:
     """Step-count cost model for the linear solver family (§III of the
     paper + DESIGN.md §3). Units are 'vectorized device steps'. Every count
     is floored at one step: a preset-only table (n ≤ a_1, constructible
     without ``validate()``) gives ``ceil((n-a1)/B) = 0``, which let
-    ``blocked`` degenerately auto-win at cost 0."""
+    ``blocked`` degenerately auto-win at cost 0. Below ``_SMALL_N`` each
+    route additionally pays its fixed dispatch-overhead floor."""
     n, k = spec.n, len(spec.offsets)
     a1, ak = int(spec.offsets[0]), int(spec.offsets[-1])
     blocked_steps = max(1, math.ceil((n - a1) / max(1, min(ak, 512))))
@@ -337,6 +387,9 @@ def linear_costs(spec: LinearSpec) -> dict:
         # log-depth scan, O(n·a1³) work spread over the vector units
         "companion_scan": _log2(n) * (a1 ** 3) / 64.0 + a1,
     }
+    if n <= _SMALL_N:
+        costs = {name: c + _LINEAR_OVERHEAD[name]
+                 for name, c in costs.items()}
     return {name: max(1.0, c) for name, c in costs.items()}
 
 
@@ -351,7 +404,14 @@ def triangular_costs(spec: TriangularSpec) -> dict:
         "mcm_pipeline": float(cells + n),       # Fig.-8 skewed head + drain
         # O(n) wavefront depth with GEMM-fed combines: favored beyond n ≈ 64
         "blocked_mcm": float(n) * 0.75 + 16.0,
+        # O(n) wavefront depth over banded tiles: the dense masked combine
+        # pays ~2× the band's work per diagonal, the tile loop doesn't — it
+        # overtakes wavefront past the flat streaming-setup term
+        "tiled_wavefront": float(n) * 0.85 + 24.0,
     }
+    if n <= _SMALL_N:
+        costs = {name: c + _TRIANGULAR_OVERHEAD[name]
+                 for name, c in costs.items()}
     return {name: max(1.0, c) for name, c in costs.items()}
 
 

@@ -214,11 +214,13 @@ class DPEngine:
         return self._batch_regime(reconstruct)
 
     def _run_bucket(self, backend, specs, reconstruct: bool):
-        """Execute one routed bucket; returns ``(tables, argss, source)``
-        (``argss``/``source`` are None for plain solves)."""
+        """Execute one routed bucket; returns
+        ``(tables, argss, source, paths)`` (``argss``/``source``/``paths``
+        are None for plain solves; ``paths`` is non-None only on fused
+        solve+traceback routes)."""
         if reconstruct:
             return _routing.run_batch_with_args(backend, specs)
-        return _routing.run_batch(backend, specs), None, None
+        return _routing.run_batch(backend, specs), None, None, None
 
     # -- one batched device call ------------------------------------------
     def step(self, backend: Optional[str] = None,
@@ -272,8 +274,8 @@ class DPEngine:
                                     len(uniq_specs)) as drain_rep:
             traces_before = _backends.TRACE_COUNT
             t0 = time.perf_counter()
-            tables, argss, source = self._run_bucket(chosen, uniq_specs,
-                                                     reconstruct)
+            tables, argss, source, paths = self._run_bucket(
+                chosen, uniq_specs, reconstruct)
             solve_ms = (time.perf_counter() - t0) * 1e3
             _telemetry.add_phase("solve", solve_ms)
             # dedup fan-out (and the service answer cache) hand the SAME
@@ -296,7 +298,7 @@ class DPEngine:
                 drain_rep.explored = explored
             if reconstruct:
                 answers = _reconstruct.reconstruct_batch(
-                    prob, uniq_specs, tables, argss, source)
+                    prob, uniq_specs, tables, argss, source, paths=paths)
             else:
                 answers = [None] * len(uniq_specs)
         self.last_drain = drain_rep

@@ -172,9 +172,12 @@ def reconstruct_one(prob: DPProblem, spec: Spec, table: np.ndarray,
 
 def reconstruct_batch(prob: DPProblem, specs: Sequence[Spec],
                       tables: Sequence[np.ndarray],
-                      argss: Sequence[np.ndarray], source: str) -> list:
+                      argss: Sequence[np.ndarray], source: str,
+                      paths: Optional[Sequence[Path]] = None) -> list:
     """Batch assembly. Device-sourced args are walked by ONE vmapped
-    traceback program; host-sourced args fall back to host walks. The walk
+    traceback program; host-sourced args fall back to host walks; fused
+    routes pass the in-launch-walked ``paths`` in and skip the traceback
+    dispatch entirely (the phase still reports, at ~zero ms). The walk
     and the decode loop each report their duration as a telemetry phase
     (``traceback`` / ``decode``) — onto the engine's active drain report
     when one is open, always into the registry histograms (no-op when
@@ -185,7 +188,9 @@ def reconstruct_batch(prob: DPProblem, specs: Sequence[Spec],
 
     spec0 = specs[0]
     t0 = time.perf_counter()
-    if source == "device":
+    if paths is not None:
+        paths = list(paths)
+    elif source == "device":
         starts = None
         if spec0.geometry == "linear":
             starts = [start_cell(prob, t, s) for t, s in zip(tables, specs)]

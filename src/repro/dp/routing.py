@@ -162,7 +162,14 @@ def solve(problem: Union[str, DPProblem], backend: Optional[str] = None,
     spec = prob.encode(**instance)
     if not reconstruct:
         return prob.extract(solve_spec(spec, backend=backend), spec)
-    table, args, source = solve_spec_with_args(spec, backend=backend)
+    b = resolve_backend(spec, backend, reconstruct=True)
+    if b.run_fused is not None and _reconstruct.supports_args(spec):
+        # fused route: solve + args + traceback walked in ONE dispatch
+        _telemetry.count("dp_routing_fused_total")
+        table, args, path = b.run_fused(spec)
+        return _reconstruct.reconstruct_one(prob, spec, table, args,
+                                            "device", path=path)
+    table, args, source = run_with_args(b, spec)
     return _reconstruct.reconstruct_one(prob, spec, table, args, source)
 
 
@@ -186,25 +193,38 @@ def run_batch(b: _backends.Backend, specs: Sequence[Spec],
 
 def run_batch_with_args(b: _backends.Backend, specs: Sequence[Spec],
                         sharding=None):
-    """Batched :func:`run_with_args`; returns ``(tables, argss, source)``."""
+    """Batched :func:`run_with_args`; returns
+    ``(tables, argss, source, paths)``. Fused routes
+    (``batch_run_fused``) walk the traceback inside the solve launch and
+    return the paths alongside; everywhere else ``paths`` is ``None`` and
+    the reconstruction layer issues its own (second) traceback dispatch."""
     specs = list(specs)
     if _reconstruct.supports_args(specs[0]):
+        if b.batch_run_fused is not None:
+            _telemetry.count("dp_routing_args_device_total")
+            _telemetry.count("dp_routing_fused_total")
+            if sharding is not None:
+                tables, argss, paths = b.batch_run_fused(specs,
+                                                         sharding=sharding)
+            else:
+                tables, argss, paths = b.batch_run_fused(specs)
+            return tables, argss, "device", paths
         if b.batch_run_with_args is not None:
             _telemetry.count("dp_routing_args_device_total")
             if sharding is not None:
                 tables, argss = b.batch_run_with_args(specs, sharding=sharding)
             else:
                 tables, argss = b.batch_run_with_args(specs)
-            return tables, argss, "device"
+            return tables, argss, "device", None
         if b.run_with_args is not None:
             _telemetry.count("dp_routing_args_device_total")
             pairs = [b.run_with_args(s) for s in specs]
-            return [t for t, _ in pairs], [a for _, a in pairs], "device"
+            return [t for t, _ in pairs], [a for _, a in pairs], "device", None
     _telemetry.count("dp_routing_args_host_total")
     tables = run_batch(b, specs)
     argss = [_reconstruct.args_from_table(t, s)
              for t, s in zip(tables, specs)]
-    return tables, argss, "host"
+    return tables, argss, "host", None
 
 
 def batch_solve_specs(specs: Sequence[Spec],
@@ -218,10 +238,12 @@ def batch_solve_specs(specs: Sequence[Spec],
 
 def batch_solve_specs_with_args(specs: Sequence[Spec],
                                 backend: Optional[str] = None):
-    """Batched arg-tracking solve; returns ``(tables, argss, source)``."""
+    """Batched arg-tracking solve; returns
+    ``(tables, argss, source, paths)`` (``paths`` non-None only on fused
+    routes)."""
     specs = list(specs)
     if not specs:
-        return [], [], "device"
+        return [], [], "device", None
     b = resolve_backend(specs[0], backend, batch=True, reconstruct=True)
     return run_batch_with_args(b, specs)
 
@@ -246,5 +268,7 @@ def batch_solve(problem: Union[str, DPProblem],
     if not reconstruct:
         tables = batch_solve_specs(specs, backend=backend)
         return [prob.extract(t, s) for t, s in zip(tables, specs)]
-    tables, argss, source = batch_solve_specs_with_args(specs, backend=backend)
-    return _reconstruct.reconstruct_batch(prob, specs, tables, argss, source)
+    tables, argss, source, paths = batch_solve_specs_with_args(
+        specs, backend=backend)
+    return _reconstruct.reconstruct_batch(prob, specs, tables, argss, source,
+                                          paths=paths)

@@ -179,13 +179,15 @@ class ShardedDPEngine(DPEngine):
         b = len(specs)
         padded, n_pad = self.ctx.pad(specs)
         if reconstruct:
-            tables, argss, source = _routing.run_batch_with_args(
+            tables, argss, source, paths = _routing.run_batch_with_args(
                 backend, padded, sharding=self.ctx)
             tables, argss = tables[:b], argss[:b]
+            if paths is not None:
+                paths = paths[:b]
         else:
             tables = _routing.run_batch(backend, padded,
                                         sharding=self.ctx)[:b]
-            argss, source = None, None
+            argss, source, paths = None, None, None
         self.stats["sharded_drains"] += 1
         self.stats["padded_lanes"] += n_pad
         rep = _telemetry.current_drain()
@@ -193,4 +195,4 @@ class ShardedDPEngine(DPEngine):
             rep.sharded = True
         _telemetry.count("dp_engine_sharded_drains_total")
         _telemetry.count("dp_engine_padded_lanes_total", n_pad)
-        return tables, argss, source
+        return tables, argss, source, paths

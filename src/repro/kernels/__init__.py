@@ -4,7 +4,10 @@ pure-jnp oracle in ``ref.py`` and a dispatching wrapper in ``ops.py``.
   * ``semiring_matmul`` — weighted tropical (min,+) GEMM (blocked MCM core)
   * ``sdp_pipeline``    — VMEM-resident blocked pipelined S-DP solver
                           (weighted + arg-emitting variants, DESIGN.md §4)
+                          plus the HBM-streaming chunked variant (no size cap)
   * ``mcm_pipeline``    — VMEM-resident diagonal-pipeline triangular solver
+  * ``mcm_tiled``       — HBM-resident tiled triangular solver with
+                          double-buffered DMA and fused traceback (§4/§5)
   * ``chunked_scan``    — gated linear recurrence (SSM/RWKV layers)
   * ``flash_attention`` — causal online-softmax attention (prefill cells)
 """
@@ -24,12 +27,15 @@ from repro.kernels import ops, ref  # noqa: F401
 # kernel path would be taken, and ``cache_tag`` folds the kernel mode into
 # the batch-jit cache keys so a mid-process REPRO_KERNELS flip can never
 # serve a program traced under the old mode (DESIGN.md §4).
+#
+# ``kernel_tiled`` (linear, chunked HBM-streaming) and
+# ``kernel_tiled_wavefront`` (triangular, HBM-resident tiled + fused
+# traceback) have NO supports() size cap — the streaming window is sized
+# from ``ops.vmem_budget_bytes()`` (env ``REPRO_VMEM_BUDGET``), which is
+# folded into the cache tag alongside the mode so a budget override never
+# serves stale programs.
 # ---------------------------------------------------------------------------
 from repro.dp import backends as _dp_backends  # noqa: E402
-
-#: VMEM working-set budget for kernel-tier eligibility: half of a v5e core's
-#: ~16 MiB, leaving headroom for double-buffering and compiler spills.
-VMEM_BUDGET_BYTES = 8 << 20
 
 
 def _mode_factor() -> float:
@@ -39,6 +45,19 @@ def _mode_factor() -> float:
     if mode == "interpret":
         return 32.0     # Python-interpreted kernel body (test mode)
     return 1.25         # jnp fallback — plain solver + wrapper indirection
+
+
+def _tiled_mode_factor() -> float:
+    """Per-mode factor for the HBM-streaming tiled routes. Slightly worse
+    than the VMEM-resident kernels where those fit (DMA orchestration
+    overhead) but the only kernel routes with no size cap; the interpreter
+    penalty is harsher still — per-tile DMAs are Python loops there."""
+    mode = ops.kernel_mode()
+    if mode == "pallas":
+        return 0.6
+    if mode == "interpret":
+        return 40.0
+    return 1.2          # banded-tile jnp body: wins at large n (BENCH large_n)
 
 
 def _on_kernel_path() -> bool:
@@ -70,7 +89,7 @@ def _kernel_blocked_cost(spec) -> float:
 
 def _kernel_blocked_supports(spec) -> bool:
     return (not _on_kernel_path()
-            or _linear_vmem_bytes(spec) <= VMEM_BUDGET_BYTES)
+            or _linear_vmem_bytes(spec) <= ops.vmem_budget_bytes())
 
 
 def _kernel_wavefront_cost(spec) -> float:
@@ -79,11 +98,26 @@ def _kernel_wavefront_cost(spec) -> float:
 
 def _kernel_wavefront_supports(spec) -> bool:
     return (not _on_kernel_path()
-            or _triangular_vmem_bytes(spec) <= VMEM_BUDGET_BYTES)
+            or _triangular_vmem_bytes(spec) <= ops.vmem_budget_bytes())
+
+
+def _kernel_tiled_cost(spec) -> float:
+    # the VMEM-resident blocked prior plus a flat streaming-orchestration
+    # term, so where both fit the resident kernel stays preferred
+    return _dp_backends.linear_costs(spec)["blocked"] * _tiled_mode_factor() + 8.0
+
+
+def _kernel_tiled_wavefront_cost(spec) -> float:
+    return (_dp_backends.triangular_costs(spec)["tiled_wavefront"]
+            * _tiled_mode_factor())
 
 
 def _mode_tag() -> tuple:
-    return (ops.kernel_mode(),)
+    tag = (ops.kernel_mode(),)
+    budget = ops.vmem_budget_bytes()
+    if budget != ops.DEFAULT_VMEM_BUDGET_BYTES:
+        tag += (("vmem", budget),)
+    return tag
 
 
 _dp_backends.register(_dp_backends.linear_backend(
@@ -99,3 +133,17 @@ _dp_backends.register(_dp_backends.triangular_tab_backend(
     jax_arg_fn=ops.mcm_blocked_with_args, cache_tag=_mode_tag,
     doc="ops.mcm_blocked: Pallas VMEM-resident diagonal pipeline over the "
         "weight table on the kernel path, jnp wavefront solver elsewhere"))
+
+_dp_backends.register(_dp_backends.linear_backend(
+    "kernel_tiled", ops.sdp_chunked, cost=_kernel_tiled_cost,
+    jax_arg_fn=ops.sdp_chunked_with_args, cache_tag=_mode_tag,
+    doc="ops.sdp_chunked: HBM-streaming chunked S-DP pipeline — the table "
+        "streams through a budget-sized VMEM window; no size cap"))
+
+_dp_backends.register(_dp_backends.triangular_tab_backend(
+    "kernel_tiled_wavefront", ops.mcm_tiled,
+    cost=_kernel_tiled_wavefront_cost,
+    jax_arg_fn=ops.mcm_tiled_with_args, jax_fused_fn=ops.mcm_tiled_fused,
+    cache_tag=_mode_tag,
+    doc="ops.mcm_tiled: HBM-resident tiled triangular solver, per-tile "
+        "weight DMA, fused in-launch traceback; no size cap"))

@@ -1,0 +1,469 @@
+"""Pallas TPU kernel: HBM-resident tiled triangular solver with fused traceback.
+
+``mcm_pipeline`` keeps the cost table and the dense ``(cells, n-1)`` weight
+slab VMEM-resident, which caps the route at n ≈ 160 under the 8 MiB budget.
+This module breaks that wall (DESIGN.md §4): the cost table, the int32 arg
+table, and the weight table all stay in HBM (``memory_space=ANY``), and the
+kernel streams *diagonal-band tiles* through double-buffered VMEM scratch —
+the paper's pipeline idea applied at the memory hierarchy instead of the core
+array. Tile ``(i0, e0)`` of diagonal ``d`` depends only on finalized bands,
+so candidate-tile ``j+1``'s DMAs are issued while tile ``j`` computes.
+
+Schedule per diagonal ``d`` (grid = the n-1 diagonals, sequential):
+
+  for each row tile ``i0`` (T rows of the band):
+    prefetch candidate tile 0; for each candidate tile ``e0`` (E split lanes):
+      start tile ``j+1``'s copies into the other slot — E left slices
+      ``st[off(e)+i0 : +T]``, E right slices ``st[off(d-e-1)+e+1+i0 : +T]``,
+      one 2-D weight tile ``w[off(d)+i0 : +T, e0 : e0+E]`` — then wait tile
+      ``j`` and fold ``(left + right) + w`` into the band's running
+      (min, strict-improve arg) pair, lanes ``e ≥ d`` masked to +inf;
+    DMA the finished (value, arg) band tile back to HBM.
+
+Row tiles past the band's true length compute garbage that lands in cells of
+*later* diagonals, each fully rewritten by its own step before anything reads
+it — ``mcm_pipeline``'s spill-write argument at tile granularity (the padded
+table carries a T-cell tail so the last diagonal's spill stays in bounds).
+Candidate lanes past the diagonal clamp their fetch address to ``e = d-1``
+and contribute +inf, so the fold is exact and the arg rule (ascending-``e``
+strict improve = ``argmin`` first occurrence) matches the jnp wavefront
+bit-for-bit.
+
+The fused variant walks the finished arg table *in the same launch*: at the
+last diagonal, an in-kernel DFS (VMEM stack, one-element DMA reads of
+``args[c]``) mirrors ``core.mcm.triangular_traceback`` exactly and emits the
+preorder ``(i, d, e)`` node arrays as extra outputs, so
+``reconstruct=True`` costs one launch instead of solve + traceback dispatch.
+
+``mcm_tiled_ref`` is the same algorithm in pure jnp (gathers instead of
+DMAs, identical tile geometry and arithmetic order) — the kernel's oracle
+under interpret mode and the CPU/GPU fallback route, ~6× less padded work
+than ``solve_wavefront_tab``'s dense masked combine at large n because both
+the row extent and the candidate extent track the true band instead of the
+padded (n, n-1) rectangle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.mcm import lin_index, num_cells, triangular_traceback
+
+INF = jnp.inf
+
+#: default tile geometry for the jnp fallback (no VMEM constraint — small
+#: tiles track the true band closely, which beats the dense masked wavefront
+#: combine by ~1.5× at n ≥ 512 on CPU despite the dynamic tile loops)
+REF_TILE = 32
+#: scratch cost per (lane, row) tile element in bytes: left + right f32 pairs
+#: plus the weight tile, each double-buffered (2 slots × 3 buffers × 4 bytes)
+_BYTES_PER_TILE_ELEM = 24
+
+
+def _off(d, n):
+    """Linear index of the first cell of diagonal ``d`` (traced-safe)."""
+    return lin_index(0, d, n)
+
+
+def _tile_plan(n: int, budget=None, tile_t=None, tile_e=None):
+    """(T, E): rows per band tile and split lanes per candidate tile. With a
+    VMEM ``budget`` the double-buffered working set ≈ 24·T·E bytes is held
+    under it; without one (the jnp fallback) both default to REF_TILE."""
+    L = max(n - 1, 1)
+    if budget is None:
+        T = tile_t or min(L, REF_TILE)
+        E = tile_e or min(L, REF_TILE)
+    else:
+        cap = max(16, budget // _BYTES_PER_TILE_ELEM)
+        T = tile_t or max(1, min(L, 256, cap))
+        E = tile_e or max(1, min(L, max(1, cap // T)))
+    return max(1, min(int(T), L)), max(1, min(int(E), L))
+
+
+def _geometry(n: int, T: int, E: int):
+    """(L, L_pad, size): true lane count, lane count padded to whole
+    candidate tiles (weight columns), and padded table length — the last
+    diagonal's band tile spills at most T cells past ``num_cells``."""
+    L = max(n - 1, 1)
+    L_pad = -(-L // E) * E
+    return L, L_pad, num_cells(n) + T + 8
+
+
+def _pad_weights(wtab, n, T, E):
+    L, L_pad, size = _geometry(n, T, E)
+    w = jnp.asarray(wtab)
+    return jnp.zeros((size, L_pad), dtype=w.dtype).at[: num_cells(n), :L].set(w)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+def _make_tiled_kernel(n, T, E, with_args, fused):
+    cells = num_cells(n)
+    L = max(n - 1, 1)
+
+    def kernel(*refs):
+        refs = list(refs)
+        w_hbm = refs.pop(0)
+        st_hbm = refs.pop(0)
+        arg_hbm = refs.pop(0) if with_args else None
+        if fused:
+            oi_hbm, od_hbm, oe_hbm = refs.pop(0), refs.pop(0), refs.pop(0)
+        lbuf, rbuf, wbuf, obuf = refs.pop(0), refs.pop(0), refs.pop(0), refs.pop(0)
+        sem_l, sem_r, sem_w, sem_o = refs.pop(0), refs.pop(0), refs.pop(0), refs.pop(0)
+        abuf = refs.pop(0) if with_args else None
+        sem_a = refs.pop(0) if with_args else None
+        if fused:
+            si, sd, ni, nd, ne = refs.pop(0), refs.pop(0), refs.pop(0), refs.pop(0), refs.pop(0)
+            argel, sem_f = refs.pop(0), refs.pop(0)
+
+        pid = pl.program_id(0)
+        d = pid + 1
+
+        # -- diagonal-0 preset (first step only): zeros + arg -1 -------------
+        @pl.when(pid == 0)
+        def _preset():
+            obuf[...] = jnp.zeros_like(obuf[...])
+            if with_args:
+                abuf[...] = jnp.full_like(abuf[...], -1)
+
+            def tile(p, _):
+                cp = pltpu.make_async_copy(obuf, st_hbm.at[pl.ds(p * T, T)],
+                                           sem_o)
+                cp.start()
+                cp.wait()
+                if with_args:
+                    ca = pltpu.make_async_copy(
+                        abuf, arg_hbm.at[pl.ds(p * T, T)], sem_a)
+                    ca.start()
+                    ca.wait()
+                return 0
+
+            jax.lax.fori_loop(0, -(-n // T), tile, 0)
+
+        rows = n - d
+        nrt = (rows + T - 1) // T
+        net = (d + E - 1) // E
+
+        def copies(j, slot, i0):
+            """The candidate tile's copy descriptors, built identically at
+            start and wait time (lane ``l`` ↔ split ``e = e0 + l``, address
+            clamped for masked lanes)."""
+            e0 = j * E
+
+            def lane_copies(l):
+                e = jnp.minimum(e0 + l, d - 1)
+                cl = pltpu.make_async_copy(
+                    st_hbm.at[pl.ds(_off(e, n) + i0, T)], lbuf.at[slot, l],
+                    sem_l.at[slot, l])
+                cr = pltpu.make_async_copy(
+                    st_hbm.at[pl.ds(_off(d - e - 1, n) + e + 1 + i0, T)],
+                    rbuf.at[slot, l], sem_r.at[slot, l])
+                return cl, cr
+
+            cw = pltpu.make_async_copy(
+                w_hbm.at[pl.ds(_off(d, n) + i0, T), pl.ds(e0, E)],
+                wbuf.at[slot], sem_w.at[slot])
+            return lane_copies, cw
+
+        def fetch(j, slot, i0):
+            lane_copies, cw = copies(j, slot, i0)
+            cw.start()
+
+            def lane(l, _):
+                cl, cr = lane_copies(l)
+                cl.start()
+                cr.start()
+                return 0
+
+            jax.lax.fori_loop(0, E, lane, 0)
+
+        def wait(j, slot, i0):
+            lane_copies, cw = copies(j, slot, i0)
+            cw.wait()
+
+            def lane(l, _):
+                cl, cr = lane_copies(l)
+                cl.wait()
+                cr.wait()
+                return 0
+
+            jax.lax.fori_loop(0, E, lane, 0)
+
+        def rowtile(rt, _):
+            i0 = rt * T
+            fetch(0, 0, i0)
+
+            def etile(j, carry):
+                acc, arg = carry
+                slot = jax.lax.rem(j, 2)
+
+                @pl.when(j + 1 < net)
+                def _prefetch():
+                    fetch(j + 1, 1 - slot, i0)
+
+                wait(j, slot, i0)
+                e0 = j * E
+                vals = (lbuf[slot] + rbuf[slot]) + wbuf[slot].T    # (E, T)
+                e_glob = e0 + jax.lax.iota(jnp.int32, E)
+                vals = jnp.where((e_glob < d)[:, None], vals, INF)
+                tmin = jnp.min(vals, axis=0)
+                if with_args:
+                    targ = (e0 + jnp.argmin(vals, axis=0)).astype(jnp.int32)
+                    arg = jnp.where(tmin < acc, targ, arg)
+                return jnp.minimum(acc, tmin), arg
+
+            acc, arg = jax.lax.fori_loop(
+                0, net, etile,
+                (jnp.full((T,), INF, dtype=obuf.dtype),
+                 jnp.zeros((T,), dtype=jnp.int32)))
+            obuf[...] = acc
+            co = pltpu.make_async_copy(obuf, st_hbm.at[pl.ds(_off(d, n) + i0, T)],
+                                       sem_o)
+            co.start()
+            co.wait()
+            if with_args:
+                abuf[...] = arg
+                ca = pltpu.make_async_copy(
+                    abuf, arg_hbm.at[pl.ds(_off(d, n) + i0, T)], sem_a)
+                ca.start()
+                ca.wait()
+            return 0
+
+        jax.lax.fori_loop(0, nrt, rowtile, 0)
+
+        # -- fused traceback: DFS over the finished HBM arg table -----------
+        if fused:
+            @pl.when(pid == n - 2)
+            def _walk():
+                si[...] = jnp.zeros_like(si[...])
+                sd[...] = jnp.zeros_like(sd[...])
+                sd[pl.ds(0, 1)] = jnp.full((1,), n - 1, jnp.int32)
+
+                def step(t, sp):
+                    top = sp - 1
+                    i = si[pl.ds(top, 1)][0]
+                    dd = sd[pl.ds(top, 1)][0]
+                    c = jnp.clip(lin_index(i, dd, n), 0, cells - 1)
+                    cp = pltpu.make_async_copy(arg_hbm.at[pl.ds(c, 1)],
+                                               argel, sem_f)
+                    cp.start()
+                    cp.wait()
+                    e = jnp.clip(argel[0], 0, jnp.maximum(dd - 1, 0))
+                    sp = sp - 1
+                    # push right child first so the left pops next (preorder)
+                    rd = dd - e - 1
+                    idx = jnp.where(rd >= 1, sp, n + 1)
+                    si[pl.ds(idx, 1)] = jnp.full((1,), i + e + 1, jnp.int32)
+                    sd[pl.ds(idx, 1)] = jnp.full((1,), rd, jnp.int32)
+                    sp = sp + (rd >= 1).astype(jnp.int32)
+                    idx = jnp.where(e >= 1, sp, n + 1)
+                    si[pl.ds(idx, 1)] = jnp.full((1,), i, jnp.int32)
+                    sd[pl.ds(idx, 1)] = jnp.full((1,), e, jnp.int32)
+                    sp = sp + (e >= 1).astype(jnp.int32)
+                    ni[pl.ds(t, 1)] = jnp.full((1,), i, jnp.int32)
+                    nd[pl.ds(t, 1)] = jnp.full((1,), dd, jnp.int32)
+                    ne[pl.ds(t, 1)] = jnp.full((1,), e, jnp.int32)
+                    return sp
+
+                jax.lax.fori_loop(0, n - 1, step, jnp.int32(1))
+                for buf, out in ((ni, oi_hbm), (nd, od_hbm), (ne, oe_hbm)):
+                    cp = pltpu.make_async_copy(buf, out, sem_f)
+                    cp.start()
+                    cp.wait()
+
+    return kernel
+
+
+def _tiled_call(wtab, n, T, E, with_args, fused, interpret):
+    L, L_pad, size = _geometry(n, T, E)
+    w = _pad_weights(wtab, n, T, E)
+    out_shape = [jax.ShapeDtypeStruct((size,), w.dtype)]
+    scratch = [
+        pltpu.VMEM((2, E, T), w.dtype),            # lbuf
+        pltpu.VMEM((2, E, T), w.dtype),            # rbuf
+        pltpu.VMEM((2, T, E), w.dtype),            # wbuf
+        pltpu.VMEM((T,), w.dtype),                 # obuf
+        pltpu.SemaphoreType.DMA((2, E)),           # sem_l
+        pltpu.SemaphoreType.DMA((2, E)),           # sem_r
+        pltpu.SemaphoreType.DMA((2,)),             # sem_w
+        pltpu.SemaphoreType.DMA(()),               # sem_o
+    ]
+    if with_args:
+        out_shape.append(jax.ShapeDtypeStruct((size,), jnp.int32))
+        scratch += [pltpu.VMEM((T,), jnp.int32),   # abuf
+                    pltpu.SemaphoreType.DMA(())]   # sem_a
+    if fused:
+        out_shape += [jax.ShapeDtypeStruct((L,), jnp.int32)] * 3
+        scratch += [pltpu.VMEM((n + 2,), jnp.int32),   # si (slot n+1 = trash)
+                    pltpu.VMEM((n + 2,), jnp.int32),   # sd
+                    pltpu.VMEM((L,), jnp.int32),       # ni
+                    pltpu.VMEM((L,), jnp.int32),       # nd
+                    pltpu.VMEM((L,), jnp.int32),       # ne
+                    pltpu.VMEM((1,), jnp.int32),       # argel
+                    pltpu.SemaphoreType.DMA(())]       # sem_f
+    outs = pl.pallas_call(
+        _make_tiled_kernel(n, T, E, with_args, fused),
+        grid=(n - 1,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=([pl.BlockSpec(memory_space=pltpu.ANY)] * len(out_shape)),
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(w)
+    cells = num_cells(n)
+    st = outs[0][:cells]
+    if not with_args:
+        return st
+    args = outs[1][:cells]
+    if not fused:
+        return st, args
+    return st, args, (outs[2], outs[3], outs[4])
+
+
+def _degenerate(wtab, n, with_args, fused):
+    """n ≤ 1: a preset-only table (grid would be empty)."""
+    st = jnp.zeros((num_cells(n),), dtype=jnp.asarray(wtab).dtype)
+    if not with_args:
+        return st
+    args = jnp.full((num_cells(n),), -1, dtype=jnp.int32)
+    if not fused:
+        return st, args
+    empty = jnp.zeros((0,), jnp.int32)
+    return st, args, (empty, empty, empty)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "tile_t", "tile_e", "budget",
+                                    "interpret"))
+def mcm_tiled_pallas(wtab, n: int, tile_t=None, tile_e=None, budget=None,
+                     interpret: bool = False):
+    """wtab: (num_cells(n), n-1) split-major weights. HBM-resident tables;
+    returns the linearized cost table, bit-equal to ``solve_wavefront_tab``."""
+    if n <= 1:
+        return _degenerate(wtab, n, with_args=False, fused=False)
+    T, E = _tile_plan(n, budget=budget or (8 << 20), tile_t=tile_t,
+                      tile_e=tile_e)
+    return _tiled_call(wtab, n, T, E, with_args=False, fused=False,
+                       interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "tile_t", "tile_e", "budget",
+                                    "interpret"))
+def mcm_tiled_pallas_with_args(wtab, n: int, tile_t=None, tile_e=None,
+                               budget=None, interpret: bool = False):
+    """``mcm_tiled_pallas`` + the best-split table; returns ``(st, args)``
+    bit-equal to ``solve_wavefront_tab_with_args``."""
+    if n <= 1:
+        return _degenerate(wtab, n, with_args=True, fused=False)
+    T, E = _tile_plan(n, budget=budget or (8 << 20), tile_t=tile_t,
+                      tile_e=tile_e)
+    return _tiled_call(wtab, n, T, E, with_args=True, fused=False,
+                       interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "tile_t", "tile_e", "budget",
+                                    "interpret"))
+def mcm_tiled_pallas_fused(wtab, n: int, tile_t=None, tile_e=None,
+                           budget=None, interpret: bool = False):
+    """Solve + args + in-kernel preorder traceback in ONE launch; returns
+    ``(st, args, (ii, dd, ee))`` with the node arrays matching
+    ``core.mcm.triangular_traceback`` exactly."""
+    if n <= 1:
+        return _degenerate(wtab, n, with_args=True, fused=True)
+    T, E = _tile_plan(n, budget=budget or (8 << 20), tile_t=tile_t,
+                      tile_e=tile_e)
+    return _tiled_call(wtab, n, T, E, with_args=True, fused=True,
+                       interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# jnp fallback: the same tiled algorithm with gathers instead of DMAs.
+# Identical tile geometry, addressing, masking and fold order — bit-equal to
+# the kernel by construction, and the route the CPU/GPU fallback lowers.
+# ---------------------------------------------------------------------------
+def _ref_body(wtab, n, T, E, with_args):
+    L, L_pad, size = _geometry(n, T, E)
+    cells = num_cells(n)
+    w = _pad_weights(wtab, n, T, E)
+    st = jnp.zeros((size,), dtype=w.dtype)
+    ar = jnp.full((size,), -1, dtype=jnp.int32)
+    tt = jnp.arange(T)
+
+    def diag(d, carry):
+        st, ar = carry
+        off_d = _off(d, n)
+        rows = n - d
+        nrt = (rows + T - 1) // T
+        net = (d + E - 1) // E
+
+        def rowtile(rt, carry):
+            st, ar = carry
+            i0 = rt * T
+
+            def etile(j, c2):
+                acc, arg = c2
+                e0 = j * E
+                e_glob = e0 + jnp.arange(E)
+                ec = jnp.minimum(e_glob, d - 1)
+                lidx = _off(ec, n)[:, None] + i0 + tt[None, :]
+                ridx = (_off(d - ec - 1, n) + ec + 1)[:, None] + i0 + tt[None, :]
+                wt = jax.lax.dynamic_slice(w, (off_d + i0, e0), (T, E))
+                vals = (st[lidx] + st[ridx]) + wt.T              # (E, T)
+                vals = jnp.where((e_glob < d)[:, None], vals, INF)
+                tmin = jnp.min(vals, axis=0)
+                if with_args:
+                    targ = (e0 + jnp.argmin(vals, axis=0)).astype(jnp.int32)
+                    arg = jnp.where(tmin < acc, targ, arg)
+                return jnp.minimum(acc, tmin), arg
+
+            acc, arg = jax.lax.fori_loop(
+                0, net, etile,
+                (jnp.full((T,), INF, dtype=w.dtype),
+                 jnp.zeros((T,), dtype=jnp.int32)))
+            st = jax.lax.dynamic_update_slice(st, acc, (off_d + i0,))
+            if with_args:
+                ar = jax.lax.dynamic_update_slice(ar, arg, (off_d + i0,))
+            return st, ar
+
+        return jax.lax.fori_loop(0, nrt, rowtile, (st, ar))
+
+    st, ar = jax.lax.fori_loop(1, n, diag, (st, ar))
+    return (st[:cells], ar[:cells]) if with_args else st[:cells]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "tile_t", "tile_e"))
+def mcm_tiled_ref(wtab, n: int, tile_t=None, tile_e=None):
+    """Chunked jnp triangular solve, bit-equal to ``solve_wavefront_tab``."""
+    if n <= 1:
+        return _degenerate(wtab, n, with_args=False, fused=False)
+    T, E = _tile_plan(n, tile_t=tile_t, tile_e=tile_e)
+    return _ref_body(wtab, n, T, E, with_args=False)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "tile_t", "tile_e"))
+def mcm_tiled_ref_with_args(wtab, n: int, tile_t=None, tile_e=None):
+    """Chunked jnp solve + args; bit-equal to
+    ``solve_wavefront_tab_with_args``."""
+    if n <= 1:
+        return _degenerate(wtab, n, with_args=True, fused=False)
+    T, E = _tile_plan(n, tile_t=tile_t, tile_e=tile_e)
+    return _ref_body(wtab, n, T, E, with_args=True)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "tile_t", "tile_e"))
+def mcm_tiled_ref_fused(wtab, n: int, tile_t=None, tile_e=None):
+    """Chunked jnp solve + args + traceback as ONE jitted program — the
+    fallback fusion: no second dispatch for ``reconstruct=True``."""
+    if n <= 1:
+        return _degenerate(wtab, n, with_args=True, fused=True)
+    T, E = _tile_plan(n, tile_t=tile_t, tile_e=tile_e)
+    st, ar = _ref_body(wtab, n, T, E, with_args=True)
+    ii, dd, ee = triangular_traceback(ar, n)
+    return st, ar, (ii, dd, ee)

@@ -20,12 +20,46 @@ from repro.kernels.chunked_scan import chunked_scan_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.mcm_pipeline import (mcm_pipeline_pallas,
                                         mcm_pipeline_pallas_with_args)
-from repro.kernels.sdp_pipeline import (sdp_pipeline_pallas,
+from repro.kernels.mcm_tiled import (mcm_tiled_pallas,
+                                     mcm_tiled_pallas_fused,
+                                     mcm_tiled_pallas_with_args,
+                                     mcm_tiled_ref, mcm_tiled_ref_fused,
+                                     mcm_tiled_ref_with_args)
+from repro.kernels.sdp_pipeline import (sdp_chunked_pallas,
+                                        sdp_chunked_pallas_with_args,
+                                        sdp_pipeline_pallas,
                                         sdp_pipeline_pallas_with_args)
 from repro.kernels.semiring_matmul import tropical_matmul_pallas
 
 
 _KERNEL_MODES = ("auto", "pallas", "ref", "interpret")
+
+#: default per-launch VMEM working-set budget (v5e has ~16 MiB/core; half of
+#: it leaves room for Mosaic's own spills and the double-buffered DMA stage)
+DEFAULT_VMEM_BUDGET_BYTES = 8 << 20
+
+
+def vmem_budget_bytes() -> int:
+    """The per-launch VMEM budget, overridable via ``REPRO_VMEM_BUDGET``
+    (bytes). Gates kernel-route eligibility (``supports``) and sizes the tiled
+    kernels' streaming windows; the resolved value is folded into backend
+    cache tags and calibration regime keys (``autotune._jax_backend``) so an
+    override never serves stale compiled programs or cross-pollutes
+    calibration entries. A malformed value fails loudly naming the env var
+    (the ``REPRO_KERNELS`` guard's pattern)."""
+    env = os.environ.get("REPRO_VMEM_BUDGET")
+    if env is None:
+        return DEFAULT_VMEM_BUDGET_BYTES
+    try:
+        budget = int(env)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_VMEM_BUDGET={env!r} is not a valid VMEM budget; "
+            f"expected a positive integer byte count") from None
+    if budget < 1:
+        raise ValueError(
+            f"REPRO_VMEM_BUDGET={env!r} must be a positive integer byte count")
+    return budget
 
 
 def _count_entry(fn: str, mode: str) -> None:
@@ -114,6 +148,75 @@ def mcm_blocked_with_args(wtab, n: int):
         return mcm_pipeline_pallas_with_args(wtab, n,
                                              interpret=(mode == "interpret"))
     return solve_wavefront_tab_with_args(wtab, n)
+
+
+def sdp_chunked(init, offsets: tuple, op: str, n: int, block: int = 512,
+                weights=None):
+    """HBM-streaming blocked S-DP (DESIGN.md §4): the chunked Pallas kernel
+    on the kernel path (VMEM window sized from the budget knob), the jnp
+    blocked solver elsewhere. No table-size cap on any path."""
+    from repro.core.sdp import solve_blocked
+
+    mode = kernel_mode()
+    _count_entry("sdp_chunked", mode)
+    if mode in ("pallas", "interpret"):
+        return sdp_chunked_pallas(init, offsets, op, n, block=block,
+                                  budget=vmem_budget_bytes(), weights=weights,
+                                  interpret=(mode == "interpret"))
+    return solve_blocked(init, offsets, op, n, block=block, weights=weights)
+
+
+def sdp_chunked_with_args(init, offsets: tuple, op: str, n: int,
+                          block: int = 512, weights=None):
+    """``sdp_chunked`` + per-cell winning lanes, first-occurrence tie rule on
+    every path."""
+    from repro.core.sdp import solve_blocked_with_args
+
+    mode = kernel_mode()
+    _count_entry("sdp_chunked_with_args", mode)
+    if mode in ("pallas", "interpret"):
+        return sdp_chunked_pallas_with_args(init, offsets, op, n, block=block,
+                                            budget=vmem_budget_bytes(),
+                                            weights=weights,
+                                            interpret=(mode == "interpret"))
+    return solve_blocked_with_args(init, offsets, op, n, block=block,
+                                   weights=weights)
+
+
+def mcm_tiled(wtab, n: int):
+    """Triangular table solve with HBM-resident tables (DESIGN.md §4): the
+    double-buffered tiled Pallas kernel on the kernel path, the equivalent
+    banded-tile jnp body elsewhere. No table-size cap on any path."""
+    mode = kernel_mode()
+    _count_entry("mcm_tiled", mode)
+    if mode in ("pallas", "interpret"):
+        return mcm_tiled_pallas(wtab, n, budget=vmem_budget_bytes(),
+                                interpret=(mode == "interpret"))
+    return mcm_tiled_ref(wtab, n)
+
+
+def mcm_tiled_with_args(wtab, n: int):
+    """``mcm_tiled`` + best-split table (device-side args on every path)."""
+    mode = kernel_mode()
+    _count_entry("mcm_tiled_with_args", mode)
+    if mode in ("pallas", "interpret"):
+        return mcm_tiled_pallas_with_args(wtab, n, budget=vmem_budget_bytes(),
+                                          interpret=(mode == "interpret"))
+    return mcm_tiled_ref_with_args(wtab, n)
+
+
+def mcm_tiled_fused(wtab, n: int):
+    """``mcm_tiled_with_args`` + the preorder traceback walked inside the
+    same launch (DESIGN.md §5): returns ``(st, args, (node_i, node_d,
+    node_e))`` from ONE dispatch, so ``reconstruct=True`` stops paying a
+    second one. The ref path fuses solve + ``triangular_traceback`` into one
+    jit program — still a single dispatch, same contract."""
+    mode = kernel_mode()
+    _count_entry("mcm_tiled_fused", mode)
+    if mode in ("pallas", "interpret"):
+        return mcm_tiled_pallas_fused(wtab, n, budget=vmem_budget_bytes(),
+                                      interpret=(mode == "interpret"))
+    return mcm_tiled_ref_fused(wtab, n)
 
 
 def linear_scan(x, decay, h0, chunk: int = 128):

@@ -10,8 +10,13 @@ buys on GPU.
 The whole table lives in VMEM (one f32 table of 2²⁰ elements = 4 MiB; VMEM is
 ~16 MiB on v5e) and the block loop runs *inside* the kernel, so HBM traffic is
 one load + one store of the table regardless of k — versus O(nk) HBM touches
-for the naive form. Tables beyond VMEM would stream via double-buffered DMA
-windows; that variant is out of scope here and noted in DESIGN.md.
+for the naive form. Tables beyond VMEM stream through
+:func:`sdp_chunked_pallas` below (DESIGN.md §4): the grid walks C-cell chunks
+sequentially, BlockSpec pipelining streams each chunk's ``(C, k)`` weight tile
+HBM→VMEM double-buffered (the ``chunked_scan`` idiom), and a persistent
+``(a_1 + C)`` VMEM window carries the inter-chunk boundary — only the last
+``a_1`` finalized cells, the whole dependency horizon of the recurrence — so
+VMEM holds O(a_1 + C) regardless of n and there is no size cap at all.
 
 Weighted extension (DESIGN.md §3/§4): with ``(⊕, ⊙)`` the semiring whose
 ``add`` matches the semigroup ``op``, passing an ``(n, k)`` ``weights`` array
@@ -31,6 +36,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.semiring import SEMIGROUP_TO_SEMIRING
 
@@ -144,3 +150,153 @@ def sdp_pipeline_pallas_with_args(init, offsets: tuple, op: str, n: int,
         interpret=interpret,
     )(*_pad_inputs(init, weights, offsets, n, n_pad))
     return out[:n], args[:n]
+
+
+# ---------------------------------------------------------------------------
+# Chunked HBM-streaming variant (DESIGN.md §4): the table never sits in VMEM.
+# The grid walks C-cell chunks sequentially; BlockSpec pipelining streams each
+# chunk's (C, k) weight tile HBM→VMEM (double-buffered, chunked_scan's idiom)
+# and streams the finished chunk back out, while a persistent (a_1 + C) VMEM
+# scratch window carries the inter-chunk boundary — the last a_1 finalized
+# cells, which is the recurrence's whole dependency horizon (a_1 = max offset).
+# VMEM high-water is O(a_1 + C·(k+3)) bytes regardless of n: no size cap.
+# ---------------------------------------------------------------------------
+DEFAULT_CHUNK_BUDGET = 8 << 20
+
+
+def _chunk_plan(offsets, n: int, block: int, chunk, budget):
+    """Chunk geometry: (B, C, nc). C is a multiple of the step block B so the
+    in-kernel block loop never straddles a chunk edge; sized from ``budget``
+    (≈ 4·(k+3) VMEM bytes per streamed cell: window + weight lanes + cost +
+    arg) unless ``chunk`` pins it explicitly."""
+    a1, ak = offsets[0], offsets[-1]
+    B = max(1, min(ak, block))
+    M = n - a1                       # cells to compute
+    mb = -(-M // B)                  # blocks needed overall
+    if chunk is not None:
+        cb = max(1, -(-chunk // B))
+    else:
+        cap = max(B, (budget or DEFAULT_CHUNK_BUDGET) // (4 * (len(offsets) + 3)))
+        cb = max(1, cap // B)
+    C = min(cb, mb) * B
+    return B, C, -(-M // C)
+
+
+def _make_chunked_kernel(offsets, op, B, C, weighted, with_args):
+    a1 = offsets[0]
+    combine = _OPS[op]
+    mul = SEMIGROUP_TO_SEMIRING[op].mul
+
+    def kernel(*refs):
+        refs = list(refs)
+        init_ref = refs.pop(0)
+        w_ref = refs.pop(0) if weighted else None
+        out_ref = refs.pop(0)
+        arg_ref = refs.pop(0) if with_args else None
+        win_ref = refs.pop(0)
+
+        @pl.when(pl.program_id(0) == 0)
+        def _seed():  # window cells [0, a1) = the preset table
+            win_ref[pl.ds(0, a1)] = init_ref[...]
+
+        def body(b, _):
+            s = a1 + b * B                     # window-local block start
+            if weighted:
+                wrow = w_ref[pl.ds(b * B, B), :]
+
+            def term(j):
+                t = win_ref[pl.ds(s - offsets[j], B)]
+                return mul(t, wrow[:, j]) if weighted else t
+
+            acc = term(0)
+            if with_args:
+                arg = jnp.zeros((B,), dtype=jnp.int32)
+            for j in range(1, len(offsets)):
+                val = term(j)
+                if with_args:
+                    arg = jnp.where(_BEATS[op](val, acc), jnp.int32(j), arg)
+                acc = combine(acc, val)
+            win_ref[pl.ds(s, B)] = acc
+            if with_args:
+                arg_ref[pl.ds(b * B, B)] = arg
+            return 0
+
+        jax.lax.fori_loop(0, C // B, body, 0)
+        out_ref[...] = win_ref[pl.ds(a1, C)]
+        # Slide the window: the next chunk's first cell depends on the last a1
+        # cells just finalized. Materialize before writing — when C < a1 the
+        # source and destination ranges overlap.
+        carry = win_ref[pl.ds(C, a1)]
+        win_ref[pl.ds(0, a1)] = carry
+
+    return kernel
+
+
+def _chunked_call(init, offsets, op, n, block, chunk, budget, weights,
+                  with_args, interpret):
+    a1 = offsets[0]
+    B, C, nc = _chunk_plan(offsets, n, block, chunk, budget)
+    k = len(offsets)
+    kernel = _make_chunked_kernel(offsets, op, B, C,
+                                  weighted=weights is not None,
+                                  with_args=with_args)
+    operands = [init]
+    in_specs = [pl.BlockSpec((a1,), lambda c: (0,))]
+    if weights is not None:
+        wpad = jnp.zeros((nc * C, k), dtype=init.dtype)
+        operands.append(wpad.at[: n - a1].set(weights[a1:n].astype(init.dtype)))
+        in_specs.append(pl.BlockSpec((C, k), lambda c: (c, 0)))
+    out_shape = [jax.ShapeDtypeStruct((nc * C,), init.dtype)]
+    out_specs = [pl.BlockSpec((C,), lambda c: (c,))]
+    if with_args:
+        out_shape.append(jax.ShapeDtypeStruct((nc * C,), jnp.int32))
+        out_specs.append(pl.BlockSpec((C,), lambda c: (c,)))
+    out = pl.pallas_call(
+        kernel,
+        grid=(nc,),
+        in_specs=in_specs,
+        out_specs=out_specs if with_args else out_specs[0],
+        out_shape=out_shape if with_args else out_shape[0],
+        scratch_shapes=[pltpu.VMEM((a1 + C,), init.dtype)],
+        interpret=interpret,
+    )(*operands)
+    if not with_args:
+        return jnp.concatenate([init, out])[:n]
+    st = jnp.concatenate([init, out[0]])[:n]
+    args = jnp.concatenate([jnp.full((a1,), -1, dtype=jnp.int32), out[1]])[:n]
+    return st, args
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "op", "n", "block",
+                                             "chunk", "budget", "interpret"))
+def sdp_chunked_pallas(init, offsets: tuple, op: str, n: int,
+                       block: int = 512, chunk: int | None = None,
+                       budget: int | None = None, weights=None,
+                       interpret: bool = False):
+    """HBM-streaming ``sdp_pipeline_pallas``: same recurrence, but the table
+    streams through a ``(a_1 + C)`` VMEM window instead of residing whole in
+    VMEM — any n fits. Returns ST[0..n-1]."""
+    a1 = offsets[0]
+    if n <= a1:  # preset-only table: nothing to pipeline, clamp the presets
+        return init[:n]
+    return _chunked_call(init, offsets, op, n, block, chunk, budget, weights,
+                         with_args=False, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "op", "n", "block",
+                                             "chunk", "budget", "interpret"))
+def sdp_chunked_pallas_with_args(init, offsets: tuple, op: str, n: int,
+                                 block: int = 512, chunk: int | None = None,
+                                 budget: int | None = None, weights=None,
+                                 interpret: bool = False):
+    """``sdp_chunked_pallas`` + per-cell winning-lane indices (preset cells
+    carry -1), same ascending-lane strict-improve tie rule as
+    ``solve_blocked_with_args``. Returns ``(st, args)``."""
+    if op not in _BEATS:
+        raise ValueError(f"argument tracking is undefined for op={op!r} "
+                         "(every lane contributes to the reduction)")
+    a1 = offsets[0]
+    if n <= a1:  # preset-only: clamped presets, every cell an init cell
+        return init[:n], jnp.full((n,), -1, dtype=jnp.int32)
+    return _chunked_call(init, offsets, op, n, block, chunk, budget, weights,
+                         with_args=True, interpret=interpret)

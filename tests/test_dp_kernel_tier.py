@@ -196,10 +196,10 @@ def test_dispatch_offers_kernel_routes(interpret_mode):
 
 
 def test_vmem_budget_gates_kernel_eligibility(interpret_mode):
-    from repro import kernels
+    from repro.kernels import ops
 
     k = 4
-    big_n = (kernels.VMEM_BUDGET_BYTES // (4 * (2 + k))) + 8
+    big_n = (ops.vmem_budget_bytes() // (4 * (2 + k))) + 8
     spec = dp.LinearSpec(
         offsets=(8, 4, 2, 1), op="min", n=int(big_n),
         init=np.zeros(8, np.float32),
