@@ -12,7 +12,9 @@ fails when post-calibration median regret exceeds 1.5× or any cell exceeds
 3× (suspect cells are re-timed first, so a violation is a survived
 misroute, not a one-off timer spike). Also measures the
 batch-amortization ratio (loop of B solves vs one vmapped ``batch_solve``)
-per linear/triangular representative.
+per linear/triangular representative, and a grid cell group
+(``report["grid"]``) timing the jnp anti-diagonal wavefront against the
+frontier-major Pallas kernel per grid problem with bit-equality enforced.
 """
 from __future__ import annotations
 
@@ -176,6 +178,42 @@ def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None,
         print(f"zoo_batch,{name},{batch},{loop_ms:.4f},{batch_ms:.4f},"
               f"{loop_ms / max(batch_ms, 1e-9):.2f}x")
 
+    # grid cell group: the jnp anti-diagonal wavefront vs the frontier-major
+    # Pallas kernel on every grid-family problem, bit-equality required —
+    # same tables, same argmax ties (DESIGN.md §9). Cells the kernel's VMEM
+    # gate rejects are recorded with kernel_ms = None rather than skipped
+    # silently.
+    grid_rows = []
+    kernel_grid = dp.backends.get("kernel_grid")
+    for name in dp.problem_names():
+        prob = dp.get_problem(name)
+        if prob.geometry != "grid":
+            continue
+        for size in sizes:
+            kw = prob.sample(rng, size)
+            spec = prob.encode(**kw)
+            cells = dp.backends.shape_key_size(spec.shape_key())
+            wave_tab = dp.solve_spec(spec, backend="grid_wavefront")
+            wave_ms = _time(lambda: dp.solve_spec(spec, backend="grid_wavefront"))
+            row = {"problem": name, "size": size, "cells": cells,
+                   "wavefront_ms": round(wave_ms, 4),
+                   "kernel_ms": None, "ok": None, "kernel_speedup": None}
+            if kernel_grid.supports(spec):
+                kern_tab = dp.solve_spec(spec, backend="kernel_grid")
+                kern_ms = _time(
+                    lambda: dp.solve_spec(spec, backend="kernel_grid"))
+                row["kernel_ms"] = round(kern_ms, 4)
+                row["ok"] = bool(np.array_equal(wave_tab, kern_tab))
+                row["kernel_speedup"] = round(
+                    wave_ms / max(kern_ms, 1e-9), 3)
+            grid_rows.append(row)
+            print(f"zoo_grid,{name},{size},{cells},{row['ok']},"
+                  f"{wave_ms:.4f},{row['kernel_ms']},{row['kernel_speedup']}")
+            if row["ok"] is False:
+                raise SystemExit(
+                    f"grid correctness failure at {name} size={size}: "
+                    "kernel_grid table diverges from the jnp wavefront")
+
     large_rows = _large_n_leg(large_n) if large_n else None
 
     regrets = [c["dispatch_regret"] for c in regret_cells]
@@ -185,7 +223,7 @@ def run(out_path: str = "BENCH_dp_zoo.json", sizes=None, batch=None,
     print(f"zoo_dispatch,calibrated={int(calibrate)},cells={len(regret_cells)},"
           f"misrouted={misrouted},median_regret={median_regret:.3f},"
           f"max_regret={max_regret:.3f}")
-    report = {"rows": rows, "batch": batch_rows,
+    report = {"rows": rows, "batch": batch_rows, "grid": grid_rows,
               "dispatch": {"calibrated": calibrate,
                            "median_regret": round(median_regret, 3),
                            "max_regret": round(max_regret, 3),

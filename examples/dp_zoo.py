@@ -39,6 +39,30 @@ def main() -> None:
                    item_values=[5.0, 6.0], capacity=10, reconstruct=True)
     print(f"knapsack items (weight, value): {ans.solution['items']}")
 
+    # the grid family (DESIGN.md §9): alignment + parsing in native 2-D shape
+    x, y = "GATTACA", "GCATGCU"
+    ans = dp.solve("needleman_wunsch", x=chars(x), y=chars(y), match=1.0,
+                   mismatch=-1.0, gap=-1.0, reconstruct=True)
+    top, bot = [], []
+    for op in ans.solution["ops"]:
+        if op[0] == "align":
+            top.append(x[op[1]]); bot.append(y[op[2]])
+        elif op[0] == "del":
+            top.append(x[op[1]]); bot.append("-")
+        else:
+            top.append("-"); bot.append(y[op[1]])
+    print(f"\nneedleman_wunsch {x} / {y} (score {ans.value:.0f}):")
+    print(f"  {''.join(top)}\n  {''.join(bot)}")
+
+    # CKY: S -> S S | A B over the sentence "a b a b"
+    rules, rule_logp = [(0, 0, 0), (0, 1, 2)], [-0.4, -0.6]
+    lex = np.full((3, 2), -50.0)
+    lex[1, 0], lex[2, 1] = -0.2, -0.3          # A covers 'a', B covers 'b'
+    ans = dp.solve("cky", tokens=[0, 1, 0, 1], rules=rules,
+                   rule_logp=rule_logp, lex=lex, reconstruct=True)
+    print(f"cky parse of 'a b a b': {ans.solution['bracket']} "
+          f"(logp {ans.value:.2f})")
+
     # batched: 32 same-shape instances, one vmapped device call
     rng = np.random.default_rng(0)
     instances = [{"dims": rng.integers(1, 30, size=17).astype(np.float64)}

@@ -1,0 +1,408 @@
+"""Grid-family wavefront solvers (GridSpec; DESIGN.md §9).
+
+The paper's pipeline fills a table one dependency frontier at a time; for
+2-D multi-plane grids the frontiers are:
+
+  * ``antidiag`` — cells on one anti-diagonal ``i + j = t`` are mutually
+    independent because every shift move steps strictly forward
+    (``di + dj ≥ 1``), so the table fills in ``rows + cols - 1`` masked
+    combines (Helal et al. arXiv 2311.17530 partition exactly these
+    frontiers across processors; Xie et al. arXiv 2404.16314 frame
+    work-efficient parallel DP around the same structure).
+  * ``spandiag`` — the triangular split recurrence generalized to planes:
+    span-length diagonals of a parse chart, one masked combine per
+    diagonal exactly like ``core.mcm._wavefront_loop``, with binary rules
+    ``(A → B C, rw)`` instead of a per-cell split weight.
+
+Both solvers follow the mcm wavefront idiom: precomputed index grids, a
+``where``-masked candidate tensor per frontier, and a ``mode="drop"``
+scatter of the frontier's winners. The arg-emitting variants store the
+winning *move index* (antidiag) or the *packed split* ``e·len(rules) + r``
+(spandiag); argmin/argmax tie-breaking is first-occurrence in move/rule
+declaration order — the Pallas kernel (``repro.kernels.grid_pipeline``)
+reproduces the same order with strict-improve folds, which is what makes
+the two routes bit-identical including reconstruction.
+
+Host-side helpers (``grid_reference``, ``grid_args_np``,
+``grid_traceback_np``) are the independent numpy implementations the
+reconstruct fallback and the conformance tests use; ``grid_traceback`` is
+the device walk (a ``lax.scan`` move-walk for antidiag, a fixed-size DFS
+stack like ``triangular_traceback`` for spandiag).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.dp import backends as _dp_backends
+from repro.dp.problem import GridPath, GridSpec, lin_index, num_cells
+
+
+def semiring_zero(op: str) -> float:
+    """The identity of the combine: +inf for min, -inf for max."""
+    return float("inf") if op == "min" else float("-inf")
+
+
+def _meta_dims(meta: tuple):
+    """Unpack the static shape_key tail (schedule, op, planes, rows, cols,
+    moves, rules)."""
+    schedule, op, planes, rows, cols, moves, rules = meta
+    return schedule, op, int(planes), int(rows), int(cols), moves, rules
+
+
+# ---------------------------------------------------------------------------
+# jnp wavefront solvers
+# ---------------------------------------------------------------------------
+def _antidiag_loop(arrs, meta, with_args: bool):
+    _, op, P, R, C, moves, _ = _meta_dims(meta)
+    w, init, pmask = arrs
+    zero = semiring_zero(op)
+    RC = R * C
+    L = len(moves)
+    wf = jnp.asarray(w).reshape(L, RC)
+    pmf = jnp.asarray(pmask).reshape(P, RC) > 0
+    st0 = jnp.where(pmf, jnp.asarray(init).reshape(P, RC),
+                    jnp.asarray(zero, w.dtype))
+    lanes = jnp.arange(min(R, C))
+    reduce_ = jnp.min if op == "min" else jnp.max
+    argreduce = jnp.argmin if op == "min" else jnp.argmax
+    by_plane = [[(l, m) for l, m in enumerate(moves) if int(m[0]) == p]
+                for p in range(P)]
+
+    def body(t, carry):
+        st, args = carry
+        c0 = jnp.maximum(0, t - (R - 1))
+        c1 = jnp.minimum(t, C - 1)
+        jv = c0 + lanes
+        iv = t - jv
+        lane_ok = lanes <= (c1 - c0)
+        cell = iv * C + jv
+        cell_safe = jnp.clip(cell, 0, RC - 1)
+        scatter = jnp.where(lane_ok, cell, RC)      # drop the padded lanes
+        for p, mlist in enumerate(by_plane):
+            if not mlist:
+                continue
+            cands = []
+            for l, (_, p_from, di, dj) in mlist:
+                si, sj = iv - int(di), jv - int(dj)
+                ok = lane_ok & (si >= 0) & (sj >= 0)
+                src = jnp.clip(si * C + sj, 0, RC - 1)
+                cands.append(jnp.where(
+                    ok, st[int(p_from), src] + wf[l, cell_safe], zero))
+            cand = jnp.stack(cands)                 # (moves-into-p, lanes)
+            best = reduce_(cand, axis=0)
+            preset = pmf[p, cell_safe]
+            stv = jnp.where(preset, st0[p, cell_safe], best)
+            st = st.at[p, scatter].set(stv, mode="drop", unique_indices=True)
+            if args is not None:
+                ids = jnp.asarray(np.array([l for l, _ in mlist], np.int32))
+                mv = ids[argreduce(cand, axis=0)]
+                av = jnp.where(preset, -1, mv)
+                args = args.at[p, scatter].set(av, mode="drop",
+                                               unique_indices=True)
+        return st, args
+
+    args0 = jnp.full((P, RC), -1, jnp.int32) if with_args else None
+    st, args = jax.lax.fori_loop(1, R + C - 1, body, (st0, args0))
+    if with_args:
+        return st.reshape(-1), args.reshape(-1)
+    return st.reshape(-1)
+
+
+def _spandiag_loop(arrs, meta, with_args: bool):
+    _, op, P, n, _, _, rules = _meta_dims(meta)
+    rw, init = arrs
+    zero = semiring_zero(op)
+    cells = num_cells(n)
+    NR = len(rules)
+    st0 = jnp.full((P, cells), zero, rw.dtype).at[:, :n].set(
+        jnp.asarray(init))                          # diagonal 0 = cells 0..n-1
+    ii = jnp.arange(n)[:, None]
+    ee = jnp.arange(max(n - 1, 1))[None, :]
+    reduce_ = jnp.min if op == "min" else jnp.max
+    argreduce = jnp.argmin if op == "min" else jnp.argmax
+    by_plane = [[(r, rule) for r, rule in enumerate(rules)
+                 if int(rule[0]) == A] for A in range(P)]
+
+    def body(d, carry):
+        st, args = carry
+        valid = (ii < n - d) & (ee < d)
+        li = jnp.clip(lin_index(ii, ee, n), 0, cells - 1)
+        ri = jnp.clip(lin_index(ii + ee + 1, d - ee - 1, n), 0, cells - 1)
+        rows_ok = ii[:, 0] < n - d
+        widx = jnp.where(rows_ok, lin_index(ii[:, 0], d, n), cells)
+        for A, rl in enumerate(by_plane):
+            if not rl:
+                continue
+            cands = []
+            for r, (_, B, Cc) in rl:
+                cands.append(jnp.where(
+                    valid, st[int(B), li] + st[int(Cc), ri] + rw[r], zero))
+            cand = jnp.stack(cands, axis=-1)        # (n, splits, rules-into-A)
+            flat = cand.reshape(cand.shape[0], -1)  # split-major, rule minor
+            best = reduce_(flat, axis=1)
+            st = st.at[A, widx].set(best, mode="drop", unique_indices=True)
+            if args is not None:
+                ids = jnp.asarray(np.array([r for r, _ in rl], np.int32))
+                sel = argreduce(flat, axis=1)
+                packed = ((sel // len(rl)).astype(jnp.int32) * NR
+                          + ids[sel % len(rl)])
+                args = args.at[A, widx].set(packed, mode="drop",
+                                            unique_indices=True)
+        return st, args
+
+    args0 = (jnp.full((P, cells), -1, jnp.int32) if with_args else None)
+    st, args = jax.lax.fori_loop(1, n, body, (st0, args0))
+    if with_args:
+        return st.reshape(-1), args.reshape(-1)
+    return st.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def solve_grid(arrs: tuple, meta: tuple) -> jnp.ndarray:
+    """Flat ``(planes·cells,)`` table of a grid instance — ``arrs`` the
+    spec's ``device_arrays()`` tuple, ``meta`` its ``static_meta()``."""
+    if meta[0] == "antidiag":
+        return _antidiag_loop(arrs, meta, with_args=False)
+    return _spandiag_loop(arrs, meta, with_args=False)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def solve_grid_with_args(arrs: tuple, meta: tuple):
+    """``solve_grid`` + the winning-argument table: move index (antidiag)
+    or packed split ``e·len(rules) + r`` (spandiag), -1 on preset cells."""
+    if meta[0] == "antidiag":
+        return _antidiag_loop(arrs, meta, with_args=True)
+    return _spandiag_loop(arrs, meta, with_args=True)
+
+
+# ---------------------------------------------------------------------------
+# Device traceback
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(2,))
+def grid_traceback(args: jnp.ndarray, start, meta: tuple):
+    """Walk a flat grid arg table from packed cell ``start``.
+
+    Returns uniform ``(pp, aa, bb, vv, valid, stop)`` arrays:
+
+    antidiag — the move walk: node t is ``(plane, i, j, move)``, ``valid``
+    masks the live prefix (the walk stops at the first arg<0 preset cell,
+    whose packed index is ``stop``); fixed ``rows + cols`` scan steps.
+
+    spandiag — the rule tree in preorder via a fixed-size DFS stack
+    (``triangular_traceback``'s idiom with a plane lane): node t is
+    ``(plane, i, d, packed)``, all ``n - 1`` nodes valid, ``stop`` unused.
+    """
+    schedule, _, P, R, C, moves, rules = _meta_dims(meta)
+    if schedule == "antidiag":
+        RC = R * C
+        mpf = jnp.asarray(np.array([m[1] for m in moves], np.int32))
+        mdi = jnp.asarray(np.array([m[2] for m in moves], np.int32))
+        mdj = jnp.asarray(np.array([m[3] for m in moves], np.int32))
+        p0 = start // RC
+        i0 = (start % RC) // C
+        j0 = start % C
+
+        def step(carry, _):
+            p, i, j, active = carry
+            a = args[jnp.clip(p * RC + i * C + j, 0, P * RC - 1)]
+            take = active & (a >= 0)
+            a_s = jnp.clip(a, 0, len(moves) - 1)
+            nxt = (jnp.where(take, mpf[a_s], p),
+                   jnp.where(take, i - mdi[a_s], i),
+                   jnp.where(take, j - mdj[a_s], j), take)
+            return nxt, (p, i, j, a, take)
+
+        (pe, ie, je, _), (pp, aa, bb, vv, valid) = jax.lax.scan(
+            step, (jnp.int32(p0), jnp.int32(i0), jnp.int32(j0),
+                   jnp.bool_(True)), None, length=R + C)
+        stop = pe * RC + ie * C + je
+        return pp, aa, bb, vv, valid, stop
+
+    n = R
+    cells = num_cells(n)
+    NR = len(rules)
+    rl = jnp.asarray(np.array([r[1] for r in rules], np.int32))
+    rr = jnp.asarray(np.array([r[2] for r in rules], np.int32))
+    size = n + 1
+    p_root = jnp.int32(start // cells)
+
+    def step(state, _):
+        sp_, si, sd, top = state
+        t = jnp.clip(top - 1, 0, size - 1)
+        p, i, d = sp_[t], si[t], sd[t]
+        a = args[jnp.clip(p * cells + lin_index(i, d, n), 0, P * cells - 1)]
+        a_s = jnp.maximum(a, 0)
+        e = jnp.clip(a_s // NR, 0, jnp.maximum(d - 1, 0))
+        r = a_s % NR
+        top = top - 1
+        rd = d - e - 1                  # push right child first (preorder)
+        idx = jnp.where(rd >= 1, top, size)
+        sp_ = sp_.at[idx].set(rr[r], mode="drop")
+        si = si.at[idx].set(i + e + 1, mode="drop")
+        sd = sd.at[idx].set(rd, mode="drop")
+        top = top + (rd >= 1).astype(top.dtype)
+        idx = jnp.where(e >= 1, top, size)
+        sp_ = sp_.at[idx].set(rl[r], mode="drop")
+        si = si.at[idx].set(i, mode="drop")
+        sd = sd.at[idx].set(e, mode="drop")
+        top = top + (e >= 1).astype(top.dtype)
+        return (sp_, si, sd, top), (p, i, d, a)
+
+    sp_ = jnp.zeros((size,), jnp.int32).at[0].set(p_root)
+    si = jnp.zeros((size,), jnp.int32)
+    sd = jnp.zeros((size,), jnp.int32).at[0].set(n - 1)
+    _, (pp, aa, bb, vv) = jax.lax.scan(
+        step, (sp_, si, sd, jnp.int32(1)), None, length=max(n - 1, 0))
+    valid = jnp.ones(pp.shape, bool)
+    return pp, aa, bb, vv, valid, jnp.int32(-1)
+
+
+# ---------------------------------------------------------------------------
+# Independent numpy implementations (reference solver, arg fallback, host
+# traceback) — deliberately plain loops, shared by tests and the
+# reconstruct fallback path.
+# ---------------------------------------------------------------------------
+def grid_reference(spec: GridSpec) -> np.ndarray:
+    """Reference solve in float64 python loops — the family's independent
+    cross-check (the zoo problems' oracles are additionally independent of
+    the spec encoding)."""
+    zero = semiring_zero(spec.op)
+    better = (lambda a, b: a < b) if spec.op == "min" else (lambda a, b: a > b)
+    P = spec.planes
+    if spec.schedule == "antidiag":
+        R, C = spec.rows, spec.cols
+        tab = np.full((P, R, C), zero)
+        for t in range(R + C - 1):
+            for j in range(max(0, t - R + 1), min(t, C - 1) + 1):
+                i = t - j
+                for p in range(P):
+                    if spec.init_mask[p, i, j]:
+                        tab[p, i, j] = spec.init[p, i, j]
+                        continue
+                    best = zero
+                    for l, (p_to, p_from, di, dj) in enumerate(spec.moves):
+                        if p_to != p or i - di < 0 or j - dj < 0:
+                            continue
+                        v = tab[p_from, i - di, j - dj] + spec.weights[l, i, j]
+                        if better(v, best):
+                            best = v
+                    tab[p, i, j] = best
+        return tab.reshape(-1)
+    n = spec.rows
+    tab = np.full((P, num_cells(n)), zero)
+    tab[:, :n] = spec.init
+    for d in range(1, n):
+        for i in range(n - d):
+            c = lin_index(i, d, n)
+            for r, (A, B, Cc) in enumerate(spec.rules):
+                for e in range(d):
+                    v = (tab[B, lin_index(i, e, n)]
+                         + tab[Cc, lin_index(i + e + 1, d - e - 1, n)]
+                         + spec.rule_weights[r])
+                    if better(v, tab[A, c]):
+                        tab[A, c] = v
+    return tab.reshape(-1)
+
+
+def grid_args_np(table: np.ndarray, spec: GridSpec) -> np.ndarray:
+    """Numpy fallback: winning-argument table re-ranked from a finished cost
+    table, with the same first-occurrence tie order as the device solvers —
+    and the same float32 arithmetic, so near-ties rank identically."""
+    zero = np.float32(semiring_zero(spec.op))
+    better = (lambda a, b: a < b) if spec.op == "min" else (lambda a, b: a > b)
+    P = spec.planes
+    table = np.asarray(table, dtype=np.float32)
+    if spec.schedule == "antidiag":
+        R, C = spec.rows, spec.cols
+        tab = table.reshape(P, R, C)
+        wts = np.asarray(spec.weights, dtype=np.float32)
+        args = np.full((P, R, C), -1, np.int32)
+        for p in range(P):
+            for i in range(R):
+                for j in range(C):
+                    if spec.init_mask[p, i, j]:
+                        continue
+                    best, sel = zero, -1
+                    for l, (p_to, p_from, di, dj) in enumerate(spec.moves):
+                        if p_to != p or i - di < 0 or j - dj < 0:
+                            continue
+                        v = tab[p_from, i - di, j - dj] + wts[l, i, j]
+                        if sel < 0 or better(v, best):
+                            best, sel = v, l
+                    args[p, i, j] = sel
+        return args.reshape(-1)
+    n = spec.rows
+    cells = num_cells(n)
+    tab = table.reshape(P, cells)
+    rw = np.asarray(spec.rule_weights, dtype=np.float32)
+    args = np.full((P, cells), -1, np.int32)
+    NR = len(spec.rules)
+    for d in range(1, n):
+        for i in range(n - d):
+            c = lin_index(i, d, n)
+            for A in range(P):
+                best, sel = zero, -1
+                for e in range(d):
+                    for r, (rA, B, Cc) in enumerate(spec.rules):
+                        if rA != A:
+                            continue
+                        v = (tab[B, lin_index(i, e, n)]
+                             + tab[Cc, lin_index(i + e + 1, d - e - 1, n)]
+                             + rw[r])
+                        if sel < 0 or better(v, best):
+                            best, sel = v, e * NR + r
+                args[A, c] = sel
+    return args.reshape(-1)
+
+
+def grid_traceback_np(args: np.ndarray, spec: GridSpec,
+                      start: int) -> GridPath:
+    """Host walk with the same node contract as :func:`grid_traceback`."""
+    P = spec.planes
+    if spec.schedule == "antidiag":
+        R, C = spec.rows, spec.cols
+        RC = R * C
+        p, i, j = start // RC, (start % RC) // C, start % C
+        nodes = []
+        while True:
+            a = int(args[p * RC + i * C + j])
+            if a < 0:
+                break
+            nodes.append((p, i, j, a))
+            _, p_from, di, dj = spec.moves[a]
+            p, i, j = p_from, i - di, j - dj
+        return GridPath(nodes=np.asarray(nodes, np.int64).reshape(-1, 4),
+                        stop=p * RC + i * C + j)
+    n = spec.rows
+    cells = num_cells(n)
+    NR = len(spec.rules)
+    nodes = []
+    stack = [(start // cells, 0, n - 1)] if n >= 2 else []
+    while stack:
+        p, i, d = stack.pop()
+        a = int(args[p * cells + lin_index(i, d, n)])
+        nodes.append((p, i, d, a))
+        e, r = max(a, 0) // NR, max(a, 0) % NR
+        _, B, Cc = spec.rules[r]
+        if d - e - 1 >= 1:
+            stack.append((Cc, i + e + 1, d - e - 1))
+        if e >= 1:
+            stack.append((B, i, e))
+    return GridPath(nodes=np.asarray(nodes, np.int64).reshape(-1, 4), stop=-1)
+
+
+# ---------------------------------------------------------------------------
+# Registration
+# ---------------------------------------------------------------------------
+_dp_backends.register(_dp_backends.grid_backend(
+    "grid_wavefront", solve_grid,
+    cost=lambda s: _dp_backends.grid_costs(s)["grid_wavefront"],
+    jax_arg_fn=solve_grid_with_args,
+    doc="jnp masked wavefront over anti-diagonals (alignment grids) or "
+        "span diagonals (parse charts): one gathered combine + drop-mode "
+        "scatter per frontier, vmap-batchable, arg-emitting."))

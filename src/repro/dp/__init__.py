@@ -2,13 +2,17 @@
 
 Layers (DESIGN.md §3, §5):
 
-  problem     — LinearSpec / TriangularSpec canonical forms + DPProblem,
-                Answer / LinearPath / TriangularPath reconstruction types
+  problem     — the spec-family protocol (FAMILIES registry, hook table,
+                DESIGN.md §3) + LinearSpec / TriangularSpec / GridSpec
+                canonical forms, DPProblem, Answer / LinearPath /
+                TriangularPath / GridPath reconstruction types
   registry    — name -> DPProblem (the zoo populates it at import)
   backends    — solver routes registered by core/sdp, core/mcm,
-                core/blocked_mcm and kernels at their import time
+                core/blocked_mcm, core/grid and kernels at their import
   zoo         — edit_distance, lcs, viterbi, unbounded_knapsack, mcm,
-                optimal_bst, polygon_triangulation, sdp (all decodable)
+                optimal_bst, polygon_triangulation, sdp, and the grid
+                family: needleman_wunsch, gotoh, cky, edit_distance_grid,
+                lcs_grid (all decodable)
   autotune    — measured-latency calibration tables; calibrate() /
                 routing_report(); the engine's online feedback sink
   routing     — two-tier (measured > analytical) dispatch + single-call
@@ -44,8 +48,8 @@ from repro.dp.routing import batch_solve, batch_solve_specs, dispatch, solve, so
 route = dispatch
 from repro.dp.engine import DPEngine, DPRequest, DPResponse  # noqa: F401
 from repro.dp.problem import (  # noqa: F401
-    Answer, DPProblem, LinearPath, LinearSpec, Spec, TriangularPath,
-    TriangularSpec, spec_digest)
+    Answer, DPProblem, GridPath, GridSpec, LinearPath, LinearSpec, Spec,
+    TriangularPath, TriangularSpec, spec_digest)
 from repro.dp.registry import get as get_problem  # noqa: F401
 from repro.dp.registry import names as problem_names  # noqa: F401
 from repro.dp.registry import problems  # noqa: F401
@@ -56,7 +60,8 @@ from repro.dp import service, sharding, telemetry  # noqa: F401
 
 __all__ = [
     "AdmissionError", "Answer", "DPEngine", "DPProblem", "DPRequest",
-    "DPResponse", "DPService", "LinearPath", "LinearSpec", "ServiceResult",
+    "DPResponse", "DPService", "GridPath", "GridSpec", "LinearPath",
+    "LinearSpec", "ServiceResult",
     "ShardContext", "ShardedDPEngine", "Span", "Spec", "TriangularPath",
     "TriangularSpec", "autotune", "backends", "batch_solve",
     "batch_solve_specs", "calibrate", "dispatch", "route", "get_problem",

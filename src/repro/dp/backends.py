@@ -17,14 +17,14 @@ one-device-call property without timing heuristics.
 from __future__ import annotations
 
 import dataclasses
-import math
 import threading
 from collections import OrderedDict
 from typing import Callable, Optional
 
 import numpy as np
 
-from repro.dp.problem import LinearSpec, Spec, TriangularSpec, num_cells
+from repro.dp.problem import (LinearSpec, Spec, TriangularSpec,
+                              family_class)
 
 #: (backend_name, shape_key) appended every time a batched callable is traced.
 #: Bounded at :data:`TRACE_LOG_MAX` (oldest entries dropped) so a long-running
@@ -161,6 +161,7 @@ def ensure_registered() -> None:
     import repro.core.sdp  # noqa: F401  (registers linear solvers)
     import repro.core.mcm  # noqa: F401  (registers triangular solvers)
     import repro.core.blocked_mcm  # noqa: F401  (tropical-GEMM tiling)
+    import repro.core.grid  # noqa: F401  (registers grid wavefront solvers)
     import repro.kernels  # noqa: F401  (Pallas-backed blocked route)
     # only after every registering import succeeded — a failure above must
     # surface again on the next call, not leave a silently partial registry
@@ -348,71 +349,101 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
                    doc=doc)
 
 
+def grid_backend(name: str, jax_fn: Callable, cost: Callable,
+                 supports: Optional[Callable] = None,
+                 jax_arg_fn: Optional[Callable] = None,
+                 cache_tag: Optional[Callable] = None,
+                 doc: str = "") -> Backend:
+    """Wrap a grid wavefront solver ``fn(arrs, meta)`` — ``arrs`` the
+    spec's ``device_arrays()`` slot tuple, ``meta`` its hashable
+    ``static_meta()`` — with a vmapped batch path. Instances sharing a
+    shape_key share ``meta`` and array shapes, so the batch runner stacks
+    each slot and vmaps over all of them in one jitted call (slot count is
+    schedule-dependent; the single leading ``in_specs`` prefix of a sharded
+    context's ``wrap`` covers any arity). ``jax_arg_fn`` (same signature,
+    returns ``(st, args)``) adds the arg-capability pair; ``supports`` and
+    ``cache_tag`` as in :func:`linear_backend`."""
+    import jax
+    import jax.numpy as jnp
+
+    tag = _cache_tagger(cache_tag)
+
+    def run(spec) -> np.ndarray:
+        arrs = tuple(jnp.asarray(a) for a in spec.device_arrays())
+        return np.asarray(jax_fn(arrs, spec.static_meta()))
+
+    def _batch(fn, specs, key, sharding=None):
+        spec0 = specs[0]
+        meta = spec0.static_meta()
+        slots = list(zip(*(s.device_arrays() for s in specs)))
+
+        def build():
+            def call(*stacked):
+                log_trace(key)
+                return jax.vmap(lambda *a: fn(a, meta))(*stacked)
+
+            if sharding is None:
+                return jax.jit(call)
+            return sharding.wrap(call)
+
+        cached = lru_cached(_BATCH_CACHE, key, build, _BATCH_CACHE_MAX)
+        place = sharding.place if sharding is not None else (lambda x: x)
+        stacked = tuple(place(jnp.stack([jnp.asarray(a) for a in slot]))
+                        for slot in slots)
+        return cached(*stacked)
+
+    def _batch_key(specs, sharding) -> tuple:
+        shard_tag = sharding.cache_suffix() if sharding is not None else ()
+        return (name, specs[0].shape_key()) + tag() + shard_tag
+
+    def batch_run(specs, sharding=None) -> list:
+        return list(np.asarray(_batch(
+            jax_fn, specs, _batch_key(specs, sharding), sharding)))
+
+    run_with_args = batch_run_with_args = None
+    if jax_arg_fn is not None:
+        def run_with_args(spec):
+            arrs = tuple(jnp.asarray(a) for a in spec.device_arrays())
+            st, args = jax_arg_fn(arrs, spec.static_meta())
+            return np.asarray(st), np.asarray(args)
+
+        def batch_run_with_args(specs, sharding=None):
+            sts, argss = _batch(jax_arg_fn, specs,
+                                _batch_key(specs, sharding) + ("args",),
+                                sharding)
+            return list(np.asarray(sts)), list(np.asarray(argss))
+
+    return Backend(name=name, geometry="grid", run=run, cost=cost,
+                   supports=supports or (lambda s: True),
+                   batch_run=batch_run, run_with_args=run_with_args,
+                   batch_run_with_args=batch_run_with_args, doc=doc)
+
+
 # shared cost vocabulary -----------------------------------------------------
-def _log2(x: float) -> float:
-    return math.log2(max(x, 2.0))
-
-
-#: n below which the analytical prior prices fixed dispatch overhead: at
-#: tiny n the solve itself is a handful of device steps, so the per-route
-#: launch/gather/vmap machinery dominates wall time. Without these floors
-#: the step-count model calls every fancy route ~free at n ≤ 16 and the
-#: unmeasured prior routes small instances to device pipelines that lose to
-#: the plain sequential loop (the PR-4 dispatch-regret regression).
-_SMALL_N = 16
-#: per-route fixed-overhead floors, in the same 'vectorized device steps'
-#: unit — rough dispatch-cost ranks, not measurements (calibration
-#: overwrites them with real timings).
-_LINEAR_OVERHEAD = {"sequential": 0.0, "tournament": 8.0, "pipeline": 8.0,
-                    "blocked": 6.0, "companion_scan": 16.0}
-_TRIANGULAR_OVERHEAD = {"wavefront": 0.0, "mcm_pipeline": 64.0,
-                        "blocked_mcm": 24.0, "tiled_wavefront": 0.0}
+# The per-family step-count tables live on the spec classes
+# (``Spec.route_costs()``, repro.dp.problem) — one hook per family instead
+# of one function per family here. The named wrappers below are the stable
+# entry points the registering solver modules and the docs reference.
+def route_costs(spec: Spec) -> dict:
+    """Analytical step-count costs of every named route of ``spec``'s
+    family (the family's ``route_costs`` hook). Units are 'vectorized
+    device steps'; calibration overwrites them with measured timings."""
+    return spec.route_costs()
 
 
 def linear_costs(spec: LinearSpec) -> dict:
-    """Step-count cost model for the linear solver family (§III of the
-    paper + DESIGN.md §3). Units are 'vectorized device steps'. Every count
-    is floored at one step: a preset-only table (n ≤ a_1, constructible
-    without ``validate()``) gives ``ceil((n-a1)/B) = 0``, which let
-    ``blocked`` degenerately auto-win at cost 0. Below ``_SMALL_N`` each
-    route additionally pays its fixed dispatch-overhead floor."""
-    n, k = spec.n, len(spec.offsets)
-    a1, ak = int(spec.offsets[0]), int(spec.offsets[-1])
-    blocked_steps = max(1, math.ceil((n - a1) / max(1, min(ak, 512))))
-    costs = {
-        "sequential": float(n * k),
-        "tournament": float(n * (1.0 + _log2(k))),
-        "pipeline": float(n + k - a1 - 1),
-        "blocked": blocked_steps * (1.0 + _log2(k)),
-        # log-depth scan, O(n·a1³) work spread over the vector units
-        "companion_scan": _log2(n) * (a1 ** 3) / 64.0 + a1,
-    }
-    if n <= _SMALL_N:
-        costs = {name: c + _LINEAR_OVERHEAD[name]
-                 for name, c in costs.items()}
-    return {name: max(1.0, c) for name, c in costs.items()}
+    """Linear-family route costs (``LinearSpec.route_costs``)."""
+    return spec.route_costs()
 
 
 def triangular_costs(spec: TriangularSpec) -> dict:
-    """Step-count cost model for the triangular solver family (the §3/§6
-    vocabulary, consolidated here like :func:`linear_costs` so every
-    registering module prices against the same table). Units are
-    'vectorized device steps'; floored at one step like the linear family."""
-    n, cells = spec.n, num_cells(spec.n)
-    costs = {
-        "wavefront": float(n),                  # one masked combine/diagonal
-        "mcm_pipeline": float(cells + n),       # Fig.-8 skewed head + drain
-        # O(n) wavefront depth with GEMM-fed combines: favored beyond n ≈ 64
-        "blocked_mcm": float(n) * 0.75 + 16.0,
-        # O(n) wavefront depth over banded tiles: the dense masked combine
-        # pays ~2× the band's work per diagonal, the tile loop doesn't — it
-        # overtakes wavefront past the flat streaming-setup term
-        "tiled_wavefront": float(n) * 0.85 + 24.0,
-    }
-    if n <= _SMALL_N:
-        costs = {name: c + _TRIANGULAR_OVERHEAD[name]
-                 for name, c in costs.items()}
-    return {name: max(1.0, c) for name, c in costs.items()}
+    """Triangular-family route costs (``TriangularSpec.route_costs``)."""
+    return spec.route_costs()
+
+
+def grid_costs(spec) -> dict:
+    """Grid-family route costs (``GridSpec.route_costs``)."""
+    return spec.route_costs()
 
 
 # shape-key plumbing for the calibration layer (repro.dp.autotune) ----------
@@ -443,43 +474,38 @@ def split_shape_key(key: tuple) -> tuple:
 
 
 def shape_key_size(key: tuple) -> int:
-    """The table length n encoded in a ``Spec.shape_key()``."""
+    """The table size encoded in a ``Spec.shape_key()`` (the family's
+    ``shape_key_size`` hook — table length n for the 1-D families,
+    rows·cols for grids)."""
     key, _ = split_shape_key(key)
-    return int(key[3]) if key[0] == "linear" else int(key[1])
+    return family_class(key[0]).shape_key_size(key)
 
 
 def shape_key_distance(a: tuple, b: tuple) -> Optional[float]:
     """How far apart two shape_keys are for nearest-shape calibration
-    transfer: ``None`` when a measurement cannot transfer at all — different
-    geometry, op, offsets, or weightedness (those change the traced program,
-    not just its size), or different measurement regimes (amortized batch,
-    reconstruct, and single-instance timings are incomparable) — else the
-    table-length gap ``|n_a - n_b|``."""
+    transfer: ``None`` when a measurement cannot transfer at all —
+    different family (never scale a linear timing onto a grid route),
+    different measurement regimes (amortized batch, reconstruct, and
+    single-instance timings are incomparable), or structure the family's
+    ``shape_key_compatible`` hook rejects (op, offsets, weightedness,
+    schedule, planes, moves — anything that changes the traced program,
+    not just its size) — else the table-size gap."""
     a, regime_a = split_shape_key(a)
     b, regime_b = split_shape_key(b)
-    if regime_a != regime_b or len(a) != len(b) or a[0] != b[0]:
+    if regime_a != regime_b or a[0] != b[0]:
         return None
-    if a[0] == "linear" and (a[1], a[2], a[4]) != (b[1], b[2], b[4]):
+    cls = family_class(a[0])
+    if not cls.shape_key_compatible(a, b):
         return None
-    return float(abs(shape_key_size(a) - shape_key_size(b)))
+    return float(abs(cls.shape_key_size(a) - cls.shape_key_size(b)))
 
 
 def spec_from_shape_key(key: tuple) -> Spec:
-    """Phantom spec carrying exactly the structure the cost models read
-    (n, offsets, op, weightedness) — lets the analytical model price a
-    calibration entry's shape without the original instance, which is what
-    autotune's nearest-shape interpolation uses as its scaling prior.
-    Regime suffixes are stripped — the cost models only read the geometric
-    part."""
+    """Phantom spec carrying exactly the structure the cost models read —
+    lets the analytical model price a calibration entry's shape without the
+    original instance, which is what autotune's nearest-shape interpolation
+    uses as its scaling prior. Regime suffixes are stripped — the cost
+    models only read the geometric part. Per-family construction is the
+    ``from_shape_key`` hook."""
     key, _ = split_shape_key(key)
-    if key[0] == "linear":
-        _, op, offsets, n, weighted = key
-        offsets = tuple(int(a) for a in offsets)
-        n, k = int(n), len(offsets)
-        return LinearSpec(
-            offsets=offsets, op=op, n=n,
-            init=np.zeros(offsets[0], np.float32),
-            weights=np.zeros((n, k), np.float32) if weighted else None)
-    n = int(key[1])
-    return TriangularSpec(
-        n=n, weights=np.zeros((num_cells(n), max(n - 1, 1)), np.float32))
+    return family_class(key[0]).from_shape_key(key)

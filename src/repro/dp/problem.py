@@ -2,7 +2,16 @@
 the solver backends (DESIGN.md §3).
 
 A *spec* is the canonical, fully-materialized form of one problem instance.
-Two geometries cover every scenario in the zoo:
+Spec classes form an open **family protocol**: each family (a dataclass with
+a ``family`` tag) registers itself via :func:`register_family` and carries
+every family-specific behaviour as hooks on the class — shape-key tagging
+and compatibility, phantom-spec reconstruction, the route cost vocabulary,
+digest hashing, argument/traceback support — so the dispatch, calibration,
+reconstruction, engine, and sharding layers stay family-agnostic. Adding a
+fourth family is: write the dataclass + hooks, register it, register
+solvers for it.
+
+Three families cover the zoo today:
 
 ``LinearSpec`` — the paper's (weighted) S-DP recurrence on a 1-D table:
 
@@ -23,6 +32,18 @@ Two geometries cover every scenario in the zoo:
   are all instances; MCM-shaped specs additionally carry ``dims`` so
   GEMM-structured backends (tropical-tile ``blocked_mcm``) stay eligible.
 
+``GridSpec`` — multi-plane 2-D tables solved wavefront-by-wavefront
+  (DESIGN.md §9). Two schedules share the family:
+
+  * ``"antidiag"`` — alignment grids: every cell combines *shift moves*
+    ``(p_to, p_from, di, dj)`` with per-cell weight planes; cells on one
+    anti-diagonal ``i + j = t`` are independent (Needleman–Wunsch, Gotoh
+    affine-gap with its M/X/Y planes, edit distance, LCS).
+  * ``"spandiag"`` — parse charts: the triangular split recurrence
+    generalized to planes, combining *binary rules*
+    ``(p_to, p_left, p_right)`` over every split (CKY parsing with
+    planes = nonterminals).
+
 A ``DPProblem`` bundles the instance encoder with a *numpy oracle* (an
 independent reference implementation), an answer extractor, and a random
 instance sampler — everything tests, the dispatcher, and the benchmark
@@ -32,7 +53,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Any, Callable, Optional, Union
+import math
+from typing import Any, Callable, ClassVar, Optional, Union
 
 import numpy as np
 
@@ -47,6 +69,58 @@ def lin_index(i, d, n):
     return d * n - (d * (d - 1)) // 2 + i
 
 
+# --- the family registry -----------------------------------------------------
+#: family tag -> spec class. Open: new families register themselves and every
+#: family-generic layer (backends, routing, autotune, reconstruct, engine,
+#: sharding, registry) resolves behaviour through the class hooks.
+FAMILIES: dict = {}
+
+
+def register_family(cls):
+    """Register a spec family class (keyed by its ``family`` tag)."""
+    if cls.family in FAMILIES:
+        raise ValueError(f"duplicate spec family {cls.family!r}")
+    FAMILIES[cls.family] = cls
+    return cls
+
+
+def family_class(tag: str):
+    """Spec class of a family tag (the first element of a shape_key)."""
+    try:
+        return FAMILIES[tag]
+    except KeyError:
+        raise KeyError(f"unknown spec family {tag!r}; "
+                       f"registered: {sorted(FAMILIES)}") from None
+
+
+# --- shared cost-vocabulary constants (see route_costs hooks) ---------------
+def _log2(x: float) -> float:
+    return math.log2(max(x, 2.0))
+
+
+#: n below which the analytical prior prices fixed dispatch overhead: at
+#: tiny n the solve itself is a handful of device steps, so the per-route
+#: launch/gather/vmap machinery dominates wall time. Without these floors
+#: the step-count model calls every fancy route ~free at n ≤ 16 and the
+#: unmeasured prior routes small instances to device pipelines that lose to
+#: the plain sequential loop (the PR-4 dispatch-regret regression).
+_SMALL_N = 16
+#: per-route fixed-overhead floors, in the same 'vectorized device steps'
+#: unit — rough dispatch-cost ranks, not measurements (calibration
+#: overwrites them with real timings).
+_LINEAR_OVERHEAD = {"sequential": 0.0, "tournament": 8.0, "pipeline": 8.0,
+                    "blocked": 6.0, "companion_scan": 16.0}
+_TRIANGULAR_OVERHEAD = {"wavefront": 0.0, "mcm_pipeline": 64.0,
+                        "blocked_mcm": 24.0, "tiled_wavefront": 0.0}
+_GRID_OVERHEAD = {"grid_wavefront": 0.0}
+
+
+def _floored(costs: dict, overhead: dict, n: int) -> dict:
+    if n <= _SMALL_N:
+        costs = {name: c + overhead[name] for name, c in costs.items()}
+    return {name: max(1.0, c) for name, c in costs.items()}
+
+
 @dataclasses.dataclass(frozen=True)
 class LinearSpec:
     """Weighted S-DP instance: table length ``n``, strictly-decreasing
@@ -59,12 +133,18 @@ class LinearSpec:
     init: np.ndarray
     weights: Optional[np.ndarray] = None
 
+    family: ClassVar[str] = "linear"
+    #: whether traceback entry points (problem ``start`` hooks) apply
+    uses_start: ClassVar[bool] = True
+
     @property
     def geometry(self) -> str:
-        return "linear"
+        return self.family
 
     def shape_key(self) -> tuple:
-        """Instances with equal keys can be vmapped into one device call."""
+        """Instances with equal keys can be vmapped into one device call.
+        The first element is always the family tag (the calibration layer's
+        cross-family firewall)."""
         return ("linear", self.op, tuple(int(a) for a in self.offsets),
                 int(self.n), self.weights is not None)
 
@@ -80,6 +160,116 @@ class LinearSpec:
             raise ValueError(f"weights must be (n, k)=({self.n}, {a.size}), "
                              f"got {self.weights.shape}")
 
+    # --- family protocol hooks ---------------------------------------------
+    def digest_into(self, h) -> None:
+        h.update(b"linear")
+        h.update(self.op.encode())
+        h.update(repr(tuple(int(a) for a in self.offsets)).encode())
+        h.update(str(int(self.n)).encode())
+        _hash_array(h, self.init)
+        _hash_array(h, self.weights)
+
+    @classmethod
+    def shape_key_size(cls, key: tuple) -> int:
+        return int(key[3])
+
+    @classmethod
+    def shape_key_compatible(cls, a: tuple, b: tuple) -> bool:
+        """Same traced program modulo table length: op, offsets, and
+        weightedness must match (those change the program, not its size)."""
+        return len(a) == len(b) and (a[1], a[2], a[4]) == (b[1], b[2], b[4])
+
+    @classmethod
+    def from_shape_key(cls, key: tuple) -> "LinearSpec":
+        _, op, offsets, n, weighted = key
+        offsets = tuple(int(a) for a in offsets)
+        n, k = int(n), len(offsets)
+        return cls(offsets=offsets, op=op, n=n,
+                   init=np.zeros(offsets[0], np.float32),
+                   weights=np.zeros((n, k), np.float32) if weighted else None)
+
+    def route_costs(self) -> dict:
+        """Step-count cost model for the linear solver family (§III of the
+        paper + DESIGN.md §3). Units are 'vectorized device steps'. Every
+        count is floored at one step: a preset-only table (n ≤ a_1,
+        constructible without ``validate()``) gives ``ceil((n-a1)/B) = 0``,
+        which let ``blocked`` degenerately auto-win at cost 0. Below
+        ``_SMALL_N`` each route additionally pays its fixed
+        dispatch-overhead floor."""
+        n, k = self.n, len(self.offsets)
+        a1, ak = int(self.offsets[0]), int(self.offsets[-1])
+        blocked_steps = max(1, math.ceil((n - a1) / max(1, min(ak, 512))))
+        costs = {
+            "sequential": float(n * k),
+            "tournament": float(n * (1.0 + _log2(k))),
+            "pipeline": float(n + k - a1 - 1),
+            "blocked": blocked_steps * (1.0 + _log2(k)),
+            # log-depth scan, O(n·a1³) work spread over the vector units
+            "companion_scan": _log2(n) * (a1 ** 3) / 64.0 + a1,
+        }
+        return _floored(costs, _LINEAR_OVERHEAD, n)
+
+    def supports_args(self) -> bool:
+        """Linear specs need a selective semigroup (min/max — op="add"
+        folds every lane, so there is no winning argument)."""
+        return self.op in ("min", "max")
+
+    def args_unsupported_reason(self) -> str:
+        return f"op={self.op!r} folds every lane"
+
+    def default_start(self, table) -> int:
+        return self.n - 1
+
+    def args_from_table(self, table: np.ndarray) -> np.ndarray:
+        from repro.core.sdp import linear_args_np
+
+        return linear_args_np(table, self.offsets, self.op,
+                              weights=self.weights)
+
+    def traceback_host(self, args: np.ndarray, start: int = -1) -> "Path":
+        from repro.core.sdp import linear_traceback_np
+
+        cells, lanes, stop = linear_traceback_np(
+            args, self.offsets, start if start >= 0 else self.n - 1)
+        return LinearPath(cells=cells, lanes=lanes, stop=int(stop))
+
+    def traceback_program(self):
+        """(key, build, post) of the batched device traceback: ``build``
+        returns the jitted vmapped walk (logging ``key`` to the TRACE_LOG
+        at trace time), ``post(walk, argss, starts)`` executes it and
+        unpacks per-instance paths."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.sdp import linear_traceback
+        from repro.dp import backends as _backends
+
+        offsets, n = self.offsets, self.n
+        key = ("traceback", "linear", offsets, n)
+
+        def build():
+            def call(args_b, starts_b):
+                _backends.log_trace(key)
+                return jax.vmap(
+                    lambda a, s: linear_traceback(a, offsets, n, s)
+                )(args_b, starts_b)
+
+            return jax.jit(call)
+
+        def post(walk, argss, starts):
+            if starts is None:
+                starts = [n - 1] * len(argss)
+            cells, lanes, valid, stop = walk(
+                jnp.stack([jnp.asarray(a) for a in argss]),
+                jnp.asarray(np.asarray(starts, dtype=np.int32)))
+            cells, lanes = np.asarray(cells), np.asarray(lanes)
+            valid, stop = np.asarray(valid), np.asarray(stop)
+            return [LinearPath(cells=cells[b][valid[b]],
+                               lanes=lanes[b][valid[b]], stop=int(stop[b]))
+                    for b in range(len(argss))]
+
+        return key, build, post
+
 
 @dataclasses.dataclass(frozen=True)
 class TriangularSpec:
@@ -91,9 +281,12 @@ class TriangularSpec:
     weights: np.ndarray
     dims: Optional[np.ndarray] = None
 
+    family: ClassVar[str] = "triangular"
+    uses_start: ClassVar[bool] = False
+
     @property
     def geometry(self) -> str:
-        return "triangular"
+        return self.family
 
     def shape_key(self) -> tuple:
         return ("triangular", int(self.n))
@@ -105,8 +298,341 @@ class TriangularSpec:
         if self.dims is not None and len(self.dims) != self.n + 1:
             raise ValueError(f"dims must have n+1={self.n + 1} entries")
 
+    # --- family protocol hooks ---------------------------------------------
+    def digest_into(self, h) -> None:
+        h.update(b"triangular")
+        h.update(str(int(self.n)).encode())
+        _hash_array(h, self.weights)
+        _hash_array(h, self.dims)
 
-Spec = Union[LinearSpec, TriangularSpec]
+    @classmethod
+    def shape_key_size(cls, key: tuple) -> int:
+        return int(key[1])
+
+    @classmethod
+    def shape_key_compatible(cls, a: tuple, b: tuple) -> bool:
+        return len(a) == len(b)
+
+    @classmethod
+    def from_shape_key(cls, key: tuple) -> "TriangularSpec":
+        n = int(key[1])
+        return cls(n=n,
+                   weights=np.zeros((num_cells(n), max(n - 1, 1)), np.float32))
+
+    def route_costs(self) -> dict:
+        """Step-count cost model for the triangular solver family (the
+        §3/§6 vocabulary; one shared table so every registering module
+        prices against the same figures). Units and floors as in
+        :meth:`LinearSpec.route_costs`."""
+        n, cells = self.n, num_cells(self.n)
+        costs = {
+            "wavefront": float(n),                  # one masked combine/diagonal
+            "mcm_pipeline": float(cells + n),       # Fig.-8 skewed head + drain
+            # O(n) wavefront depth with GEMM-fed combines: favored beyond n ≈ 64
+            "blocked_mcm": float(n) * 0.75 + 16.0,
+            # O(n) wavefront depth over banded tiles: the dense masked combine
+            # pays ~2× the band's work per diagonal, the tile loop doesn't — it
+            # overtakes wavefront past the flat streaming-setup term
+            "tiled_wavefront": float(n) * 0.85 + 24.0,
+        }
+        return _floored(costs, _TRIANGULAR_OVERHEAD, n)
+
+    def supports_args(self) -> bool:
+        """Triangular specs always reduce by min — always selective."""
+        return True
+
+    def args_unsupported_reason(self) -> str:
+        return "no argument structure"
+
+    def default_start(self, table) -> int:
+        return -1
+
+    def args_from_table(self, table: np.ndarray) -> np.ndarray:
+        from repro.core.mcm import triangular_args_np
+
+        return triangular_args_np(table, self.weights, self.n)
+
+    def traceback_host(self, args: np.ndarray, start: int = -1) -> "Path":
+        from repro.core.mcm import triangular_traceback_np
+
+        return TriangularPath(nodes=triangular_traceback_np(args, self.n))
+
+    def traceback_program(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.mcm import triangular_traceback
+        from repro.dp import backends as _backends
+
+        n = self.n
+        key = ("traceback", "triangular", n)
+
+        def build():
+            def call(args_b):
+                _backends.log_trace(key)
+                return jax.vmap(lambda a: triangular_traceback(a, n))(args_b)
+
+            return jax.jit(call)
+
+        def post(walk, argss, starts):
+            ii, dd, ee = walk(jnp.stack([jnp.asarray(a) for a in argss]))
+            nodes = np.stack([np.asarray(ii), np.asarray(dd), np.asarray(ee)],
+                             axis=2)
+            return [TriangularPath(nodes=nodes[b].astype(np.int64))
+                    for b in range(len(argss))]
+
+        return key, build, post
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Multi-plane 2-D wavefront instance (DESIGN.md §9).
+
+    ``schedule="antidiag"`` (alignment grids): the table is ``planes``
+    stacked ``(rows, cols)`` grids; *shift moves* ``(p_to, p_from, di, dj)``
+    (``di + dj ≥ 1``) each carry a per-cell weight plane
+    ``weights[ℓ] (rows, cols)``;
+
+        ST[p, i, j] = op_{ℓ: p_to=p} ( ST[p_from, i-di, j-dj] + w_ℓ[i, j] )
+
+    with preset cells given by ``init``/``init_mask`` (``(planes, rows,
+    cols)``). Out-of-grid or invalid moves must be masked with the semiring
+    zero (±inf) in their weight plane. Public table/args layout: row-major
+    ``(planes·rows·cols,)`` flat by ``(p, i, j)``.
+
+    ``schedule="spandiag"`` (parse charts; ``rows == cols == n``): the
+    triangular split recurrence over planes — cell ``(p, i, i+d)`` combines
+    *binary rules* ``(p_to, p_left, p_right)`` with scalar log-weights
+    ``rule_weights[r]`` over every split offset ``e``:
+
+        ST[A, lin(i,d)] = op_{e, r: p_to=A}
+            ( ST[B, lin(i,e)] + ST[C, lin(i+e+1, d-e-1)] + rw[r] )
+
+    with diagonal 0 preset from ``init`` (``(planes, n)``: per-position
+    per-plane leaf scores). Layout: ``(planes·num_cells(n),)`` flat,
+    diagonal-major per plane. The packed arg of a cell is
+    ``e·len(rules) + r``.
+    """
+
+    rows: int
+    cols: int
+    op: str
+    schedule: str
+    planes: int = 1
+    moves: tuple = ()
+    rules: tuple = ()
+    weights: Optional[np.ndarray] = None
+    rule_weights: Optional[np.ndarray] = None
+    init: Optional[np.ndarray] = None
+    init_mask: Optional[np.ndarray] = None
+
+    family: ClassVar[str] = "grid"
+    uses_start: ClassVar[bool] = True
+
+    @property
+    def geometry(self) -> str:
+        return self.family
+
+    @property
+    def cells(self) -> int:
+        """Cells per plane (schedule-dependent layout length)."""
+        if self.schedule == "spandiag":
+            return num_cells(self.rows)
+        return self.rows * self.cols
+
+    def shape_key(self) -> tuple:
+        return ("grid", self.schedule, self.op, int(self.planes),
+                int(self.rows), int(self.cols),
+                tuple(tuple(int(v) for v in m) for m in self.moves),
+                tuple(tuple(int(v) for v in r) for r in self.rules))
+
+    def validate(self) -> None:
+        if self.op not in ("min", "max"):
+            raise ValueError(f"grid op must be min or max, got {self.op!r}")
+        if self.schedule not in ("antidiag", "spandiag"):
+            raise ValueError(f"unknown grid schedule {self.schedule!r}")
+        if self.planes < 1 or self.rows < 1 or self.cols < 1:
+            raise ValueError("planes, rows, cols must be positive")
+        if self.schedule == "antidiag":
+            if self.rules:
+                raise ValueError("antidiag grids take shift moves, not rules")
+            if not self.moves:
+                raise ValueError("antidiag grids need at least one move")
+            for m in self.moves:
+                p_to, p_from, di, dj = m
+                if not (0 <= p_to < self.planes and 0 <= p_from < self.planes):
+                    raise ValueError(f"move {m} references a plane out of range")
+                if di < 0 or dj < 0 or di + dj < 1:
+                    raise ValueError(f"move {m} must step strictly forward "
+                                     "(di, dj >= 0, di + dj >= 1)")
+            shape = (len(self.moves), self.rows, self.cols)
+            if self.weights is None or self.weights.shape != shape:
+                raise ValueError(f"weights must be {shape}, got "
+                                 f"{None if self.weights is None else self.weights.shape}")
+            pshape = (self.planes, self.rows, self.cols)
+            if self.init is None or self.init.shape != pshape:
+                raise ValueError(f"init must be {pshape}")
+            if self.init_mask is None or self.init_mask.shape != pshape:
+                raise ValueError(f"init_mask must be {pshape}")
+            if not bool(np.all(self.init_mask[:, 0, 0])):
+                raise ValueError("cell (0, 0) must be preset on every plane "
+                                 "(no move can reach it)")
+        else:
+            if self.moves:
+                raise ValueError("spandiag grids take rules, not shift moves")
+            if not self.rules:
+                raise ValueError("spandiag grids need at least one rule")
+            if self.rows != self.cols or self.rows < 2:
+                raise ValueError("spandiag grids need rows == cols >= 2")
+            for r in self.rules:
+                if len(r) != 3 or not all(0 <= p < self.planes for p in r):
+                    raise ValueError(f"rule {r} references a plane out of range")
+            if (self.rule_weights is None
+                    or self.rule_weights.shape != (len(self.rules),)):
+                raise ValueError(f"rule_weights must be ({len(self.rules)},)")
+            if self.init is None or self.init.shape != (self.planes, self.rows):
+                raise ValueError(f"init must be ({self.planes}, {self.rows})")
+
+    # --- family protocol hooks ---------------------------------------------
+    def digest_into(self, h) -> None:
+        h.update(b"grid")
+        h.update(self.schedule.encode())
+        h.update(self.op.encode())
+        h.update(repr((int(self.planes), int(self.rows),
+                       int(self.cols))).encode())
+        h.update(repr(self.shape_key()[6:]).encode())   # moves, rules
+        _hash_array(h, self.weights)
+        _hash_array(h, self.rule_weights)
+        _hash_array(h, self.init)
+        _hash_array(h, None if self.init_mask is None
+                    else self.init_mask.astype(np.uint8))
+
+    @classmethod
+    def shape_key_size(cls, key: tuple) -> int:
+        return int(key[4]) * int(key[5])
+
+    @classmethod
+    def shape_key_compatible(cls, a: tuple, b: tuple) -> bool:
+        """Only the grid extents may differ: schedule, op, planes, moves,
+        and rules all change the traced program."""
+        return (len(a) == len(b)
+                and (a[1], a[2], a[3], a[6], a[7])
+                == (b[1], b[2], b[3], b[6], b[7]))
+
+    @classmethod
+    def from_shape_key(cls, key: tuple) -> "GridSpec":
+        _, schedule, op, planes, rows, cols, moves, rules = key
+        planes, rows, cols = int(planes), int(rows), int(cols)
+        if schedule == "antidiag":
+            mask = np.zeros((planes, rows, cols), bool)
+            mask[:, 0, 0] = True          # the minimal valid preset set
+            return cls(rows=rows, cols=cols, op=op, schedule=schedule,
+                       planes=planes, moves=moves,
+                       weights=np.zeros((len(moves), rows, cols), np.float32),
+                       init=np.zeros((planes, rows, cols), np.float32),
+                       init_mask=mask)
+        return cls(rows=rows, cols=cols, op=op, schedule=schedule,
+                   planes=planes, rules=rules,
+                   rule_weights=np.zeros((len(rules),), np.float32),
+                   init=np.zeros((planes, rows), np.float32))
+
+    def route_costs(self) -> dict:
+        """Step-count model for the grid family: one masked combine per
+        wavefront — ``rows + cols - 1`` anti-diagonals, or ``rows``
+        span-diagonals — times the per-front fan-in (planes × moves, or the
+        rule count). Same units and small-n floors as the other families."""
+        if self.schedule == "antidiag":
+            fronts = self.rows + self.cols - 1
+            fan = max(1, len(self.moves))
+        else:
+            fronts = self.rows
+            fan = max(1, len(self.rules))
+        costs = {"grid_wavefront": float(fronts) * (1.0 + _log2(fan) / 4.0)}
+        return _floored(costs, _GRID_OVERHEAD,
+                        min(self.rows, self.cols))
+
+    def supports_args(self) -> bool:
+        return True         # validate() restricts op to min/max
+
+    def args_unsupported_reason(self) -> str:
+        return "no argument structure"
+
+    def default_start(self, table) -> int:
+        """Plane 0 at the far corner (antidiag) or the full-span root cell
+        (spandiag); problems with a different optimum define ``start``."""
+        if self.schedule == "spandiag":
+            return int(lin_index(0, self.rows - 1, self.rows))
+        return (self.rows - 1) * self.cols + (self.cols - 1)
+
+    # --- solver plumbing (consumed by backends.grid_backend) ----------------
+    def device_arrays(self) -> tuple:
+        """The per-instance arrays a grid solver consumes, in a fixed slot
+        order per schedule — the batch builder stacks each slot."""
+        if self.schedule == "antidiag":
+            return (np.asarray(self.weights, np.float32),
+                    np.asarray(self.init, np.float32),
+                    np.asarray(self.init_mask, np.float32))
+        return (np.asarray(self.rule_weights, np.float32),
+                np.asarray(self.init, np.float32))
+
+    def static_meta(self) -> tuple:
+        """Hashable structure-only tuple — the static argument of the grid
+        solvers (everything but the instance arrays)."""
+        return self.shape_key()[1:]
+
+    def args_from_table(self, table: np.ndarray) -> np.ndarray:
+        from repro.core.grid import grid_args_np
+
+        return grid_args_np(table, self)
+
+    def traceback_host(self, args: np.ndarray, start: int = -1) -> "Path":
+        from repro.core.grid import grid_traceback_np
+
+        return grid_traceback_np(
+            args, self, start if start >= 0 else self.default_start(None))
+
+    def traceback_program(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.grid import grid_traceback
+        from repro.dp import backends as _backends
+
+        meta = self.static_meta()
+        key = ("traceback",) + self.shape_key()
+        default = self.default_start(None)
+        spandiag = self.schedule == "spandiag"
+
+        def build():
+            def call(args_b, starts_b):
+                _backends.log_trace(key)
+                return jax.vmap(
+                    lambda a, s: grid_traceback(a, s, meta))(args_b, starts_b)
+
+            return jax.jit(call)
+
+        def post(walk, argss, starts):
+            if starts is None:
+                starts = [default] * len(argss)
+            out = walk(jnp.stack([jnp.asarray(a) for a in argss]),
+                       jnp.asarray(np.asarray(starts, dtype=np.int32)))
+            pp, aa, bb, vv, valid, stop = (np.asarray(x) for x in out)
+            paths = []
+            for b in range(len(argss)):
+                nodes = np.stack([pp[b], aa[b], bb[b], vv[b]],
+                                 axis=1)[valid[b]].astype(np.int64)
+                paths.append(GridPath(
+                    nodes=nodes, stop=-1 if spandiag else int(stop[b])))
+            return paths
+
+        return key, build, post
+
+
+Spec = Union[LinearSpec, TriangularSpec, GridSpec]
+
+register_family(LinearSpec)
+register_family(TriangularSpec)
+register_family(GridSpec)
 
 
 def _hash_array(h, a: Optional[np.ndarray]) -> None:
@@ -126,20 +652,10 @@ def spec_digest(spec: Spec) -> str:
     all functions of the spec, so equal digests imply bit-equal Answers.
     A problem whose answer depended on payload data *outside* its encoded
     spec would break this invariant (DESIGN.md §7) — encode() must
-    materialize everything answer-relevant."""
+    materialize everything answer-relevant. Hashing is a family hook
+    (``digest_into``) so new families join the contract by implementing it."""
     h = hashlib.sha256()
-    if spec.geometry == "linear":
-        h.update(b"linear")
-        h.update(spec.op.encode())
-        h.update(repr(tuple(int(a) for a in spec.offsets)).encode())
-        h.update(str(int(spec.n)).encode())
-        _hash_array(h, spec.init)
-        _hash_array(h, spec.weights)
-    else:
-        h.update(b"triangular")
-        h.update(str(int(spec.n)).encode())
-        _hash_array(h, spec.weights)
-        _hash_array(h, spec.dims)
+    spec.digest_into(h)
     return h.hexdigest()
 
 
@@ -165,7 +681,24 @@ class TriangularPath:
     nodes: np.ndarray
 
 
-Path = Union[LinearPath, TriangularPath]
+@dataclasses.dataclass(frozen=True)
+class GridPath:
+    """Argument structure of a grid table, as an ``(m, 4)`` node array.
+
+    antidiag: the walk in traceback order — node ``(plane, i, j, move)``
+    took shift move ``move`` into preset-region cell ``stop`` (flat
+    ``p·rows·cols + i·cols + j`` index).
+
+    spandiag: the parse tree in preorder — node ``(plane, i, d, a)`` with
+    packed arg ``a = e·len(rules) + r``: rule ``r`` split cell ``(i, i+d)``
+    at offset ``e`` into ``(p_left, i, e)`` and ``(p_right, i+e+1,
+    d-e-1)``; ``stop`` is -1 (leaves are implied by the rules)."""
+
+    nodes: np.ndarray
+    stop: int
+
+
+Path = Union[LinearPath, TriangularPath, GridPath]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,9 +735,9 @@ class DPProblem:
     sample(rng, size) -> dict         random instance kwargs (tests/benches)
     decode(table, args, spec, path)   structured solution from the arg
                                       traceback (None: no reconstruction)
-    start(table, spec) -> int         traceback start cell for linear
-                                      problems whose optimum is not the last
-                                      cell (None: default, table[-1])
+    start(table, spec) -> int         traceback start cell for families with
+                                      ``uses_start`` whose optimum is not the
+                                      default cell (None: spec default)
     """
 
     name: str

@@ -3,25 +3,35 @@
 The solve contract (DESIGN.md §5) has three stages:
 
   1. *args* — the per-cell winning argument (lane index for linear specs,
-     split offset for triangular ones). Arg-capable backends emit it device-
-     side alongside the cost table (``Backend.run_with_args``) — including
-     the Pallas kernel tier, whose arg stores are bit-identical to the jnp
-     solvers' (DESIGN.md §4/§5); for routes that only return costs,
-     :func:`args_from_table` recovers it on the host by re-ranking each
-     cell's candidates against the finished table.
+     split offset for triangular ones, move/packed-rule index for grids).
+     Arg-capable backends emit it device-side alongside the cost table
+     (``Backend.run_with_args``) — including the Pallas kernel tier, whose
+     arg stores are bit-identical to the jnp solvers' (DESIGN.md §4/§5);
+     for routes that only return costs, :func:`args_from_table` recovers it
+     on the host by re-ranking each cell's candidates against the finished
+     table.
   2. *path* — the argument structure actually used by the optimum: a lane
-     walk (:class:`LinearPath`) or a split tree in preorder
-     (:class:`TriangularPath`). :func:`traceback_batch` walks a whole
-     same-shape batch in ONE jitted vmapped ``lax.scan`` when the args came
-     from the device, and falls back to per-instance host walks otherwise.
+     walk (:class:`LinearPath`), a split tree in preorder
+     (:class:`TriangularPath`), or a move walk / rule tree
+     (:class:`GridPath`). :func:`traceback_batch` walks a whole same-shape
+     batch in ONE jitted vmapped ``lax.scan`` when the args came from the
+     device, and falls back to per-instance host walks otherwise.
   3. *decode* — ``DPProblem.decode(table, args, spec, path)`` turns the path
      into the problem-level answer (parenthesization tree, alignment ops,
-     state path, item multiset, …); :func:`reconstruct_one` wraps it all in
-     an :class:`Answer`.
+     state path, item multiset, parse tree, …); :func:`reconstruct_one`
+     wraps it all in an :class:`Answer`.
+
+Every family-specific step is a hook on the spec class (DESIGN.md §3):
+``supports_args``/``args_unsupported_reason`` (admission),
+``args_from_table`` (host fallback), ``uses_start``/``default_start``
+(traceback entry points), ``traceback_host`` (per-instance walk), and
+``traceback_program`` (the batched device walk). This module owns only the
+family-agnostic plumbing: admission, caching, start-cell resolution,
+batching, and telemetry.
 
 Traceback programs are cached per shape and append a
-``("traceback", geometry, …)`` entry to ``backends.TRACE_LOG`` at trace time,
-so tests can assert the one-program-per-bucket property for reconstruction
+``("traceback", …)`` entry to ``backends.TRACE_LOG`` at trace time, so
+tests can assert the one-program-per-bucket property for reconstruction
 exactly as they do for solves.
 """
 from __future__ import annotations
@@ -33,8 +43,7 @@ import numpy as np
 from collections import OrderedDict
 
 from repro.dp import backends as _backends
-from repro.dp.problem import (Answer, DPProblem, LinearPath, Path, Spec,
-                              TriangularPath)
+from repro.dp.problem import Answer, DPProblem, Path, Spec
 
 #: jit-callable cache for batched tracebacks, LRU-bounded like
 #: ``backends._BATCH_CACHE`` so long-running engines stay bounded.
@@ -43,10 +52,9 @@ _TRACEBACK_CACHE_MAX = 64
 
 
 def supports_args(spec: Spec) -> bool:
-    """Whether argument tracking is defined for this spec. Triangular specs
-    always reduce by min; linear specs need a selective semigroup (min/max —
-    op="add" folds every lane, so there is no winning argument)."""
-    return spec.geometry == "triangular" or spec.op in ("min", "max")
+    """Whether argument tracking is defined for this spec (the family's
+    ``supports_args`` hook — e.g. linear specs need a selective semigroup)."""
+    return spec.supports_args()
 
 
 def check_reconstructable(prob: DPProblem, spec: Spec) -> None:
@@ -56,102 +64,42 @@ def check_reconstructable(prob: DPProblem, spec: Spec) -> None:
     same reasons with the same message."""
     if prob.decode is None:
         raise ValueError(f"problem {prob.name!r} does not define decode()")
-    if not supports_args(spec):
+    if not spec.supports_args():
         raise ValueError(
             f"problem {prob.name!r} instance has no argument structure "
-            f"to reconstruct (op={spec.op!r} folds every lane)")
+            f"to reconstruct ({spec.args_unsupported_reason()})")
 
 
 def args_from_table(table: np.ndarray, spec: Spec) -> np.ndarray:
     """Numpy fallback: winning-argument table recomputed from a finished cost
     table (backends that only return costs)."""
-    if spec.geometry == "linear":
-        from repro.core.sdp import linear_args_np
-
-        return linear_args_np(table, spec.offsets, spec.op,
-                              weights=spec.weights)
-    from repro.core.mcm import triangular_args_np
-
-    return triangular_args_np(table, spec.weights, spec.n)
+    return spec.args_from_table(table)
 
 
 def start_cell(prob: DPProblem, table: np.ndarray, spec: Spec) -> int:
-    """Linear traceback entry point: the problem's ``start`` hook (e.g.
-    Viterbi's argmax over the last trellis row) or the last cell."""
+    """Traceback entry point: the problem's ``start`` hook (e.g. Viterbi's
+    argmax over the last trellis row, Gotoh's argmax over planes) or the
+    family default (last cell / far corner / root span)."""
     if prob.start is not None:
         return int(prob.start(table, spec))
-    return spec.n - 1
+    return int(spec.default_start(table))
 
 
 def traceback_host(args: np.ndarray, spec: Spec, start: int = -1) -> Path:
-    """Per-instance host walk (numpy)."""
-    if spec.geometry == "linear":
-        from repro.core.sdp import linear_traceback_np
-
-        cells, lanes, stop = linear_traceback_np(
-            args, spec.offsets, start if start >= 0 else spec.n - 1)
-        return LinearPath(cells=cells, lanes=lanes, stop=int(stop))
-    from repro.core.mcm import triangular_traceback_np
-
-    return TriangularPath(nodes=triangular_traceback_np(args, spec.n))
+    """Per-instance host walk (numpy; the family's ``traceback_host``)."""
+    return spec.traceback_host(args, start)
 
 
 def traceback_batch(argss: Sequence[np.ndarray], spec0: Spec,
                     starts: Optional[Sequence[int]] = None) -> list:
     """Device-side batched traceback: one jitted vmapped scan walks every arg
-    table of a same-shape batch. The callable is cached per shape; tracing
-    appends a ``("traceback", …)`` entry to ``backends.TRACE_LOG``."""
-    import jax
-    import jax.numpy as jnp
-
-    if spec0.geometry == "linear":
-        from repro.core.sdp import linear_traceback
-
-        key = ("traceback", "linear", spec0.offsets, spec0.n)
-
-        def build():
-            offsets, n = spec0.offsets, spec0.n
-
-            def call(args_b, starts_b):
-                _backends.log_trace(key)
-                return jax.vmap(
-                    lambda a, s: linear_traceback(a, offsets, n, s)
-                )(args_b, starts_b)
-
-            return jax.jit(call)
-
-        walk = _backends.lru_cached(_TRACEBACK_CACHE, key, build,
-                                    _TRACEBACK_CACHE_MAX)
-        if starts is None:
-            starts = [spec0.n - 1] * len(argss)
-        cells, lanes, valid, stop = walk(
-            jnp.stack([jnp.asarray(a) for a in argss]),
-            jnp.asarray(np.asarray(starts, dtype=np.int32)))
-        cells, lanes = np.asarray(cells), np.asarray(lanes)
-        valid, stop = np.asarray(valid), np.asarray(stop)
-        return [LinearPath(cells=cells[b][valid[b]], lanes=lanes[b][valid[b]],
-                           stop=int(stop[b]))
-                for b in range(len(argss))]
-
-    from repro.core.mcm import triangular_traceback
-
-    key = ("traceback", "triangular", spec0.n)
-
-    def build():
-        n = spec0.n
-
-        def call(args_b):
-            _backends.log_trace(key)
-            return jax.vmap(lambda a: triangular_traceback(a, n))(args_b)
-
-        return jax.jit(call)
-
-    ii, dd, ee = _backends.lru_cached(
-        _TRACEBACK_CACHE, key, build, _TRACEBACK_CACHE_MAX)(
-        jnp.stack([jnp.asarray(a) for a in argss]))
-    nodes = np.stack([np.asarray(ii), np.asarray(dd), np.asarray(ee)], axis=2)
-    return [TriangularPath(nodes=nodes[b].astype(np.int64))
-            for b in range(len(argss))]
+    table of a same-shape batch. The family's ``traceback_program`` hook
+    supplies ``(key, build, post)``; the callable is cached here per key and
+    tracing appends the key to ``backends.TRACE_LOG``."""
+    key, build, post = spec0.traceback_program()
+    walk = _backends.lru_cached(_TRACEBACK_CACHE, key, build,
+                                _TRACEBACK_CACHE_MAX)
+    return post(walk, argss, starts)
 
 
 def reconstruct_one(prob: DPProblem, spec: Spec, table: np.ndarray,
@@ -163,7 +111,7 @@ def reconstruct_one(prob: DPProblem, spec: Spec, table: np.ndarray,
         raise NotImplementedError(
             f"problem {prob.name!r} does not define decode()")
     if path is None:
-        start = start_cell(prob, table, spec) if spec.geometry == "linear" else -1
+        start = start_cell(prob, table, spec) if spec.uses_start else -1
         path = traceback_host(args, spec, start)
     solution = prob.decode(table, args, spec, path)
     return Answer(value=prob.extract(table, spec), solution=solution,
@@ -192,13 +140,12 @@ def reconstruct_batch(prob: DPProblem, specs: Sequence[Spec],
         paths = list(paths)
     elif source == "device":
         starts = None
-        if spec0.geometry == "linear":
+        if spec0.uses_start:
             starts = [start_cell(prob, t, s) for t, s in zip(tables, specs)]
         paths = traceback_batch(argss, spec0, starts)
     else:
         paths = [traceback_host(a, s,
-                                start_cell(prob, t, s)
-                                if s.geometry == "linear" else -1)
+                                start_cell(prob, t, s) if s.uses_start else -1)
                  for a, s, t in zip(argss, specs, tables)]
     t1 = time.perf_counter()
     _telemetry.add_phase("traceback", (t1 - t0) * 1e3)

@@ -4,7 +4,7 @@ dispatch, batching, engine serving, oracle tests, and the benchmark sweep
 for free."""
 from __future__ import annotations
 
-from repro.dp.problem import DPProblem
+from repro.dp.problem import FAMILIES, DPProblem
 
 _PROBLEMS: dict = {}
 
@@ -12,8 +12,9 @@ _PROBLEMS: dict = {}
 def register(problem: DPProblem) -> DPProblem:
     if problem.name in _PROBLEMS:
         raise ValueError(f"duplicate problem name {problem.name!r}")
-    if problem.geometry not in ("linear", "triangular"):
-        raise ValueError(f"unknown geometry {problem.geometry!r}")
+    if problem.geometry not in FAMILIES:
+        raise ValueError(f"unknown geometry {problem.geometry!r}; "
+                         f"registered families: {sorted(FAMILIES)}")
     _PROBLEMS[problem.name] = problem
     return problem
 

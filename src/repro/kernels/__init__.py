@@ -8,6 +8,8 @@ pure-jnp oracle in ``ref.py`` and a dispatching wrapper in ``ops.py``.
   * ``mcm_pipeline``    — VMEM-resident diagonal-pipeline triangular solver
   * ``mcm_tiled``       — HBM-resident tiled triangular solver with
                           double-buffered DMA and fused traceback (§4/§5)
+  * ``grid_pipeline``   — VMEM-resident frontier-major wavefront solver for
+                          the grid family (antidiag/spandiag, DESIGN.md §9)
   * ``chunked_scan``    — gated linear recurrence (SSM/RWKV layers)
   * ``flash_attention`` — causal online-softmax attention (prefill cells)
 """
@@ -101,6 +103,23 @@ def _kernel_wavefront_supports(spec) -> bool:
             or _triangular_vmem_bytes(spec) <= ops.vmem_budget_bytes())
 
 
+def _grid_vmem_bytes(spec) -> int:
+    """f32 + int32 working set of the grid wavefront kernel (frontier-major
+    buffers + arg store); geometry comes from the kernel itself."""
+    from repro.kernels.grid_pipeline import grid_vmem_bytes
+
+    return grid_vmem_bytes(spec)
+
+
+def _kernel_grid_cost(spec) -> float:
+    return _dp_backends.grid_costs(spec)["grid_wavefront"] * _mode_factor()
+
+
+def _kernel_grid_supports(spec) -> bool:
+    return (not _on_kernel_path()
+            or _grid_vmem_bytes(spec) <= ops.vmem_budget_bytes())
+
+
 def _kernel_tiled_cost(spec) -> float:
     # the VMEM-resident blocked prior plus a flat streaming-orchestration
     # term, so where both fit the resident kernel stays preferred
@@ -139,6 +158,14 @@ _dp_backends.register(_dp_backends.linear_backend(
     jax_arg_fn=ops.sdp_chunked_with_args, cache_tag=_mode_tag,
     doc="ops.sdp_chunked: HBM-streaming chunked S-DP pipeline — the table "
         "streams through a budget-sized VMEM window; no size cap"))
+
+_dp_backends.register(_dp_backends.grid_backend(
+    "kernel_grid", ops.grid_blocked, cost=_kernel_grid_cost,
+    supports=_kernel_grid_supports,
+    jax_arg_fn=ops.grid_blocked_with_args, cache_tag=_mode_tag,
+    doc="ops.grid_blocked: Pallas VMEM-resident frontier-major wavefront "
+        "kernel (antidiag/spandiag, arg-emitting) on the kernel path, jnp "
+        "masked wavefront solver elsewhere"))
 
 _dp_backends.register(_dp_backends.triangular_tab_backend(
     "kernel_tiled_wavefront", ops.mcm_tiled,

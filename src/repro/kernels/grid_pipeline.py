@@ -1,0 +1,287 @@
+"""Pallas TPU kernel: VMEM-resident wavefront pipeline for the grid family.
+
+Reuses ``mcm_pipeline``'s contiguous-diagonal addressing trick on 2-D
+multi-plane grids (DESIGN.md §9): store the table in *frontier-major*
+order so every wavefront is a contiguous run, and every per-frontier
+operand becomes a dynamic-start constant-length VMEM slice — no gathers.
+
+``antidiag`` — the buffers are permuted to anti-diagonal-major order with
+a ``PAD`` prefix. Cell ``(i, j)`` of front ``t = i + j`` sits at
+``PAD + base(t) + (j - c0(t))`` where ``c0(t) = max(0, t - rows + 1)`` and
+``base(t)`` (the sum of earlier front lengths) has a closed three-piece
+form evaluated with traced integer arithmetic. The source operand of
+shift move ``(di, dj)`` then lives at the *constant* lane shift
+``base(ts) + c0(t) - dj - c0(ts)`` of front ``ts = t - di - dj`` — one
+``pl.ds`` slice per (plane, move) per front. Slices are padded to the
+longest front (``min(rows, cols)`` lanes); spill lanes write garbage into
+*later* fronts' cells, each fully rewritten by its own step before
+anything reads it (the mcm spill discipline; the ``PAD`` prefix keeps
+early-front source slices in-bounds, and fully-masked reads multiply
+semiring-zero weights, never mixing +inf with -inf, so no NaNs). Preset
+cells are re-blended per front from the preset value/mask buffers —
+unlike the mcm kernel's single preset diagonal, row 0 / column 0 presets
+scatter across many fronts.
+
+``spandiag`` — the mcm kernel with a plane axis: per span diagonal, per
+target plane (static loop), the inner ``fori_loop`` over split offsets
+folds every rule into that plane as left/right diagonal slices plus a
+scalar rule weight. Args store the packed ``e·len(rules) + r``.
+
+Both variants scan candidates in the jnp solvers' declaration order with
+strict-improve folds (= argmin/argmax first-occurrence), so tables AND
+args are bit-identical to ``core.grid.solve_grid_with_args`` —
+reconstruction through this kernel decodes the same solutions.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.mcm import lin_index, num_cells
+
+
+def _zero(op: str) -> float:
+    return float("inf") if op == "min" else float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# antidiag geometry
+# ---------------------------------------------------------------------------
+def _ad_geometry(meta):
+    """(PAD, size, Lf): pad prefix, per-plane buffer length, lane count."""
+    _, _, _, R, C, moves, _ = meta
+    Lf = min(R, C)
+    span = max(int(m[2]) + int(m[3]) for m in moves)
+    PAD = span + 1
+    return PAD, PAD + R * C + Lf + span + 1, Lf
+
+
+def _ad_positions(R: int, C: int) -> np.ndarray:
+    """Anti-diagonal-major position (before the PAD shift) of every
+    row-major cell — the host-side permutation of the kernel buffers."""
+    pos = np.empty((R, C), np.int64)
+    base = 0
+    for t in range(R + C - 1):
+        c0, c1 = max(0, t - R + 1), min(t, C - 1)
+        for j in range(c0, c1 + 1):
+            pos[t - j, j] = base + (j - c0)
+        base += c1 - c0 + 1
+    return pos.reshape(-1)
+
+
+def _ad_base(t, R: int, C: int):
+    """Traced closed form of ``base(t)`` (three regimes: growing fronts,
+    the constant-width band, shrinking fronts)."""
+    m, M = min(R, C), max(R, C)
+    u = t - M
+    b_grow = t * (t + 1) // 2
+    b_band = m * (m + 1) // 2 + (t - m) * m
+    b_shrink = m * (m + 1) // 2 + (M - m) * m + u * m - u * (u + 1) // 2
+    return jnp.where(t <= m, b_grow, jnp.where(t <= M, b_band, b_shrink))
+
+
+def _make_antidiag_kernel(meta, with_args):
+    _, op, P, R, C, moves, _ = meta
+    PAD, size, Lf = _ad_geometry(meta)
+    zero = _zero(op)
+    is_min = op == "min"
+    by_plane = [[(l, m) for l, m in enumerate(moves) if int(m[0]) == p]
+                for p in range(P)]
+
+    def kernel(*refs):
+        refs = list(refs)
+        w_ref = refs.pop(0)
+        st0_ref = refs.pop(0)
+        pm_ref = refs.pop(0)
+        st_ref = refs.pop(0)
+        arg_ref = refs.pop(0) if with_args else None
+
+        st_ref[...] = st0_ref[...]
+        if with_args:
+            arg_ref[...] = jnp.full_like(arg_ref[...], -1)
+
+        def front(t, _):
+            base_t = PAD + _ad_base(t, R, C)
+            c0_t = jnp.maximum(0, t - (R - 1))
+            for p in range(P):                       # static plane loop
+                mlist = by_plane[p]
+                if not mlist:
+                    continue
+                acc = jnp.full((Lf,), zero, dtype=st_ref.dtype)
+                arg = jnp.full((Lf,), mlist[0][0], dtype=jnp.int32)
+                for l, (_, p_from, di, dj) in mlist:  # static move loop
+                    ts = jnp.maximum(t - int(di) - int(dj), 0)
+                    src = jnp.maximum(
+                        PAD + _ad_base(ts, R, C) + c0_t - int(dj)
+                        - jnp.maximum(0, ts - (R - 1)), 0)
+                    left = st_ref[int(p_from), pl.ds(src, Lf)]
+                    w = w_ref[l, pl.ds(base_t, Lf)]
+                    val = left + w
+                    improve = val < acc if is_min else val > acc
+                    if with_args:
+                        arg = jnp.where(improve, jnp.int32(l), arg)
+                    acc = jnp.where(improve, val, acc)
+                s0 = st0_ref[p, pl.ds(base_t, Lf)]
+                pm = pm_ref[p, pl.ds(base_t, Lf)]
+                preset = pm > 0
+                st_ref[p, pl.ds(base_t, Lf)] = jnp.where(preset, s0, acc)
+                if with_args:
+                    arg_ref[p, pl.ds(base_t, Lf)] = jnp.where(
+                        preset, -1, arg)
+            return 0
+
+        jax.lax.fori_loop(1, R + C - 1, front, 0)
+
+    return kernel
+
+
+def _antidiag_call(arrs, meta, with_args, interpret):
+    _, op, P, R, C, moves, _ = meta
+    w, init, pmask = arrs
+    PAD, size, Lf = _ad_geometry(meta)
+    zero = _zero(op)
+    RC = R * C
+    pos = PAD + _ad_positions(R, C)                 # static numpy permutation
+    L = len(moves)
+    w_ad = jnp.zeros((L, size), w.dtype).at[:, pos].set(w.reshape(L, RC))
+    pmf = pmask.reshape(P, RC) > 0
+    st0_rm = jnp.where(pmf, init.reshape(P, RC), jnp.asarray(zero, w.dtype))
+    st0_ad = jnp.full((P, size), zero, w.dtype).at[:, pos].set(st0_rm)
+    pm_ad = jnp.zeros((P, size), w.dtype).at[:, pos].set(
+        pmf.astype(w.dtype))
+    kernel = _make_antidiag_kernel(meta, with_args)
+    out_shape = (jax.ShapeDtypeStruct((P, size), w.dtype),)
+    if with_args:
+        out_shape += (jax.ShapeDtypeStruct((P, size), jnp.int32),)
+    out = pl.pallas_call(kernel, out_shape=out_shape,
+                         interpret=interpret)(w_ad, st0_ad, pm_ad)
+    st = out[0][:, pos].reshape(-1)
+    if with_args:
+        return st, out[1][:, pos].reshape(-1)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# spandiag (the mcm pipeline with a plane axis)
+# ---------------------------------------------------------------------------
+def _off(d, n):
+    return lin_index(0, d, n)
+
+
+def _span_geometry(n: int):
+    L = max(n - 1, 1)
+    return L, num_cells(n) + L + 1
+
+
+def _make_spandiag_kernel(meta, with_args):
+    _, op, P, n, _, _, rules = meta
+    L, size = _span_geometry(n)
+    zero = _zero(op)
+    is_min = op == "min"
+    NR = len(rules)
+    by_plane = [[(r, rule) for r, rule in enumerate(rules)
+                 if int(rule[0]) == A] for A in range(P)]
+
+    def kernel(*refs):
+        refs = list(refs)
+        rw_ref = refs.pop(0)
+        st0_ref = refs.pop(0)
+        st_ref = refs.pop(0)
+        arg_ref = refs.pop(0) if with_args else None
+
+        st_ref[...] = st0_ref[...]
+        if with_args:
+            arg_ref[...] = jnp.full_like(arg_ref[...], -1)
+
+        def diag(d, _):
+            off_d = _off(d, n)
+            for A in range(P):                       # static plane loop
+                rl = by_plane[A]
+                if not rl:
+                    continue
+
+                def cand(e, carry, rl=rl):
+                    acc, arg = carry
+                    for r, (_, B, Cc) in rl:         # static rule loop
+                        left = st_ref[int(B), pl.ds(_off(e, n), L)]
+                        right = st_ref[int(Cc),
+                                       pl.ds(_off(d - e - 1, n) + e + 1, L)]
+                        val = (left + right) + rw_ref[r]
+                        improve = val < acc if is_min else val > acc
+                        if with_args:
+                            arg = jnp.where(
+                                improve, e.astype(jnp.int32) * NR + r, arg)
+                        acc = jnp.where(improve, val, acc)
+                    return acc, arg
+
+                acc, arg = jax.lax.fori_loop(
+                    0, d, cand,
+                    (jnp.full((L,), zero, dtype=st_ref.dtype),
+                     jnp.full((L,), rl[0][0], dtype=jnp.int32)))
+                st_ref[A, pl.ds(off_d, L)] = acc
+                if with_args:
+                    arg_ref[A, pl.ds(off_d, L)] = arg
+            return 0
+
+        jax.lax.fori_loop(1, n, diag, 0)
+
+    return kernel
+
+
+def _spandiag_call(arrs, meta, with_args, interpret):
+    _, op, P, n, _, _, rules = meta
+    rw, init = arrs
+    L, size = _span_geometry(n)
+    cells = num_cells(n)
+    zero = _zero(op)
+    st0 = jnp.full((P, size), zero, rw.dtype).at[:, :n].set(init)
+    kernel = _make_spandiag_kernel(meta, with_args)
+    out_shape = (jax.ShapeDtypeStruct((P, size), rw.dtype),)
+    if with_args:
+        out_shape += (jax.ShapeDtypeStruct((P, size), jnp.int32),)
+    out = pl.pallas_call(kernel, out_shape=out_shape,
+                         interpret=interpret)(rw, st0)
+    st = out[0][:, :cells].reshape(-1)
+    if with_args:
+        return st, out[1][:, :cells].reshape(-1)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Public entry points + VMEM accounting
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def grid_pipeline_pallas(arrs, meta: tuple, interpret: bool = False):
+    """Flat grid table from the VMEM-resident wavefront kernel — ``arrs`` /
+    ``meta`` as in ``core.grid.solve_grid``; bit-equal to it."""
+    if meta[0] == "antidiag":
+        return _antidiag_call(arrs, meta, False, interpret)
+    return _spandiag_call(arrs, meta, False, interpret)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def grid_pipeline_pallas_with_args(arrs, meta: tuple,
+                                   interpret: bool = False):
+    """``grid_pipeline_pallas`` + the winning-argument table, matching
+    ``core.grid.solve_grid_with_args`` bit-for-bit (strict-improve scans in
+    declaration order = first-occurrence argmin/argmax)."""
+    if meta[0] == "antidiag":
+        return _antidiag_call(arrs, meta, True, interpret)
+    return _spandiag_call(arrs, meta, True, interpret)
+
+
+def grid_vmem_bytes(spec) -> int:
+    """Resident footprint of the kernel's buffers (f32 + the int32 arg
+    store), for the backend's ``supports`` gate."""
+    meta = spec.static_meta()
+    if spec.schedule == "antidiag":
+        _, size, _ = _ad_geometry(meta)
+        lanes = len(spec.moves) + 2 * spec.planes   # weights + st0 + mask
+        return 4 * size * (lanes + 2 * spec.planes)  # + st out + args out
+    _, size = _span_geometry(spec.rows)
+    return 4 * (len(spec.rules) + size * 3 * spec.planes)

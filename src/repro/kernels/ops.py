@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.chunked_scan import chunked_scan_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.grid_pipeline import (grid_pipeline_pallas,
+                                         grid_pipeline_pallas_with_args)
 from repro.kernels.mcm_pipeline import (mcm_pipeline_pallas,
                                         mcm_pipeline_pallas_with_args)
 from repro.kernels.mcm_tiled import (mcm_tiled_pallas,
@@ -217,6 +219,34 @@ def mcm_tiled_fused(wtab, n: int):
         return mcm_tiled_pallas_fused(wtab, n, budget=vmem_budget_bytes(),
                                       interpret=(mode == "interpret"))
     return mcm_tiled_ref_fused(wtab, n)
+
+
+def grid_blocked(arrs, meta: tuple):
+    """Grid (antidiag/spandiag) table solve: the VMEM-resident wavefront
+    Pallas kernel on the kernel path, the jnp masked-wavefront solver
+    elsewhere — ``arrs``/``meta`` per ``GridSpec.device_arrays()`` /
+    ``static_meta()``."""
+    from repro.core.grid import solve_grid
+
+    mode = kernel_mode()
+    _count_entry("grid_blocked", mode)
+    if mode in ("pallas", "interpret"):
+        return grid_pipeline_pallas(arrs, meta,
+                                    interpret=(mode == "interpret"))
+    return solve_grid(arrs, meta)
+
+
+def grid_blocked_with_args(arrs, meta: tuple):
+    """``grid_blocked`` + the winning move / packed-split table, identical
+    first-occurrence tie order on every path."""
+    from repro.core.grid import solve_grid_with_args
+
+    mode = kernel_mode()
+    _count_entry("grid_blocked_with_args", mode)
+    if mode in ("pallas", "interpret"):
+        return grid_pipeline_pallas_with_args(arrs, meta,
+                                              interpret=(mode == "interpret"))
+    return solve_grid_with_args(arrs, meta)
 
 
 def linear_scan(x, decay, h0, chunk: int = 128):

@@ -17,6 +17,23 @@ if importlib.util.find_spec("hypothesis") is None:
         sys.path.insert(0, _STUBS)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _release_jax_executables_per_module():
+    """Every jit/pallas compilation maps fresh JIT code pages and the full
+    suite now compiles thousands of programs; left to accumulate, the
+    process crosses ``vm.max_map_count`` (65530 on stock kernels) late in
+    the run and the next XLA compile segfaults on a failed mmap. Dropping
+    the compiled-executable caches at module boundaries keeps the live
+    mapping count bounded; cross-module cache reuse was near zero anyway
+    (modules use disjoint shapes), so the recompile cost is noise."""
+    yield
+    try:
+        import jax
+        jax.clear_caches()
+    except Exception:
+        pass
+
+
 @pytest.fixture(autouse=True)
 def _isolated_dp_calibration(monkeypatch):
     """DPEngine feedback writes to the process-global calibration table;

@@ -1,0 +1,341 @@
+"""Registry-wide conformance suite (DESIGN.md §3): every problem in the
+registry — whatever its family — passes the same four properties,
+parametrized over ``dp.problem_names()``:
+
+  1. oracle value      — every supporting backend reproduces the
+                         independent numpy oracle's full table
+  2. decoded recompute — the reconstructed solution, re-costed with plain
+                         numpy from the raw instance, equals the optimum
+  3. batch bit-equality— one vmapped drain returns bit-identical tables to
+                         the per-instance loop
+  4. Pallas reconstruct— the family's kernel route (interpret mode) emits
+                         device args whose decoded solution verifies, on a
+                         table bit-equal to the plain jnp route
+
+New problems and new families inherit the whole suite by registering —
+the per-family copy-paste blocks these tests replace lived in
+``test_dp_reconstruct.py`` / ``test_dp_kernel_tier.py``.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+from repro import dp
+
+ALL_PROBLEMS = tuple(dp.problem_names())
+
+#: family -> (kernel route, plain jnp route) for the Pallas-interpret leg
+KERNEL_ROUTES = {
+    "linear": ("kernel_blocked", "blocked"),
+    "triangular": ("kernel_wavefront", "wavefront"),
+    "grid": ("kernel_grid", "grid_wavefront"),
+}
+
+
+def _rng(tag: str) -> np.random.Generator:
+    return np.random.default_rng(zlib.crc32(tag.encode()))
+
+
+# ---------------------------------------------------------------------------
+# Independent verifiers: decoded solution + raw instance -> recomputed cost.
+# Each shares no code with the solvers OR the oracles.
+# ---------------------------------------------------------------------------
+def _verify_sdp(kw, ans):
+    sol = ans.solution
+    # min/max witness chain: the optimum is the init value the chain ends in
+    assert 0 <= sol["terminal"] < len(kw["init"])
+    for c, o in zip(sol["cells"], sol["offsets_taken"]):
+        assert o in kw["offsets"] and c >= len(kw["init"])
+    return float(kw["init"][sol["terminal"]]), float(ans.value[-1])
+
+
+def _verify_edit(kw, ans):
+    x, y = np.asarray(kw["x"]), np.asarray(kw["y"])
+    i = j = 0
+    cost = 0.0
+    for op in ans.solution["ops"]:
+        if op[0] in ("match", "sub"):
+            assert op[1] == i and op[2] == j
+            if op[0] == "match":
+                assert x[i] == y[j]
+            else:
+                assert x[i] != y[j]
+                cost += 1.0
+            i, j = i + 1, j + 1
+        elif op[0] == "del":
+            assert op[1] == i
+            i, cost = i + 1, cost + 1.0
+        else:
+            assert op[0] == "ins" and op[1] == j
+            j, cost = j + 1, cost + 1.0
+    assert (i, j) == (len(x), len(y)), "alignment must cover both sequences"
+    return cost, ans.value
+
+
+def _verify_lcs(kw, ans):
+    x, y = np.asarray(kw["x"]), np.asarray(kw["y"])
+    pairs = ans.solution["pairs"]
+    for (i0, j0), (i1, j1) in zip(pairs, pairs[1:]):
+        assert i0 < i1 and j0 < j1, "subsequence indices must increase"
+    for i, j in pairs:
+        assert x[i] == y[j]
+    return float(len(pairs)), ans.value
+
+
+def _verify_viterbi(kw, ans):
+    log_a, log_b = np.asarray(kw["log_a"]), np.asarray(kw["log_b"])
+    log_pi, obs = np.asarray(kw["log_pi"]), np.asarray(kw["obs"])
+    st = ans.solution["states"]
+    assert len(st) == len(obs) and all(0 <= s < len(log_pi) for s in st)
+    lp = log_pi[st[0]] + log_b[st[0], obs[0]]
+    for t in range(1, len(obs)):
+        lp += log_a[st[t - 1], st[t]] + log_b[st[t], obs[t]]
+    return float(lp), ans.value
+
+
+def _verify_knapsack(kw, ans):
+    real = {(int(w), float(v))
+            for w, v in zip(kw["item_weights"], kw["item_values"])}
+    items = ans.solution["items"]
+    for w, v in items:
+        assert any(w == rw and np.isclose(v, rv, rtol=1e-5)
+                   for rw, rv in real), (w, v)
+    assert sum(w for w, _ in items) <= int(kw["capacity"])
+    return float(sum(v for _, v in items)), ans.value
+
+
+def _mcm_tree_cost(tree, p):
+    """Cost + resulting shape of multiplying the chain per the tree."""
+    if isinstance(tree, (int, np.integer)):
+        return 0.0, (p[tree], p[tree + 1])
+    cl, (r0, c0) = _mcm_tree_cost(tree[0], p)
+    cr, (r1, c1) = _mcm_tree_cost(tree[1], p)
+    assert c0 == r1, "tree multiplies non-conforming shapes"
+    return cl + cr + r0 * c0 * c1, (r0, c1)
+
+
+def _verify_mcm(kw, ans):
+    cost, _ = _mcm_tree_cost(ans.solution["tree"], np.asarray(kw["dims"]))
+    return float(cost), ans.value
+
+
+def _verify_bst(kw, ans):
+    freq = np.asarray(kw["freq"])
+
+    def cost(node, depth):
+        if node is None:
+            return 0.0, []
+        r, left, right = node
+        cl, kl = cost(left, depth + 1)
+        cr, kr = cost(right, depth + 1)
+        return depth * freq[r] + cl + cr, kl + [r] + kr
+
+    total, inorder = cost(ans.solution["tree"], 1)
+    assert inorder == list(range(len(freq))), "inorder must be the key order"
+    return float(total), ans.value
+
+
+def _verify_poly(kw, ans):
+    v = np.asarray(kw["vertices"])
+    tris = ans.solution["triangles"]
+    assert len(tris) == len(v) - 2, "an m-gon has m-2 triangles"
+    return float(sum(v[a] * v[b] * v[c] for a, b, c in tris)), ans.value
+
+
+def _alignment_cost(ops, x, y, align_score, gap_cost):
+    """Walk an alignment script, asserting it consumes both sequences in
+    order; ``align_score(i, j)`` and ``gap_cost(kind, run_len)`` supply the
+    scoring scheme (linear or affine)."""
+    i = j = 0
+    score = 0.0
+    run_kind, run_len = None, 0
+    for op in ops:
+        if op[0] == "align":
+            assert op[1] == i and op[2] == j, (op, i, j)
+            score += align_score(i, j)
+            i, j = i + 1, j + 1
+            run_kind, run_len = None, 0
+        else:
+            assert op[0] in ("del", "ins")
+            pos = i if op[0] == "del" else j
+            assert op[1] == pos, (op, i, j)
+            run_len = run_len + 1 if run_kind == op[0] else 1
+            run_kind = op[0]
+            score += gap_cost(op[0], run_len)
+            if op[0] == "del":
+                i += 1
+            else:
+                j += 1
+    assert (i, j) == (len(x), len(y)), "alignment must cover both sequences"
+    return score
+
+
+def _verify_nw(kw, ans):
+    x, y = np.asarray(kw["x"]), np.asarray(kw["y"])
+    match = kw.get("match", 2.0)
+    mismatch = kw.get("mismatch", -1.0)
+    gap = kw.get("gap", -2.0)
+    score = _alignment_cost(
+        ans.solution["ops"], x, y,
+        lambda i, j: match if x[i] == y[j] else mismatch,
+        lambda kind, run: gap)
+    return float(np.float32(score)), ans.value
+
+
+def _verify_gotoh(kw, ans):
+    x, y = np.asarray(kw["x"]), np.asarray(kw["y"])
+    match = kw.get("match", 2.0)
+    mismatch = kw.get("mismatch", -1.0)
+    go = kw.get("gap_open", -3.0)
+    ge = kw.get("gap_extend", -1.0)
+    score = _alignment_cost(
+        ans.solution["ops"], x, y,
+        lambda i, j: match if x[i] == y[j] else mismatch,
+        lambda kind, run: go if run == 1 else ge)     # affine: open then extend
+    return float(np.float32(score)), ans.value
+
+
+def _verify_cky(kw, ans):
+    tokens = np.asarray(kw["tokens"])
+    lex = np.asarray(kw["lex"], dtype=np.float64)
+    rules = [tuple(int(v) for v in r) for r in kw["rules"]]
+    logp = np.asarray(kw["rule_logp"], dtype=np.float64)
+
+    def walk(node):
+        if len(node) == 2:                 # leaf (nonterminal, position)
+            p, i = node
+            return lex[p, tokens[i]], [i], p
+        A, left, right = node
+        sl, span_l, B = walk(left)
+        sr, span_r, C = walk(right)
+        assert span_l[-1] + 1 == span_r[0], "children must be adjacent spans"
+        # ties between duplicate (A, B, C) rules resolve to the best weight
+        cand = [lp for r, lp in zip(rules, logp) if r == (A, B, C)]
+        assert cand, f"tree uses a rule {(A, B, C)} the grammar lacks"
+        return sl + sr + max(cand), span_l + span_r, A
+
+    score, span, root = walk(ans.solution["tree"])
+    assert root == 0 and span == list(range(len(tokens))), \
+        "parse must cover the sentence under the start symbol"
+    return float(score), ans.value
+
+
+VERIFIERS = {
+    "sdp": _verify_sdp, "edit_distance": _verify_edit, "lcs": _verify_lcs,
+    "viterbi": _verify_viterbi, "unbounded_knapsack": _verify_knapsack,
+    "mcm": _verify_mcm, "optimal_bst": _verify_bst,
+    "polygon_triangulation": _verify_poly,
+    "needleman_wunsch": _verify_nw, "gotoh": _verify_gotoh,
+    "cky": _verify_cky,
+    "edit_distance_grid": _verify_edit, "lcs_grid": _verify_lcs,
+}
+
+
+def test_every_registered_problem_has_a_verifier():
+    """The suite is registry-complete by construction: registering a problem
+    without a verifier fails here, not silently."""
+    assert set(ALL_PROBLEMS) == set(VERIFIERS), \
+        set(ALL_PROBLEMS) ^ set(VERIFIERS)
+
+
+def _same_shape_instances(prob, seed: int, size: int, want: int) -> list:
+    """Sample up to ``want`` instances sharing the first one's shape_key (so
+    they batch); falls back to repeating the first when a problem's sampler
+    randomizes structure too freely."""
+    rng = np.random.default_rng(seed)
+    first = prob.sample(rng, size)
+    key = prob.encode(**first).shape_key()
+    out = [first]
+    for _ in range(60):
+        if len(out) == want:
+            break
+        kw = prob.sample(rng, size)
+        if prob.encode(**kw).shape_key() == key:
+            out.append(kw)
+    while len(out) < want:
+        out.append(first)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 1. Oracle value on every supporting backend
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_PROBLEMS)
+def test_oracle_value_on_every_backend(name):
+    prob = dp.get_problem(name)
+    rng = _rng(f"conf-oracle/{name}")
+    for trial in range(3):
+        kw = prob.sample(rng, int(rng.integers(5, 12)))
+        spec = prob.encode(**kw)
+        ref = prob.oracle(**kw)
+        cands = dp.backends.candidates(spec)
+        assert cands, f"no backend supports {name}"
+        for b in cands:
+            got = dp.solve_spec(spec, backend=b.name)
+            np.testing.assert_allclose(
+                got, ref, rtol=1e-4, atol=1e-4,
+                err_msg=f"{name} via {b.name} (trial {trial})")
+
+
+# ---------------------------------------------------------------------------
+# 2. Decoded-solution recompute (dispatched route)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_PROBLEMS)
+def test_decoded_solution_recomputes_to_optimum(name):
+    prob = dp.get_problem(name)
+    rng = _rng(f"conf-decode/{name}")
+    for trial in range(3):
+        kw = prob.sample(rng, int(rng.integers(5, 12)))
+        ans = dp.solve(name, reconstruct=True, **kw)
+        assert isinstance(ans, dp.Answer)
+        assert ans.source == "device", \
+            f"dispatch must prefer an arg-capable route, got {ans.source}"
+        got, want = VERIFIERS[name](kw, ans)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5,
+                                   err_msg=f"{name} trial {trial}")
+        ref = prob.solve_reference(**kw)
+        ref = ref[-1] if name == "sdp" else ref   # sdp's answer is the table
+        np.testing.assert_allclose(np.float64(want), np.float64(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 3. Batch bit-equality (one vmapped drain == per-instance loop)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_PROBLEMS)
+def test_batch_bit_equality(name):
+    prob = dp.get_problem(name)
+    instances = _same_shape_instances(
+        prob, zlib.crc32(f"conf-batch/{name}".encode()), 8, want=5)
+    specs = [prob.encode(**kw) for kw in instances]
+    batched = dp.batch_solve_specs(specs)
+    looped = [dp.solve_spec(s) for s in specs]
+    np.testing.assert_array_equal(np.asarray(batched), np.asarray(looped),
+                                  err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# 4. Reconstruct through the family's Pallas route (interpret mode)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_PROBLEMS)
+def test_reconstruct_through_pallas_interpret(name, monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    prob = dp.get_problem(name)
+    kernel_route, plain_route = KERNEL_ROUTES[prob.geometry]
+    rng = _rng(f"conf-pallas/{name}")
+    # size 6 keeps every family's kernel working set under the CI leg's
+    # REPRO_VMEM_BUDGET=4096 so the kernel route stays eligible
+    kw = prob.sample(rng, 6)
+    spec = prob.encode(**kw)
+    assert kernel_route in [b.name for b in dp.backends.candidates(spec)], \
+        f"{kernel_route} not offered for {name}"
+    ans = dp.solve(name, backend=kernel_route, reconstruct=True, **kw)
+    assert ans.source == "device", (name, kernel_route)
+    got, want = VERIFIERS[name](kw, ans)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5,
+                               err_msg=f"{name} via {kernel_route}")
+    # the kernel's table is bit-equal to the plain jnp route's
+    np.testing.assert_array_equal(
+        np.asarray(ans.table), dp.solve_spec(spec, backend=plain_route),
+        err_msg=f"{name}: {kernel_route} table != {plain_route} table")

@@ -1,0 +1,279 @@
+"""Grid family + spec-family protocol tests (DESIGN.md §3, §9).
+
+Covers the protocol surface the §3 refactor opened (FAMILIES registry,
+family-tagged shape_keys, the cross-family calibration firewall), the grid
+wavefront tier's three-way bit-equality (numpy reference / jnp masked
+wavefront / Pallas-interpret kernel, values AND args), device-vs-host
+tracebacks, the VMEM gate on ``kernel_grid``, and the differential
+grid-vs-linear encodings of edit_distance and lcs."""
+import zlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import dp
+from repro.core.grid import (grid_args_np, grid_reference, grid_traceback_np,
+                             solve_grid, solve_grid_with_args)
+from repro.dp import problem as _problem
+from repro.kernels.grid_pipeline import (grid_pipeline_pallas,
+                                         grid_pipeline_pallas_with_args,
+                                         grid_vmem_bytes)
+
+GRID_PROBLEMS = ("needleman_wunsch", "gotoh", "cky", "edit_distance_grid",
+                 "lcs_grid")
+
+
+def _rng(tag: str) -> np.random.Generator:
+    return np.random.default_rng(zlib.crc32(tag.encode()))
+
+
+def _specs(tag: str, sizes=(4, 7, 11)):
+    rng = _rng(tag)
+    for name in GRID_PROBLEMS:
+        prob = dp.get_problem(name)
+        for size in sizes:
+            yield name, prob.encode(**prob.sample(rng, size))
+
+
+# ---------------------------------------------------------------------------
+# Family protocol (§3): open registry, family-tagged keys, firewall
+# ---------------------------------------------------------------------------
+def test_families_registry_contents():
+    assert set(_problem.FAMILIES) == {"linear", "triangular", "grid"}
+    assert _problem.FAMILIES["grid"] is dp.GridSpec
+    assert _problem.family_class("linear") is dp.LinearSpec
+    with pytest.raises(KeyError, match="unknown spec family"):
+        _problem.family_class("hexagonal")
+
+
+def test_register_family_rejects_duplicates():
+    with pytest.raises(ValueError, match="duplicate spec family"):
+        _problem.register_family(dp.GridSpec)
+
+
+def test_shape_keys_are_family_tagged():
+    """Satellite (a): the first shape_key element is always the family tag,
+    for every registered problem."""
+    rng = _rng("tags")
+    for name in dp.problem_names():
+        prob = dp.get_problem(name)
+        spec = prob.encode(**prob.sample(rng, 6))
+        key = spec.shape_key()
+        assert key[0] == spec.family == prob.geometry, (name, key)
+        assert key[0] in _problem.FAMILIES
+
+
+def test_cross_family_shape_key_distance_is_none():
+    """Regression (satellite a): a measurement from one family must never
+    transfer onto another — distance is None across families, finite within
+    a compatible family."""
+    lin = dp.get_problem("edit_distance").encode(x=[1, 2, 3], y=[2, 3])
+    tri = dp.get_problem("mcm").encode(dims=np.arange(1.0, 6.0))
+    grid = dp.get_problem("needleman_wunsch").encode(x=[1, 2, 3], y=[2, 3])
+    keys = [lin.shape_key(), tri.shape_key(), grid.shape_key()]
+    for a in keys:
+        for b in keys:
+            d = dp.backends.shape_key_distance(a, b)
+            if a is b:
+                assert d == 0.0, (a, d)
+            else:
+                assert d is None, (a, b, d)
+    # within-family, same program, different extent: finite distance
+    grid2 = dp.get_problem("needleman_wunsch").encode(x=[1, 2, 3, 4], y=[2, 3])
+    d = dp.backends.shape_key_distance(grid.shape_key(), grid2.shape_key())
+    assert d is not None and d > 0
+    # same family, different program (other moves): no transfer either
+    cky = dp.get_problem("cky").encode(
+        tokens=[0, 1], rules=[(0, 0, 0)], rule_logp=[-0.5],
+        lex=np.full((1, 2), -1.0))
+    assert dp.backends.shape_key_distance(grid.shape_key(),
+                                          cky.shape_key()) is None
+
+
+def test_spec_from_shape_key_round_trips():
+    rng = _rng("roundtrip")
+    for name in dp.problem_names():
+        prob = dp.get_problem(name)
+        key = prob.encode(**prob.sample(rng, 5)).shape_key()
+        rebuilt = dp.backends.spec_from_shape_key(key)
+        assert rebuilt.shape_key() == key, name
+        rebuilt.validate()
+
+
+def test_grid_route_costs_vocabulary():
+    for name, spec in _specs("costs", sizes=(6,)):
+        costs = spec.route_costs()
+        assert "grid_wavefront" in costs and costs["grid_wavefront"] > 0, name
+        names = [b.name for b in dp.backends.candidates(spec)]
+        assert "grid_wavefront" in names, (name, names)
+
+
+# ---------------------------------------------------------------------------
+# Three-way bit-equality: reference / jnp wavefront / Pallas-interpret
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", GRID_PROBLEMS)
+def test_grid_solver_three_way_bit_equality(name):
+    rng = _rng(f"threeway/{name}")
+    prob = dp.get_problem(name)
+    for size in (3, 6, 10):
+        spec = prob.encode(**prob.sample(rng, size))
+        arrs = tuple(jnp.asarray(a) for a in spec.device_arrays())
+        meta = spec.static_meta()
+        ref = grid_reference(spec).astype(np.float32)
+        got_jnp = np.asarray(solve_grid(arrs, meta))
+        got_pl = np.asarray(grid_pipeline_pallas(arrs, meta, True))
+        # reference computes in f64; tolerance there, bit-equality between
+        # the two f32 device paths
+        np.testing.assert_allclose(got_jnp, ref, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{name}/{size} jnp vs reference")
+        np.testing.assert_array_equal(got_pl, got_jnp,
+                                      err_msg=f"{name}/{size} pallas vs jnp")
+        jt, ja = solve_grid_with_args(arrs, meta)
+        pt, pa = grid_pipeline_pallas_with_args(arrs, meta, True)
+        np.testing.assert_array_equal(np.asarray(pt), np.asarray(jt))
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(ja),
+                                      err_msg=f"{name}/{size} args")
+        # the with-args table is the plain table
+        np.testing.assert_array_equal(np.asarray(jt), got_jnp)
+
+
+@pytest.mark.parametrize("name", GRID_PROBLEMS)
+def test_grid_host_args_and_traceback_agree_with_device(name):
+    """grid_args_np re-ranks the finished table into the same first-occurrence
+    winners the device emits, and the host walk reproduces the device walk."""
+    rng = _rng(f"hostargs/{name}")
+    prob = dp.get_problem(name)
+    for size in (4, 8):
+        kw = prob.sample(rng, size)
+        spec = prob.encode(**kw)
+        table, args, source = dp.routing.solve_spec_with_args(spec)
+        assert source == "device", name
+        np.testing.assert_array_equal(grid_args_np(table, spec), args,
+                                      err_msg=f"{name}/{size}")
+        start = dp.reconstruct.start_cell(prob, table, spec)
+        host = grid_traceback_np(args, spec, start)
+        [dev] = dp.reconstruct.traceback_batch([args], spec, starts=[start])
+        np.testing.assert_array_equal(host.nodes, dev.nodes,
+                                      err_msg=f"{name}/{size} walk")
+
+
+def test_grid_spec_validation_errors():
+    mk = dp.get_problem("needleman_wunsch").encode
+    good = mk(x=[1, 2], y=[2, 1])
+    with pytest.raises(ValueError, match="min or max"):
+        dp.GridSpec(rows=good.rows, cols=good.cols, op="add",
+                    schedule="antidiag", planes=1, moves=good.moves,
+                    weights=good.weights, init=good.init,
+                    init_mask=good.init_mask).validate()
+    with pytest.raises(ValueError, match="schedule"):
+        dp.GridSpec(rows=2, cols=2, op="min", schedule="zigzag", planes=1,
+                    moves=((0, 0, 1, 1),),
+                    weights=np.zeros((1, 2, 2), np.float32),
+                    init=np.zeros((1, 2, 2), np.float32),
+                    init_mask=np.zeros((1, 2, 2), bool)).validate()
+    with pytest.raises(ValueError):
+        dp.GridSpec(rows=2, cols=2, op="min", schedule="antidiag", planes=1,
+                    moves=((0, 0, 1, 1),),
+                    weights=np.zeros((2, 2, 2), np.float32),  # wrong L
+                    init=np.zeros((1, 2, 2), np.float32),
+                    init_mask=np.zeros((1, 2, 2), bool)).validate()
+
+
+def test_grid_spec_digest_distinguishes_instances():
+    p = dp.get_problem("needleman_wunsch")
+    a = p.encode(x=[1, 2, 3], y=[2, 3])
+    b = p.encode(x=[1, 2, 4], y=[2, 3])
+    assert dp.spec_digest(a) != dp.spec_digest(b)
+    assert dp.spec_digest(a) == dp.spec_digest(p.encode(x=[1, 2, 3], y=[2, 3]))
+
+
+def test_vmem_budget_gates_kernel_grid(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    small = dp.get_problem("needleman_wunsch").encode(x=[1, 2, 3], y=[2, 3])
+    assert dp.backends.get("kernel_grid").supports(small)
+    assert grid_vmem_bytes(small) <= 8 << 20
+    big = dp.GridSpec.from_shape_key(
+        ("grid", "antidiag", "min", 4, 1024, 1024,
+         ((0, 0, 1, 1), (0, 0, 1, 0), (0, 0, 0, 1)), ()))
+    assert grid_vmem_bytes(big) > 8 << 20
+    assert not dp.backends.get("kernel_grid").supports(big)
+    # jnp fallback mode: no VMEM constraint applies
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    assert dp.backends.get("kernel_grid").supports(big)
+
+
+# ---------------------------------------------------------------------------
+# Satellite (b): differential grid-vs-linear encodings
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("grid_name,linear_name",
+                         [("edit_distance_grid", "edit_distance"),
+                          ("lcs_grid", "lcs")])
+def test_grid_and_linear_encodings_decode_equal_cost(grid_name, linear_name):
+    """The same instance solved through both family encodings yields the
+    same optimum, and both decoded solutions re-cost to it (witnesses may
+    differ — ties — but never their cost)."""
+    from test_dp_conformance import VERIFIERS
+
+    rng = _rng(f"diff/{grid_name}")
+    for trial in range(4):
+        n = int(rng.integers(2, 12))
+        m = int(rng.integers(2, 12))
+        kw = {"x": rng.integers(0, 4, size=n), "y": rng.integers(0, 4, size=m)}
+        g = dp.solve(grid_name, reconstruct=True, **kw)
+        l = dp.solve(linear_name, reconstruct=True, **kw)
+        assert float(g.value) == float(l.value), (trial, g.value, l.value)
+        for name, ans in ((grid_name, g), (linear_name, l)):
+            got, want = VERIFIERS[name](kw, ans)
+            np.testing.assert_allclose(got, want, rtol=1e-5,
+                                       err_msg=f"{name} trial {trial}")
+
+
+def test_grid_linear_differential_on_degenerate_sequences():
+    for kw in ({"x": [1], "y": [1]}, {"x": [1, 2, 3], "y": [3]},
+               {"x": [2], "y": [1, 2, 2, 1]}):
+        assert float(dp.solve("edit_distance_grid", **kw)) == \
+            float(dp.solve("edit_distance", **kw))
+        assert float(dp.solve("lcs_grid", **kw)) == \
+            float(dp.solve("lcs", **kw))
+
+
+# ---------------------------------------------------------------------------
+# Decoded-solution spot checks (known instances)
+# ---------------------------------------------------------------------------
+def test_needleman_wunsch_known_alignment():
+    # classic: GATTACA / GCATGCU under +1/-1/-1 (match/mismatch/gap)
+    x = [6, 0, 19, 19, 0, 2, 0]          # G A T T A C A
+    y = [6, 2, 0, 19, 6, 2, 20]          # G C A T G C U
+    ans = dp.solve("needleman_wunsch", x=x, y=y, match=1.0, mismatch=-1.0,
+                   gap=-1.0, reconstruct=True)
+    assert ans.value == 0.0
+    used = [op[0] for op in ans.solution["ops"]]
+    assert used.count("del") + used.count("ins") >= 1  # gapped optimum
+
+
+def test_gotoh_prefers_one_long_gap():
+    """Affine scoring must place one open+extends gap where linear scoring
+    would be indifferent to scattering it."""
+    x = [0, 1, 2, 3, 4, 5]
+    y = [0, 5]
+    ans = dp.solve("gotoh", x=x, y=y, match=2.0, mismatch=-3.0,
+                   gap_open=-4.0, gap_extend=-0.5, reconstruct=True)
+    kinds = [op[0] for op in ans.solution["ops"]]
+    assert kinds == ["align", "del", "del", "del", "del", "align"]
+    np.testing.assert_allclose(ans.value, 2 + 2 - 4 - 0.5 * 3)
+
+
+def test_cky_parses_known_grammar():
+    # S -> S S | A B ; lexical: A covers token 0, B covers token 1, S token 2
+    rules = [(0, 0, 0), (0, 1, 2)]
+    lex = np.full((3, 3), -50.0)
+    lex[0, 2], lex[1, 0], lex[2, 1] = -0.1, -0.2, -0.3
+    ans = dp.solve("cky", tokens=[0, 1, 0, 1], rules=rules,
+                   rule_logp=[-0.4, -0.6], lex=lex, reconstruct=True)
+    tree = ans.solution["tree"]
+    assert tree[0] == 0 and len(tree) == 3     # rooted at S, binary
+    np.testing.assert_allclose(ans.value, 2 * (-0.6 - 0.2 - 0.3) - 0.4,
+                               rtol=1e-5)
+    assert "(" in ans.solution["bracket"]

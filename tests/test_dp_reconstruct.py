@@ -1,152 +1,18 @@
-"""Reconstruction tests (DESIGN.md §5): every zoo problem's decoded solution
-must re-compute — with plain numpy, from the raw instance, sharing no code
-with the solvers — to exactly the table optimum; the numpy fallback must
-agree with device-emitted args; and engine-batched reconstruction must trace
-one solver program and one traceback program per shape bucket."""
+"""Reconstruction plumbing tests (DESIGN.md §5): host/device arg agreement,
+the numpy fallback for argless backends, arg-table invariants, and
+engine-batched reconstruction tracing one solver program and one traceback
+program per shape bucket.
+
+The registry-wide decoded-solution sweep (every problem, every family) and
+the independent verifiers live in ``test_dp_conformance``; this module
+imports those verifiers for its plumbing-specific checks."""
 import zlib
 
 import numpy as np
 import pytest
 
 from repro import dp
-
-ALL_PROBLEMS = ("sdp", "edit_distance", "lcs", "viterbi", "unbounded_knapsack",
-                "mcm", "optimal_bst", "polygon_triangulation")
-
-
-# ---------------------------------------------------------------------------
-# Independent verifiers: solution + raw instance -> recomputed cost
-# ---------------------------------------------------------------------------
-def _verify_sdp(kw, ans):
-    sol = ans.solution
-    # min/max witness chain: the optimum is the init value the chain ends in
-    assert 0 <= sol["terminal"] < len(kw["init"])
-    for c, o in zip(sol["cells"], sol["offsets_taken"]):
-        assert o in kw["offsets"] and c >= len(kw["init"])
-    return float(kw["init"][sol["terminal"]]), float(ans.value[-1])
-
-
-def _verify_edit(kw, ans):
-    x, y = np.asarray(kw["x"]), np.asarray(kw["y"])
-    i = j = 0
-    cost = 0.0
-    for op in ans.solution["ops"]:
-        if op[0] in ("match", "sub"):
-            assert op[1] == i and op[2] == j
-            if op[0] == "match":
-                assert x[i] == y[j]
-            else:
-                assert x[i] != y[j]
-                cost += 1.0
-            i, j = i + 1, j + 1
-        elif op[0] == "del":
-            assert op[1] == i
-            i, cost = i + 1, cost + 1.0
-        else:
-            assert op[0] == "ins" and op[1] == j
-            j, cost = j + 1, cost + 1.0
-    assert (i, j) == (len(x), len(y)), "alignment must cover both sequences"
-    return cost, ans.value
-
-
-def _verify_lcs(kw, ans):
-    x, y = np.asarray(kw["x"]), np.asarray(kw["y"])
-    pairs = ans.solution["pairs"]
-    for (i0, j0), (i1, j1) in zip(pairs, pairs[1:]):
-        assert i0 < i1 and j0 < j1, "subsequence indices must increase"
-    for i, j in pairs:
-        assert x[i] == y[j]
-    return float(len(pairs)), ans.value
-
-
-def _verify_viterbi(kw, ans):
-    log_a, log_b = np.asarray(kw["log_a"]), np.asarray(kw["log_b"])
-    log_pi, obs = np.asarray(kw["log_pi"]), np.asarray(kw["obs"])
-    st = ans.solution["states"]
-    assert len(st) == len(obs) and all(0 <= s < len(log_pi) for s in st)
-    lp = log_pi[st[0]] + log_b[st[0], obs[0]]
-    for t in range(1, len(obs)):
-        lp += log_a[st[t - 1], st[t]] + log_b[st[t], obs[t]]
-    return float(lp), ans.value
-
-
-def _verify_knapsack(kw, ans):
-    real = {(int(w), float(v))
-            for w, v in zip(kw["item_weights"], kw["item_values"])}
-    items = ans.solution["items"]
-    for w, v in items:
-        assert any(w == rw and np.isclose(v, rv, rtol=1e-5)
-                   for rw, rv in real), (w, v)
-    assert sum(w for w, _ in items) <= int(kw["capacity"])
-    return float(sum(v for _, v in items)), ans.value
-
-
-def _mcm_tree_cost(tree, p):
-    """Cost + resulting shape of multiplying the chain per the tree."""
-    if isinstance(tree, (int, np.integer)):
-        return 0.0, (p[tree], p[tree + 1])
-    cl, (r0, c0) = _mcm_tree_cost(tree[0], p)
-    cr, (r1, c1) = _mcm_tree_cost(tree[1], p)
-    assert c0 == r1, "tree multiplies non-conforming shapes"
-    return cl + cr + r0 * c0 * c1, (r0, c1)
-
-
-def _verify_mcm(kw, ans):
-    cost, _ = _mcm_tree_cost(ans.solution["tree"], np.asarray(kw["dims"]))
-    return float(cost), ans.value
-
-
-def _verify_bst(kw, ans):
-    freq = np.asarray(kw["freq"])
-
-    def cost(node, depth):
-        if node is None:
-            return 0.0, []
-        r, left, right = node
-        cl, kl = cost(left, depth + 1)
-        cr, kr = cost(right, depth + 1)
-        return depth * freq[r] + cl + cr, kl + [r] + kr
-
-    total, inorder = cost(ans.solution["tree"], 1)
-    assert inorder == list(range(len(freq))), "inorder must be the key order"
-    return float(total), ans.value
-
-
-def _verify_poly(kw, ans):
-    v = np.asarray(kw["vertices"])
-    tris = ans.solution["triangles"]
-    assert len(tris) == len(v) - 2, "an m-gon has m-2 triangles"
-    return float(sum(v[a] * v[b] * v[c] for a, b, c in tris)), ans.value
-
-
-VERIFIERS = {
-    "sdp": _verify_sdp, "edit_distance": _verify_edit, "lcs": _verify_lcs,
-    "viterbi": _verify_viterbi, "unbounded_knapsack": _verify_knapsack,
-    "mcm": _verify_mcm, "optimal_bst": _verify_bst,
-    "polygon_triangulation": _verify_poly,
-}
-
-
-@pytest.mark.parametrize("name", sorted(ALL_PROBLEMS))
-def test_reconstructed_solution_recomputes_to_optimum(name):
-    """Acceptance: randomized instances, the decoded solution's independently
-    re-computed cost equals the table optimum (and the oracle's)."""
-    prob = dp.get_problem(name)
-    rng = np.random.default_rng(zlib.crc32(name.encode()) ^ 0xA5A5)
-    for trial in range(4):
-        kw = prob.sample(rng, int(rng.integers(6, 16)))
-        ans = dp.solve(name, reconstruct=True, **kw)
-        assert isinstance(ans, dp.Answer)
-        assert ans.source == "device", \
-            f"dispatch must prefer an arg-capable route, got {ans.source}"
-        got, want = VERIFIERS[name](kw, ans)
-        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5,
-                                   err_msg=f"{name} trial {trial}")
-        # ... and the optimum itself matches the independent oracle
-        ref = prob.solve_reference(**kw)
-        ref = ref[-1] if name == "sdp" else ref  # sdp's answer is the table
-        np.testing.assert_allclose(np.float64(want), np.float64(ref),
-                                   rtol=1e-4, atol=1e-5)
+from test_dp_conformance import VERIFIERS, _mcm_tree_cost, _verify_edit
 
 
 @pytest.mark.parametrize("name,backend", [("mcm", "mcm_pipeline"),
