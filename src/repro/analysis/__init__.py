@@ -1,0 +1,31 @@
+"""Static analysis of the DP stack (DESIGN.md §10) — no device execution.
+
+Two subsystems, one gate:
+
+* :mod:`repro.analysis.verifier` — the schedule-hazard verifier: proves
+  write-before-read finalization for every registered family × route on
+  the family's probe instances (distance-vector margins + exhaustive
+  symbolic simulation), including the kernel layouts' spill/clobber
+  discipline and route invariants (chunk carry, DMA slots, the safe
+  order's Hall condition).
+* :mod:`repro.analysis.linter` — the registry contract linter: env-knob
+  declaration/validation coverage, cache-tag and platform-key folds,
+  calibration regime isolation, shape-key round-trips, capability pairs.
+
+``python -m repro.analysis --gate`` runs both and fails on any finding —
+the CI gate that keeps the next ``register_family()`` from silently
+reintroducing the paper's Fig.-8 hazard class.
+"""
+from repro.analysis.findings import Finding, report, write_report
+from repro.analysis.linter import run_linter
+from repro.analysis.verifier import verify_registry, verify_schedule
+
+__all__ = ["Finding", "report", "run_all", "run_linter", "verify_registry",
+           "verify_schedule", "write_report"]
+
+
+def run_all(source_root=None):
+    """Verifier + linter; returns (findings, stats)."""
+    findings, stats = verify_registry()
+    lint_findings, lint_stats = run_linter(source_root)
+    return findings + lint_findings, {**stats, **lint_stats}

@@ -1,0 +1,56 @@
+"""CLI: ``python -m repro.analysis [--gate] [--json PATH]``.
+
+Runs the schedule-hazard verifier and the registry contract linter over
+everything registered, prints a human summary, optionally writes the
+structured JSON report, and (with ``--gate``) exits non-zero on any
+finding — the hard CI gate."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.analysis import report, run_all, write_report
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static schedule-hazard verifier + registry contract "
+                    "linter (no device execution).")
+    parser.add_argument("--gate", action="store_true",
+                        help="exit 1 if any finding is reported")
+    parser.add_argument("--json", metavar="PATH",
+                        help="write the structured findings report here")
+    args = parser.parse_args(argv)
+
+    t0 = time.perf_counter()
+    findings, stats = run_all()
+    stats["elapsed_s"] = round(time.perf_counter() - t0, 3)
+
+    if args.json:
+        rep = write_report(args.json, findings, stats)
+    else:
+        rep = report(findings, stats)
+
+    print(f"repro.analysis: {stats['schedules_verified']} schedules "
+          f"verified across {stats['routes']} routes / "
+          f"{stats['families']} families; {stats['knobs_declared']} env "
+          f"knobs, {stats['files_scanned']} files linted "
+          f"({stats['elapsed_s']}s)")
+    if findings:
+        print(f"FAIL: {len(findings)} finding(s):", file=sys.stderr)
+        print(json.dumps(rep["counts"], indent=2, sort_keys=True),
+              file=sys.stderr)
+        for f in findings:
+            probe = f" [{f.probe}]" if f.probe else ""
+            print(f"  {f.check} · {f.subject}{probe}: {f.message}",
+                  file=sys.stderr)
+        return 1 if args.gate else 0
+    print("OK: no findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

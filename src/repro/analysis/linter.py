@@ -1,0 +1,306 @@
+"""Registry contract linter (DESIGN.md §10, rules L1–L5).
+
+Registry-wide consistency checks that need no device execution:
+
+* **L1 knob coverage + validated reads** — every ``REPRO_*`` token in the
+  source tree is declared in ``dp/envknobs.py``; no module but envknobs
+  touches ``os.environ`` for a ``REPRO_`` var directly; every declared
+  non-path knob rejects malformed values with a ``ValueError`` naming the
+  env var.
+* **L2 cache-tag fold** — every knob a backend declares ``env_sensitive``
+  to actually changes that backend's ``cache_tag()`` when flipped, and
+  every ``dp_codegen`` knob changes ``autotune._jax_backend()`` (the
+  calibration platform key): a knob that alters the traced program but not
+  the keys would serve stale programs / cross-contaminated timings.
+* **L3 regime isolation** — amortized ``batch``, ``reconstruct``, and
+  sharded calibration observations never transfer onto plain single-solve
+  keys (``shape_key_distance`` must refuse across regimes).
+* **L4 shape-key contract** — family-tagged keys, ``from_shape_key``
+  round-trips, and the phantom spec validates.
+* **L5 capability pairs** — batch capabilities imply their single-instance
+  pair (the routing layer falls back batch→single), fused implies
+  arg-emitting, and specs that refuse ``supports_args()`` give a reason.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import re
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+from repro.dp import envknobs
+
+__all__ = ["run_linter"]
+
+_TOKEN = re.compile(r"REPRO_[A-Z][A-Z0-9_]*")
+#: literal os.environ access of a REPRO_ var (read, get, setdefault, write)
+_DIRECT_ENV = re.compile(
+    r"environ(?:\.get|\.setdefault|\.pop)?\s*[\[\(]\s*f?[\"']REPRO_")
+
+
+def _source_files(source_root: Optional[str]) -> List[Path]:
+    if source_root is None:
+        import repro
+
+        source_root = Path(repro.__file__).parent
+    return sorted(Path(source_root).rglob("*.py"))
+
+
+@contextlib.contextmanager
+def _env(name: str, value: str):
+    old = os.environ.get(name)
+    os.environ[name] = value
+    try:
+        yield
+    finally:
+        if old is None:
+            os.environ.pop(name, None)
+        else:
+            os.environ[name] = old
+
+
+def _flip_value(name: str) -> Optional[str]:
+    """A valid value for ``name`` that differs from its current effective
+    value — what L2 flips the env to when probing key folds."""
+    k = envknobs.knob(name)
+    cur = envknobs.read(name)
+    if k.kind == "choice":
+        for c in ((k.probe,) if k.probe else ()) + k.choices:
+            if c is not None and c != cur:
+                return c
+    elif k.kind == "positive_int":
+        p = int(k.probe) if k.probe is not None else 2
+        return str(p if p != int(cur or 0) else 2 * p + 1)
+    return None                       # path knobs have no generic flip
+
+
+# --- L1: knob coverage + validated reads ------------------------------------
+def check_knob_declarations(source_root: Optional[str] = None
+                            ) -> Tuple[List[Finding], int]:
+    findings: List[Finding] = []
+    files = _source_files(source_root)
+    for path in files:
+        text = path.read_text()
+        rel = path.name if path.name == "envknobs.py" else str(path)
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for tok in _TOKEN.findall(line):
+                if tok not in envknobs.KNOBS:
+                    findings.append(Finding(
+                        check="undeclared_knob", subject=tok,
+                        message=f"{path}:{lineno} references {tok}, which "
+                                "is not declared in dp/envknobs.py",
+                        detail={"file": str(path), "line": lineno}))
+            if rel != "envknobs.py" and _DIRECT_ENV.search(line):
+                findings.append(Finding(
+                    check="unvalidated_env_access", subject=str(path),
+                    message=f"{path}:{lineno} accesses a REPRO_ env var "
+                            "directly instead of through dp/envknobs "
+                            "(read/set_env)",
+                    detail={"file": str(path), "line": lineno,
+                            "source": line.strip()}))
+    return findings, len(files)
+
+
+def check_knob_validation() -> List[Finding]:
+    """Every declared non-path knob must reject malformed values with a
+    ValueError that names the env var (the guidance a user needs to fix
+    their environment)."""
+    findings: List[Finding] = []
+    for name, k in sorted(envknobs.KNOBS.items()):
+        if k.kind == "path":
+            continue
+        bad = ["definitely!not@valid"]
+        if k.kind == "positive_int":
+            bad.append("0")
+        for raw in bad:
+            try:
+                envknobs.parse(name, raw)
+            except ValueError as e:
+                if name not in str(e):
+                    findings.append(Finding(
+                        check="error_omits_env_var", subject=name,
+                        message=f"rejecting {name}={raw!r} raised "
+                                f"ValueError({e}) without naming the "
+                                "env var"))
+            else:
+                findings.append(Finding(
+                    check="knob_not_validated", subject=name,
+                    message=f"{name}={raw!r} was accepted; malformed "
+                            "values must raise ValueError"))
+    return findings
+
+
+# --- L2: cache-tag / platform-key folds -------------------------------------
+def check_cache_tag_fold() -> List[Finding]:
+    from repro.dp import autotune, backends
+
+    backends.ensure_registered()
+    findings: List[Finding] = []
+    for name in backends.names():
+        b = backends.get(name)
+        for var in b.env_sensitive:
+            if var not in envknobs.KNOBS:
+                findings.append(Finding(
+                    check="undeclared_knob", subject=var,
+                    message=f"backend {name!r} declares env_sensitive "
+                            f"knob {var}, which is not in dp/envknobs"))
+                continue
+            flip = _flip_value(var)
+            if flip is None:
+                findings.append(Finding(
+                    check="unflippable_knob", subject=var,
+                    message=f"backend {name!r} is env_sensitive to {var} "
+                            "but the knob has no probe value to flip to"))
+                continue
+            base = b.cache_tag() if b.cache_tag else ()
+            with _env(var, flip):
+                flipped = b.cache_tag() if b.cache_tag else ()
+            if base == flipped:
+                findings.append(Finding(
+                    check="cache_tag_ignores_knob", subject=name,
+                    message=f"backend {name!r} declares {var} codegen-"
+                            f"affecting but cache_tag() is {base!r} both "
+                            f"before and after flipping it to {flip!r} — "
+                            "a mid-process flip would serve programs "
+                            "traced under the old value",
+                    detail={"knob": var, "tag": repr(base)}))
+    for k in envknobs.dp_codegen_knobs():
+        flip = _flip_value(k.name)
+        if flip is None:
+            continue
+        base = autotune._jax_backend()
+        with _env(k.name, flip):
+            flipped = autotune._jax_backend()
+        if base == flipped:
+            findings.append(Finding(
+                check="platform_key_ignores_knob", subject=k.name,
+                message=f"autotune._jax_backend() == {base!r} with and "
+                        f"without {k.name}={flip!r}: calibration timings "
+                        "measured under different codegen would share "
+                        "entries",
+                detail={"knob": k.name, "platform": base}))
+    return findings
+
+
+# --- L3: calibration regime isolation ---------------------------------------
+def check_regime_isolation() -> List[Finding]:
+    from repro.dp import backends
+    from repro.dp.problem import FAMILIES
+
+    findings: List[Finding] = []
+    for fam in sorted(FAMILIES):
+        key = FAMILIES[fam].probe_specs()[0].shape_key()
+        cases = [
+            ("plain vs batch", key, key + ("batch",), None),
+            ("batch vs reconstruct",
+             key + ("batch",), key + ("reconstruct",), None),
+            ("plain vs sharded", key, key + (("shard", 8),), None),
+            ("batch vs sharded-reconstruct", key + ("batch",),
+             key + (("shard", 8, "reconstruct"),), None),
+            ("same regime, same shape",
+             key + ("batch",), key + ("batch",), 0.0),
+        ]
+        for label, a, b, want in cases:
+            got = backends.shape_key_distance(a, b)
+            if got != want:
+                findings.append(Finding(
+                    check="regime_leak", subject=fam,
+                    message=f"shape_key_distance [{label}] returned "
+                            f"{got!r}, expected {want!r} — "
+                            + ("incomparable regimes must never transfer"
+                               if want is None else
+                               "same-regime keys must stay comparable"),
+                    detail={"case": label}))
+        geo, regime = backends.split_shape_key(key + ("batch",))
+        if geo != key or regime != "batch":
+            findings.append(Finding(
+                check="regime_leak", subject=fam,
+                message="split_shape_key failed to strip the batch "
+                        "regime marker"))
+    return findings
+
+
+# --- L4: shape-key contract --------------------------------------------------
+def check_shape_key_contract() -> List[Finding]:
+    from repro.dp.problem import FAMILIES
+
+    findings: List[Finding] = []
+    for fam in sorted(FAMILIES):
+        cls = FAMILIES[fam]
+        for spec in cls.probe_specs():
+            key = spec.shape_key()
+            label = f"{fam} probe {key!r}"
+            if not key or key[0] != cls.family:
+                findings.append(Finding(
+                    check="shape_key_untagged", subject=fam,
+                    message=f"{label}: shape_key must lead with the "
+                            f"family tag {cls.family!r}, got "
+                            f"{key[0] if key else key!r}"))
+                continue
+            phantom = cls.from_shape_key(key)
+            if phantom.shape_key() != key:
+                findings.append(Finding(
+                    check="shape_key_roundtrip", subject=fam,
+                    message=f"{label}: from_shape_key produced a spec "
+                            f"with key {phantom.shape_key()!r}"))
+            try:
+                phantom.validate()
+            except Exception as e:  # noqa: BLE001 — report, don't crash
+                findings.append(Finding(
+                    check="phantom_spec_invalid", subject=fam,
+                    message=f"{label}: the phantom spec fails validate(): "
+                            f"{e}"))
+    return findings
+
+
+# --- L5: capability pairs ----------------------------------------------------
+def check_capability_pairs() -> List[Finding]:
+    from repro.dp import backends
+    from repro.dp.problem import FAMILIES
+
+    backends.ensure_registered()
+    findings: List[Finding] = []
+    for name in backends.names():
+        b = backends.get(name)
+        pairs = [("batch_run_with_args", "run_with_args"),
+                 ("batch_run_fused", "run_fused"),
+                 ("run_fused", "run_with_args")]
+        for have, need in pairs:
+            if getattr(b, have) is not None and getattr(b, need) is None:
+                findings.append(Finding(
+                    check="capability_pair_broken", subject=name,
+                    message=f"backend {name!r} exposes {have} without "
+                            f"{need}; the routing layer's batch→single "
+                            "and fused→args fallbacks assume the pair"))
+    for fam in sorted(FAMILIES):
+        for spec in FAMILIES[fam].probe_specs():
+            supported = spec.supports_args()
+            if not isinstance(supported, bool):
+                findings.append(Finding(
+                    check="supports_args_contract", subject=fam,
+                    message=f"supports_args() returned "
+                            f"{type(supported).__name__}, expected bool"))
+            elif not supported and not spec.args_unsupported_reason():
+                findings.append(Finding(
+                    check="supports_args_contract", subject=fam,
+                    message="a spec refusing supports_args() must give "
+                            "an args_unsupported_reason()"))
+    return findings
+
+
+def run_linter(source_root: Optional[str] = None
+               ) -> Tuple[List[Finding], dict]:
+    """All linter rules; returns (findings, stats)."""
+    findings: List[Finding] = []
+    knob_findings, files_scanned = check_knob_declarations(source_root)
+    findings.extend(knob_findings)
+    findings.extend(check_knob_validation())
+    findings.extend(check_cache_tag_fold())
+    findings.extend(check_regime_isolation())
+    findings.extend(check_shape_key_contract())
+    findings.extend(check_capability_pairs())
+    stats = {"knobs_declared": len(envknobs.KNOBS),
+             "files_scanned": files_scanned}
+    return findings, stats

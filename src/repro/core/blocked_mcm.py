@@ -235,6 +235,12 @@ def _dims_match_weights(spec) -> bool:
     return _dp_backends.lru_cached(_GUARD_CACHE, key, check, _GUARD_CACHE_MAX)
 
 
+def _schedule(spec):
+    from repro.dp import schedule as _sched
+
+    return _sched.blocked_mcm_schedule(spec)
+
+
 _dp_backends.register(_dp_backends.Backend(
     name="blocked_mcm", geometry="triangular",
     run=_blocked_run,
@@ -242,4 +248,5 @@ _dp_backends.register(_dp_backends.Backend(
     supports=lambda s: (s.dims is not None and _pick_tile(s.n) is not None
                         and _dims_match_weights(s)),
     batch_run=None,
+    schedule=_schedule,
     doc="tropical-tile (min,+) GEMM MCM solver (beyond-paper)"))

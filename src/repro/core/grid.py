@@ -399,10 +399,17 @@ def grid_traceback_np(args: np.ndarray, spec: GridSpec,
 # ---------------------------------------------------------------------------
 # Registration
 # ---------------------------------------------------------------------------
+def _schedule(spec):
+    from repro.dp import schedule as _sched
+
+    return _sched.grid_wavefront_schedule(spec)
+
+
 _dp_backends.register(_dp_backends.grid_backend(
     "grid_wavefront", solve_grid,
     cost=lambda s: _dp_backends.grid_costs(s)["grid_wavefront"],
     jax_arg_fn=solve_grid_with_args,
+    schedule=_schedule,
     doc="jnp masked wavefront over anti-diagonals (alignment grids) or "
         "span diagonals (parse charts): one gathered combine + drop-mode "
         "scatter per frontier, vmap-batchable, arg-emitting."))

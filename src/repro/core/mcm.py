@@ -474,10 +474,13 @@ def _pipeline_run(spec) -> np.ndarray:
 
 
 def _register_backends() -> None:
+    from repro.dp import schedule as _sched
+
     _dp_backends.register(_dp_backends.triangular_tab_backend(
         "wavefront", solve_wavefront_tab,
         cost=lambda s: _dp_backends.triangular_costs(s)["wavefront"],
         jax_arg_fn=solve_wavefront_tab_with_args,
+        schedule=_sched.triangular_wavefront_schedule,
         doc="dense masked per-diagonal combine (n-1 vectorized steps)"))
     _dp_backends.register(_dp_backends.Backend(
         name="mcm_pipeline", geometry="triangular",
@@ -485,6 +488,7 @@ def _register_backends() -> None:
         cost=lambda s: _dp_backends.triangular_costs(s)["mcm_pipeline"],
         supports=lambda s: True,
         batch_run=None,  # host-side table build per instance — loop fallback
+        schedule=lambda s: _sched.mcm_pipeline_schedule(s, order="safe"),
         doc="paper Fig.-8 pipeline (order=safe); O(n²) outer steps"))
 
 

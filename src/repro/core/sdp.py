@@ -438,24 +438,33 @@ from repro.dp import backends as _dp_backends  # noqa: E402
 
 
 def _register_backends() -> None:
+    from repro.dp import schedule as _sched
+
     table = [
         ("sequential", solve_sequential, None, None,
+         lambda s: _sched.linear_sequential_schedule(s, route="sequential"),
          "Fig.-1 double loop (oracle parity)"),
         ("tournament", solve_tournament, solve_tournament_with_args, None,
+         lambda s: _sched.linear_sequential_schedule(
+             s, route="tournament", kind="sequential_tree"),
          "per-element gather + tree reduce (§II-B)"),
         ("pipeline", solve_pipeline, None, None,
+         _sched.linear_pipeline_schedule,
          "the paper's Fig.-2 skewed pipeline, vectorized over stages"),
         ("blocked", solve_blocked, solve_blocked_with_args, None,
+         _sched.linear_blocked_schedule,
          "TPU-adapted blocked pipeline: min(a_k, B) outputs per step"),
         ("companion_scan", solve_companion_scan, None,
          lambda s: int(s.offsets[0]) <= 16,
+         _sched.linear_companion_scan_schedule,
          "log-depth associative_scan over companion matrices (small a_1)"),
     ]
-    for name, fn, arg_fn, supports, doc in table:
+    for name, fn, arg_fn, supports, schedule, doc in table:
         _dp_backends.register(_dp_backends.linear_backend(
             name, fn,
             cost=lambda s, _n=name: _dp_backends.linear_costs(s)[_n],
-            supports=supports, jax_arg_fn=arg_fn, doc=doc))
+            supports=supports, jax_arg_fn=arg_fn, schedule=schedule,
+            doc=doc))
 
 
 _register_backends()

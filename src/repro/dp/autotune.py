@@ -52,6 +52,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.dp import backends as _backends
+from repro.dp import envknobs
 from repro.dp import telemetry as _telemetry
 from repro.dp.problem import Spec
 
@@ -246,7 +247,7 @@ def get_table() -> CalibrationTable:
     """The process-global table; auto-loads ``$REPRO_DP_CALIB`` when set."""
     global _TABLE
     if _TABLE is None:
-        path = os.environ.get(ENV_PATH)
+        path = envknobs.read(ENV_PATH)
         _TABLE = CalibrationTable.load(path) if path else CalibrationTable()
     return _TABLE
 

@@ -109,7 +109,17 @@ class Backend:
     further: solve + args + traceback in ONE dispatch, returning
     ``(table, args, path)`` — the routing layer prefers them whenever a
     reconstruction was requested, which is what makes ``reconstruct=True``
-    a single launch on the tiled kernel tier (DESIGN.md §5)."""
+    a single launch on the tiled kernel tier (DESIGN.md §5).
+
+    Static-analysis contract (DESIGN.md §10): ``schedule`` is the route's
+    schedule descriptor — ``schedule(spec) -> repro.dp.schedule
+    .ScheduleModel`` declaring the symbolic consume/finalize steps the
+    hazard verifier checks against the family's ``schedule_model()``;
+    every registered route must provide one (the conformance suite and
+    the ``repro.analysis`` CI gate enforce it). ``cache_tag`` is the
+    normalized no-arg ambient-state tagger folded into batch-jit cache
+    keys, exposed so the linter can observe it; ``env_sensitive`` names
+    the REPRO_* knobs that tag must react to."""
 
     name: str
     geometry: str
@@ -121,6 +131,9 @@ class Backend:
     batch_run_with_args: Optional[Callable] = None
     run_fused: Optional[Callable] = None
     batch_run_fused: Optional[Callable] = None
+    schedule: Optional[Callable] = None
+    cache_tag: Optional[Callable] = None
+    env_sensitive: tuple = ()
     doc: str = ""
 
 
@@ -187,13 +200,16 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
                    supports: Optional[Callable] = None,
                    jax_arg_fn: Optional[Callable] = None,
                    cache_tag: Optional[Callable] = None,
+                   schedule: Optional[Callable] = None,
+                   env_sensitive: tuple = (),
                    doc: str = "") -> Backend:
     """Wrap a JAX S-DP solver ``fn(init, offsets, op, n, weights=None)``
     into a Backend with a single-call vmapped batch path. ``jax_arg_fn`` (same
     signature, returns ``(st, args)``) additionally equips the backend with
     the ``*_with_args`` capability pair. ``cache_tag`` (no-arg callable)
     contributes trace-time ambient state to the batch-jit cache keys (see
-    :func:`_cache_tagger`)."""
+    :func:`_cache_tagger`); ``schedule``/``env_sensitive`` are the
+    static-analysis descriptors (see :class:`Backend`)."""
     import jax
     import jax.numpy as jnp
 
@@ -258,7 +274,9 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
     return Backend(name=name, geometry="linear", run=run, cost=cost,
                    supports=supports or (lambda s: True),
                    batch_run=batch_run, run_with_args=run_with_args,
-                   batch_run_with_args=batch_run_with_args, doc=doc)
+                   batch_run_with_args=batch_run_with_args,
+                   schedule=schedule, cache_tag=tag,
+                   env_sensitive=tuple(env_sensitive), doc=doc)
 
 
 def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
@@ -266,6 +284,8 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
                            jax_arg_fn: Optional[Callable] = None,
                            jax_fused_fn: Optional[Callable] = None,
                            cache_tag: Optional[Callable] = None,
+                           schedule: Optional[Callable] = None,
+                           env_sensitive: tuple = (),
                            doc: str = "") -> Backend:
     """Wrap a weight-table triangular solver ``fn(wtab, n)`` (e.g.
     ``core.mcm.solve_wavefront_tab``) with a vmapped batch path.
@@ -346,13 +366,16 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
                    run_with_args=run_with_args,
                    batch_run_with_args=batch_run_with_args,
                    run_fused=run_fused, batch_run_fused=batch_run_fused,
-                   doc=doc)
+                   schedule=schedule, cache_tag=tag,
+                   env_sensitive=tuple(env_sensitive), doc=doc)
 
 
 def grid_backend(name: str, jax_fn: Callable, cost: Callable,
                  supports: Optional[Callable] = None,
                  jax_arg_fn: Optional[Callable] = None,
                  cache_tag: Optional[Callable] = None,
+                 schedule: Optional[Callable] = None,
+                 env_sensitive: tuple = (),
                  doc: str = "") -> Backend:
     """Wrap a grid wavefront solver ``fn(arrs, meta)`` — ``arrs`` the
     spec's ``device_arrays()`` slot tuple, ``meta`` its hashable
@@ -416,7 +439,9 @@ def grid_backend(name: str, jax_fn: Callable, cost: Callable,
     return Backend(name=name, geometry="grid", run=run, cost=cost,
                    supports=supports or (lambda s: True),
                    batch_run=batch_run, run_with_args=run_with_args,
-                   batch_run_with_args=batch_run_with_args, doc=doc)
+                   batch_run_with_args=batch_run_with_args,
+                   schedule=schedule, cache_tag=tag,
+                   env_sensitive=tuple(env_sensitive), doc=doc)
 
 
 # shared cost vocabulary -----------------------------------------------------

@@ -58,6 +58,8 @@ from collections import OrderedDict, deque
 from contextlib import contextmanager
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.dp import envknobs
+
 __all__ = [
     "REGISTRY", "Counter", "DrainReport", "Gauge", "Histogram",
     "MetricsRegistry", "Span", "add_phase", "clock", "configure", "count",
@@ -76,7 +78,8 @@ clock = time.perf_counter
 # Mode knob: REPRO_TELEMETRY={off,basic,spans,profile}
 # ---------------------------------------------------------------------------
 ENV_MODE = "REPRO_TELEMETRY"
-_MODES = ("off", "basic", "spans", "profile")
+#: aliased from the central knob catalog (dp/envknobs.py)
+_MODES = envknobs.knob(ENV_MODE).choices
 _LEVEL_OF = {m: i for i, m in enumerate(_MODES)}
 LEVEL_OFF, LEVEL_BASIC, LEVEL_SPANS, LEVEL_PROFILE = 0, 1, 2, 3
 
@@ -86,14 +89,9 @@ _level: int = LEVEL_OFF              # cached int level for hot-path checks
 
 
 def _resolve_mode() -> str:
-    env = os.environ.get(ENV_MODE, "off")
-    if env not in _MODES:
-        # a typo like "span" must not silently run blind (the
-        # REPRO_KERNELS guard's pattern)
-        raise ValueError(
-            f"{ENV_MODE}={env!r} is not a valid telemetry mode; "
-            f"expected one of {', '.join(_MODES)}")
-    return env
+    # a typo like "span" must not silently run blind — envknobs.read
+    # raises ValueError naming REPRO_TELEMETRY
+    return envknobs.read(ENV_MODE)
 
 
 def mode() -> str:
@@ -142,7 +140,8 @@ def enabled(at: str = "basic") -> bool:
 # Logging hierarchy: REPRO_LOG={off,error,warning,info,debug}
 # ---------------------------------------------------------------------------
 ENV_LOG = "REPRO_LOG"
-_LOG_LEVELS = ("off", "error", "warning", "info", "debug")
+#: aliased from the central knob catalog (dp/envknobs.py)
+_LOG_LEVELS = envknobs.knob(ENV_LOG).choices
 _LOG_LEVEL_NO = {"off": logging.CRITICAL + 10, "error": logging.ERROR,
                  "warning": logging.WARNING, "info": logging.INFO,
                  "debug": logging.DEBUG}
@@ -150,14 +149,9 @@ _log_configured = False
 
 
 def log_level() -> str:
-    """The configured ``repro.dp`` log level, validated like
-    ``REPRO_KERNELS`` (a typo raises instead of silencing diagnostics)."""
-    env = os.environ.get(ENV_LOG, "off")
-    if env not in _LOG_LEVELS:
-        raise ValueError(
-            f"{ENV_LOG}={env!r} is not a valid log level; "
-            f"expected one of {', '.join(_LOG_LEVELS)}")
-    return env
+    """The configured ``repro.dp`` log level, validated on read via
+    dp/envknobs (a typo raises instead of silencing diagnostics)."""
+    return envknobs.read(ENV_LOG)
 
 
 def _configure_logging() -> None:

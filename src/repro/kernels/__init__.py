@@ -139,10 +139,19 @@ def _mode_tag() -> tuple:
     return tag
 
 
+#: the REPRO_* knobs every kernel-tier route's traced program depends on —
+#: ``_mode_tag`` must react to each (the ``repro.analysis`` linter flips
+#: them and asserts the tag changes)
+_KERNEL_ENV = ("REPRO_KERNELS", "REPRO_VMEM_BUDGET")
+
+from repro.dp import schedule as _sched  # noqa: E402
+
 _dp_backends.register(_dp_backends.linear_backend(
     "kernel_blocked", ops.sdp_blocked, cost=_kernel_blocked_cost,
     supports=_kernel_blocked_supports,
     jax_arg_fn=ops.sdp_blocked_with_args, cache_tag=_mode_tag,
+    schedule=_sched.linear_kernel_blocked_schedule,
+    env_sensitive=_KERNEL_ENV,
     doc="ops.sdp_blocked: Pallas VMEM-resident pipeline (weighted + "
         "arg-emitting) on the kernel path, jnp blocked solver elsewhere"))
 
@@ -150,12 +159,16 @@ _dp_backends.register(_dp_backends.triangular_tab_backend(
     "kernel_wavefront", ops.mcm_blocked, cost=_kernel_wavefront_cost,
     supports=_kernel_wavefront_supports,
     jax_arg_fn=ops.mcm_blocked_with_args, cache_tag=_mode_tag,
+    schedule=_sched.mcm_kernel_schedule,
+    env_sensitive=_KERNEL_ENV,
     doc="ops.mcm_blocked: Pallas VMEM-resident diagonal pipeline over the "
         "weight table on the kernel path, jnp wavefront solver elsewhere"))
 
 _dp_backends.register(_dp_backends.linear_backend(
     "kernel_tiled", ops.sdp_chunked, cost=_kernel_tiled_cost,
     jax_arg_fn=ops.sdp_chunked_with_args, cache_tag=_mode_tag,
+    schedule=_sched.linear_kernel_tiled_schedule,
+    env_sensitive=_KERNEL_ENV,
     doc="ops.sdp_chunked: HBM-streaming chunked S-DP pipeline — the table "
         "streams through a budget-sized VMEM window; no size cap"))
 
@@ -163,6 +176,8 @@ _dp_backends.register(_dp_backends.grid_backend(
     "kernel_grid", ops.grid_blocked, cost=_kernel_grid_cost,
     supports=_kernel_grid_supports,
     jax_arg_fn=ops.grid_blocked_with_args, cache_tag=_mode_tag,
+    schedule=_sched.grid_kernel_schedule,
+    env_sensitive=_KERNEL_ENV,
     doc="ops.grid_blocked: Pallas VMEM-resident frontier-major wavefront "
         "kernel (antidiag/spandiag, arg-emitting) on the kernel path, jnp "
         "masked wavefront solver elsewhere"))
@@ -172,5 +187,7 @@ _dp_backends.register(_dp_backends.triangular_tab_backend(
     cost=_kernel_tiled_wavefront_cost,
     jax_arg_fn=ops.mcm_tiled_with_args, jax_fused_fn=ops.mcm_tiled_fused,
     cache_tag=_mode_tag,
+    schedule=_sched.mcm_tiled_schedule,
+    env_sensitive=_KERNEL_ENV,
     doc="ops.mcm_tiled: HBM-resident tiled triangular solver, per-tile "
         "weight DMA, fused in-launch traceback; no size cap"))

@@ -62,6 +62,13 @@ REF_TILE = 32
 #: scratch cost per (lane, row) tile element in bytes: left + right f32 pairs
 #: plus the weight tile, each double-buffered (2 slots × 3 buffers × 4 bytes)
 _BYTES_PER_TILE_ELEM = 24
+#: DMA double-buffering discipline: the kernel reduces candidate tile ``j``
+#: out of slot ``j % 2`` while prefetching tile ``j + 1`` into the other
+#: slot, so the slot pool must cover the reducing tile plus every in-flight
+#: prefetch — ``DMA_SLOTS >= PREFETCH_DEPTH + 1``, checked statically by the
+#: schedule-hazard verifier (repro.analysis)
+DMA_SLOTS = 2
+PREFETCH_DEPTH = 1
 
 
 def _off(d, n):
@@ -200,7 +207,7 @@ def _make_tiled_kernel(n, T, E, with_args, fused):
 
             def etile(j, carry):
                 acc, arg = carry
-                slot = jax.lax.rem(j, 2)
+                slot = jax.lax.rem(j, DMA_SLOTS)
 
                 @pl.when(j + 1 < net)
                 def _prefetch():
@@ -284,13 +291,13 @@ def _tiled_call(wtab, n, T, E, with_args, fused, interpret):
     w = _pad_weights(wtab, n, T, E)
     out_shape = [jax.ShapeDtypeStruct((size,), w.dtype)]
     scratch = [
-        pltpu.VMEM((2, E, T), w.dtype),            # lbuf
-        pltpu.VMEM((2, E, T), w.dtype),            # rbuf
-        pltpu.VMEM((2, T, E), w.dtype),            # wbuf
+        pltpu.VMEM((DMA_SLOTS, E, T), w.dtype),    # lbuf
+        pltpu.VMEM((DMA_SLOTS, E, T), w.dtype),    # rbuf
+        pltpu.VMEM((DMA_SLOTS, T, E), w.dtype),    # wbuf
         pltpu.VMEM((T,), w.dtype),                 # obuf
-        pltpu.SemaphoreType.DMA((2, E)),           # sem_l
-        pltpu.SemaphoreType.DMA((2, E)),           # sem_r
-        pltpu.SemaphoreType.DMA((2,)),             # sem_w
+        pltpu.SemaphoreType.DMA((DMA_SLOTS, E)),   # sem_l
+        pltpu.SemaphoreType.DMA((DMA_SLOTS, E)),   # sem_r
+        pltpu.SemaphoreType.DMA((DMA_SLOTS,)),     # sem_w
         pltpu.SemaphoreType.DMA(()),               # sem_o
     ]
     if with_args:

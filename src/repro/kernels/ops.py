@@ -10,7 +10,6 @@ Set env ``REPRO_KERNELS=pallas|ref|interpret`` to override.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
@@ -34,11 +33,13 @@ from repro.kernels.sdp_pipeline import (sdp_chunked_pallas,
 from repro.kernels.semiring_matmul import tropical_matmul_pallas
 
 
-_KERNEL_MODES = ("auto", "pallas", "ref", "interpret")
+from repro.dp import envknobs as _envknobs
 
-#: default per-launch VMEM working-set budget (v5e has ~16 MiB/core; half of
-#: it leaves room for Mosaic's own spills and the double-buffered DMA stage)
-DEFAULT_VMEM_BUDGET_BYTES = 8 << 20
+#: aliased from the central knob catalog (dp/envknobs.py) — one source of
+#: truth for modes and defaults; kept as module attributes for the existing
+#: import surface
+_KERNEL_MODES = _envknobs.knob("REPRO_KERNELS").choices
+DEFAULT_VMEM_BUDGET_BYTES = _envknobs.DEFAULT_VMEM_BUDGET_BYTES
 
 
 def vmem_budget_bytes() -> int:
@@ -48,20 +49,8 @@ def vmem_budget_bytes() -> int:
     cache tags and calibration regime keys (``autotune._jax_backend``) so an
     override never serves stale compiled programs or cross-pollutes
     calibration entries. A malformed value fails loudly naming the env var
-    (the ``REPRO_KERNELS`` guard's pattern)."""
-    env = os.environ.get("REPRO_VMEM_BUDGET")
-    if env is None:
-        return DEFAULT_VMEM_BUDGET_BYTES
-    try:
-        budget = int(env)
-    except ValueError:
-        raise ValueError(
-            f"REPRO_VMEM_BUDGET={env!r} is not a valid VMEM budget; "
-            f"expected a positive integer byte count") from None
-    if budget < 1:
-        raise ValueError(
-            f"REPRO_VMEM_BUDGET={env!r} must be a positive integer byte count")
-    return budget
+    (``dp/envknobs.py``'s validated-on-read contract)."""
+    return _envknobs.read("REPRO_VMEM_BUDGET")
 
 
 def _count_entry(fn: str, mode: str) -> None:
@@ -75,12 +64,9 @@ def _count_entry(fn: str, mode: str) -> None:
 
 
 def kernel_mode() -> str:
-    env = os.environ.get("REPRO_KERNELS", "auto")
-    if env not in _KERNEL_MODES:
-        # a typo like "palas" must not silently fall through to the ref path
-        raise ValueError(
-            f"REPRO_KERNELS={env!r} is not a valid kernel mode; "
-            f"expected one of {', '.join(_KERNEL_MODES)}")
+    # a typo like "palas" must not silently fall through to the ref path —
+    # envknobs.read raises ValueError naming REPRO_KERNELS
+    env = _envknobs.read("REPRO_KERNELS")
     if env != "auto":
         return env
     return "pallas" if jax.default_backend() == "tpu" else "ref"
@@ -277,20 +263,8 @@ def _gqa_broadcast(k, hq):
 def _flash_chunk_env(default: int) -> int:
     """Resolve the KV chunk size, validating ``REPRO_FLASH_CHUNK`` — a typo
     must fail naming the env var, not as a bare int() ValueError from deep
-    inside ``flash_attention`` (the ``REPRO_KERNELS`` guard's pattern)."""
-    env = os.environ.get("REPRO_FLASH_CHUNK")
-    if env is None:
-        return default
-    try:
-        chunk = int(env)
-    except ValueError:
-        raise ValueError(
-            f"REPRO_FLASH_CHUNK={env!r} is not a valid chunk size; "
-            f"expected a positive integer") from None
-    if chunk < 1:
-        raise ValueError(
-            f"REPRO_FLASH_CHUNK={env!r} must be a positive integer")
-    return chunk
+    inside ``flash_attention`` (dp/envknobs' validated-on-read contract)."""
+    return _envknobs.read("REPRO_FLASH_CHUNK", default=default)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "chunk"))

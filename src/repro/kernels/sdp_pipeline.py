@@ -182,6 +182,22 @@ def _chunk_plan(offsets, n: int, block: int, chunk, budget):
     return B, C, -(-M // C)
 
 
+def chunk_geometry(offsets, n: int, block: int = 512, chunk=None,
+                   budget=None) -> dict:
+    """The chunked kernel's window geometry as data, for the static
+    schedule-hazard verifier (DESIGN.md §10): the carried window prefix is
+    the last ``a_1`` computed cells (``carry = win[C : C + a_1]`` in the
+    kernel), the window holds carry + one chunk, and chunks are whole step
+    blocks. ``repro.dp.schedule.chunk_carry_invariants`` checks those
+    properties; deriving them from ``_chunk_plan`` itself keeps the checked
+    geometry honest against the real kernel."""
+    B, C, nc = _chunk_plan(tuple(int(a) for a in offsets), n, block, chunk,
+                           budget)
+    a1 = int(offsets[0])
+    return {"block": B, "chunk": C, "chunks": nc,
+            "carry": a1, "window": a1 + C}
+
+
 def _make_chunked_kernel(offsets, op, B, C, weighted, with_args):
     a1 = offsets[0]
     combine = _OPS[op]

@@ -19,6 +19,7 @@ Variants (composable with ','):
 import argparse
 import json
 
+from repro.dp import envknobs
 from repro.launch.dryrun import run_cell
 from benchmarks.roofline import terms
 
@@ -43,7 +44,7 @@ def variant_kwargs(names):
         elif name.startswith("gla"):
             kw["_gla_chunk"] = int(name[3:])
         elif name.startswith("flash"):
-            os.environ["REPRO_FLASH_CHUNK"] = name[5:]
+            envknobs.set_env("REPRO_FLASH_CHUNK", name[5:])
         elif name.startswith("mb"):
             kw["microbatches"] = int(name[2:])
         else:

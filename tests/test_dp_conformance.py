@@ -339,3 +339,32 @@ def test_reconstruct_through_pallas_interpret(name, monkeypatch):
     np.testing.assert_array_equal(
         np.asarray(ans.table), dp.solve_spec(spec, backend=plain_route),
         err_msg=f"{name}: {kernel_route} table != {plain_route} table")
+
+
+# ---------------------------------------------------------------------------
+# 5. Static-analysis contract: every route declares its schedule (§10)
+# ---------------------------------------------------------------------------
+def _all_routes():
+    dp.backends.ensure_registered()
+    return dp.backends.names()
+
+
+@pytest.mark.parametrize("route", _all_routes())
+def test_every_route_exposes_a_schedule_model(route):
+    """Registering a backend without a schedule descriptor fails here (and
+    at the ``repro.analysis`` gate), not at the next hazard."""
+    from repro.dp.problem import FAMILIES
+
+    b = dp.backends.get(route)
+    assert b.schedule is not None, \
+        f"route {route!r} registers no schedule descriptor"
+    probes = [s for s in FAMILIES[b.geometry].probe_specs()
+              if b.supports(s)]
+    assert probes, f"no family probe exercises route {route!r}"
+    for spec in probes:
+        model = b.schedule(spec)
+        dep = spec.schedule_model()
+        assert model.steps > 0
+        assert len(model.finalize) == dep.cells
+        if not model.algebraic:
+            assert len(model.consume) == dep.cells
