@@ -16,6 +16,16 @@ committed run-over-run. The full snapshot (every span, every routing-audit
 row; tens of thousands of lines) still goes to ``TELEMETRY_dp_service.json``
 but is a CI artifact only, never committed.
 
+The append-heavy *streaming* leg (DESIGN.md §11) drives one growing
+needleman_wunsch session — each append extends the instance by a small
+fraction — against cold submits of the identical instances on a fresh
+service, and reports the extend-vs-cold latency speedup plus the
+longest-prefix cache's hit rate. Warm-start serving is only worth its
+machinery if extending ~5% of an instance is much cheaper than re-solving
+it, so the full bench gates ``speedup_mean ≥ STREAM_SPEEDUP_GATE``; the
+answers of the two paths must agree either way. Prints a
+``service-streaming,...`` CSV line into the same report.
+
 The 1-vs-N forced-host-devices comparison runs the same measurement in a
 subprocess under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
 (device count is process-global in XLA, so a second process is the only
@@ -40,6 +50,7 @@ import os
 import subprocess
 import sys
 import time
+from typing import Optional
 
 import numpy as np
 
@@ -54,6 +65,15 @@ GATE_OVERHEAD_FRACTION = 0.05
 GATE_ABS_FLOOR_S = 0.15
 #: phases exported per leg (the service histograms feeding them)
 PHASES = ("queue", "dispatch", "solve", "traceback", "decode")
+#: streaming leg geometry: one session over a rows × (base + i·k) grid
+#: alignment; k/final-length stays well under the ≤10% extension fraction
+#: the warm-start contract targets
+STREAM_ROWS = 512
+STREAM_BASE_LEN = 1024
+STREAM_APPEND_LEN = 64
+STREAM_APPENDS = 5
+#: full-bench gate: mean extend-vs-cold speedup the streaming leg must hit
+STREAM_SPEEDUP_GATE = 5.0
 
 
 def _traffic(rng, n_requests: int) -> list:
@@ -221,6 +241,98 @@ def _csv(row: dict) -> None:
           f"{int(row['ok'])}")
 
 
+def _measure_streaming(rows: int = STREAM_ROWS, base: int = STREAM_BASE_LEN,
+                       k: int = STREAM_APPEND_LEN,
+                       n_appends: int = STREAM_APPENDS,
+                       seed: int = 7) -> dict:
+    """Append-heavy leg: a needleman_wunsch session growing by ``k``
+    columns per append vs cold submits of the identical instances.
+
+    Four passes, each over the same length ladder with content that is
+    prefix-consistent per salt: a throwaway session and a throwaway cold
+    service first (compile/trace warm-up — every length is a fresh grid
+    shape, and compile time is a one-off, not a serving signal), then the
+    measured session and the measured cold service share one salt so the
+    two paths' answers can be compared instance-for-instance."""
+    from repro import dp
+
+    name = "needleman_wunsch"
+    rng = np.random.default_rng(seed)
+    lens = [base + k * i for i in range(n_appends + 1)]
+    xs = {s: rng.integers(0, 4, size=rows) for s in range(3)}
+    ys = {s: rng.integers(0, 4, size=lens[-1]) for s in range(3)}
+
+    def kw(length, salt):
+        return dict(x=xs[salt], y=ys[salt][:length],
+                    match=2.0, mismatch=-1.0, gap=-2.0)
+
+    warm = dp.DPService(max_batch=8)
+    sid = warm.open_session(name)
+    for length in lens:
+        warm.append(sid, **kw(length, 0))
+        warm.run()
+    warm.close_session(sid)
+    warm_cold = dp.DPService(max_batch=8)
+    for length in lens[1:]:
+        warm_cold.submit(name, **kw(length, 1))
+        warm_cold.run()
+
+    ok = True
+    svc = dp.DPService(max_batch=8)
+    sid = svc.open_session(name)
+    svc.append(sid, **kw(lens[0], 2))
+    svc.run()
+    extend_ms, warm_answers = [], []
+    for length in lens[1:]:
+        t0 = time.perf_counter()
+        tid = svc.append(sid, **kw(length, 2))
+        res = svc.run()[tid]
+        extend_ms.append((time.perf_counter() - t0) * 1e3)
+        ok = ok and res.extended and not res.cached
+        warm_answers.append(res.answer)
+    # re-sending the final instance: a full prefix-index hit resolves at
+    # admission — no backlog slot, no device work
+    rep = svc.poll(svc.append(sid, **kw(lens[-1], 2)))
+    ok = ok and rep is not None and rep.cached and rep.extended
+    prefix = svc.session_stats()["prefix_index"]
+    summary = svc.close_session(sid)
+
+    cold = dp.DPService(max_batch=8)
+    cold_ms = []
+    for length, warm_answer in zip(lens[1:], warm_answers):
+        t0 = time.perf_counter()
+        tid = cold.submit(name, **kw(length, 2))
+        res = cold.run()[tid]
+        cold_ms.append((time.perf_counter() - t0) * 1e3)
+        ok = ok and bool(np.allclose(np.float64(res.answer),
+                                     np.float64(warm_answer), rtol=1e-5))
+
+    speedups = np.array(cold_ms) / np.array(extend_ms)
+    return {
+        "problem": name,
+        "rows": rows,
+        "base_len": base,
+        "append_len": k,
+        "appends": n_appends,
+        "extension_fraction": round(k / lens[-1], 4),
+        "extend_ms": [round(t, 3) for t in extend_ms],
+        "cold_ms": [round(t, 3) for t in cold_ms],
+        "speedup_mean": round(float(speedups.mean()), 3),
+        "speedup_min": round(float(speedups.min()), 3),
+        "prefix_hit_rate": round(prefix["hit_rate"], 3),
+        "prefix_index": prefix,
+        "session": summary,
+        "ok": ok,
+    }
+
+
+def _csv_streaming(row: dict) -> None:
+    print(f"service-streaming,{row['rows']},{row['base_len']},"
+          f"{row['append_len']},{row['extension_fraction']},"
+          f"{row['speedup_mean']},{row['speedup_min']},"
+          f"{row['prefix_hit_rate']},{int(row['ok'])}")
+
+
 def _subprocess_leg(n_requests: int, devices: int) -> dict:
     """Re-run ``_measure`` under forced host devices in a child process."""
     env = dict(os.environ)
@@ -277,7 +389,9 @@ def run(out_path: str = "BENCH_dp_service.json",
         telemetry_out_path: str = "TELEMETRY_dp_service.json",
         telemetry_summary_path: str = "TELEMETRY_dp_service_summary.json",
         n_requests: int = N_REQUESTS, forced_devices: int = FORCED_DEVICES,
-        subprocess_leg: bool = True, check_perf: bool = True) -> dict:
+        subprocess_leg: bool = True, check_perf: bool = True,
+        streaming: bool = True,
+        streaming_cfg: Optional[dict] = None) -> dict:
     import jax
 
     from repro.dp import telemetry
@@ -301,15 +415,26 @@ def run(out_path: str = "BENCH_dp_service.json",
     if len(legs) == 2:
         report["throughput_ratio_Ndev_vs_1"] = round(
             legs[1]["req_per_s"] / max(legs[0]["req_per_s"], 1e-9), 3)
+    if streaming:
+        report["streaming"] = _measure_streaming(**(streaming_cfg or {}))
+        _csv_streaming(report["streaming"])
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=1)
         print(f"# wrote {os.path.abspath(out_path)}")
-    bad = [l for l in legs if not l.get("ok")]
+    bad = [l for l in legs + [report.get("streaming")]
+           if l is not None and not l.get("ok")]
     if bad:
         raise SystemExit(f"correctness failures in service bench: {bad}")
     if check_perf and legs[0]["req_per_s"] <= 0:
         raise SystemExit("service bench measured zero throughput")
+    if check_perf and streaming and (
+            report["streaming"]["speedup_mean"] < STREAM_SPEEDUP_GATE):
+        raise SystemExit(
+            "streaming leg: extend-vs-cold speedup "
+            f"{report['streaming']['speedup_mean']}x below the "
+            f"{STREAM_SPEEDUP_GATE}x gate at extension fraction "
+            f"{report['streaming']['extension_fraction']}")
     return report
 
 
@@ -382,6 +507,8 @@ if __name__ == "__main__":
     ap.add_argument("--requests", type=int, default=N_REQUESTS)
     ap.add_argument("--no-subprocess", action="store_true",
                     help="skip the forced-N-devices comparison leg")
+    ap.add_argument("--no-streaming", action="store_true",
+                    help="skip the append-heavy streaming-session leg")
     ap.add_argument("--telemetry-gate", action="store_true",
                     help="run the off-vs-spans overhead/transparency gate "
                          "instead of the throughput legs")
@@ -391,4 +518,5 @@ if __name__ == "__main__":
     elif args.telemetry_gate:
         telemetry_gate(args.requests)
     else:
-        run(n_requests=args.requests, subprocess_leg=not args.no_subprocess)
+        run(n_requests=args.requests, subprocess_leg=not args.no_subprocess,
+            streaming=not args.no_streaming)

@@ -38,10 +38,14 @@ def main(smoke: bool = False, check_dispatch: bool = False) -> None:
     print("# DP service — sharded continuous-batching serving tier "
           "(DESIGN.md §7)")
     # smoke: in-process leg only — the forced-8-device comparison pays a
-    # second jax startup, which the dedicated CI sharded-test leg covers
+    # second jax startup, which the dedicated CI sharded-test leg covers;
+    # the streaming leg shrinks to a geometry that still extends by <10%
+    # per append but keeps cold-solve warm-up cheap
     if smoke:
         dp_service_bench.run(out_path="", n_requests=64,
-                             subprocess_leg=False, check_perf=False)
+                             subprocess_leg=False, check_perf=False,
+                             streaming_cfg=dict(rows=256, base=512, k=32,
+                                                n_appends=3))
     else:
         dp_service_bench.run()
     print("# Roofline — dry-run derived terms (EXPERIMENTS.md §Roofline)")

@@ -3,9 +3,15 @@
 Mixed-problem traffic through submit/poll handles — priorities, deadlines,
 the content-digest answer cache, intra-drain dedup, and (with more than one
 visible device) sharded bucket drains. Runs with telemetry in ``spans``
-mode (DESIGN.md §8), so the tour ends with a request's timestamped span,
-the per-phase latency breakdown, the routing audit, and a Prometheus
-excerpt.
+mode (DESIGN.md §8), with a request's timestamped span, the per-phase
+latency breakdown, the routing audit, and a Prometheus excerpt.
+
+The tour ends with a streaming session (DESIGN.md §11): one alignment
+instance grown a few columns at a time through ``open_session/append``,
+where every append after the first warm-starts off the longest solved
+prefix in the chain-digest index — recomputing only the extension, sticky
+to the session's affine backend — and re-sending an already-solved length
+is answered at admission with no device work at all.
 
 Run: ``PYTHONPATH=src python examples/dp_service.py``
 Try: ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first to watch
@@ -116,6 +122,35 @@ def main() -> None:
     for line in prom[:4]:
         print(f"  {line}")
     # telemetry.save_snapshot("telemetry.json") dumps all of the above
+
+    # -- streaming session (DESIGN.md §11) --------------------------------
+    # one growing alignment: y gains 24 columns per append; the service
+    # finds the longest already-solved prefix through the chain-digest
+    # index and recomputes only the extension — bit-identical to a cold
+    # solve of the full instance
+    x = rng.integers(0, 4, size=96)
+    y = rng.integers(0, 4, size=240)
+    sid = svc.open_session("needleman_wunsch")
+    print(f"\nstreaming session {sid}: needleman_wunsch, "
+          f"{len(x)} rows, y growing 120 -> {len(y)}")
+    for length in range(120, len(y) + 1, 24):
+        t0 = time.perf_counter()
+        tid = svc.append(sid, x=x, y=y[:length])
+        res = svc.run()[tid]
+        kind = "extend" if res.extended else "cold"
+        print(f"  len={length:3d} {kind:6s} via {res.backend:14s} "
+              f"answer={float(np.float64(res.answer)):8.1f}  "
+              f"({(time.perf_counter() - t0) * 1e3:6.2f} ms)")
+    # an already-solved length resolves at admission: full prefix-index hit
+    rep = svc.poll(svc.append(sid, x=x, y=y))
+    print(f"  len={len(y):3d} replay: cached={rep.cached} "
+          f"(no backlog slot, no device work)")
+    pidx = svc.session_stats()["prefix_index"]
+    summary = svc.close_session(sid)
+    print(f"  closed: {summary['appends']} appends, "
+          f"{summary['extends']} extends, affinity {summary['affinity']}; "
+          f"prefix index {pidx['hits']} hits / {pidx['misses']} misses "
+          f"({100 * pidx['hit_rate']:.0f}% hit rate)")
 
 
 if __name__ == "__main__":

@@ -11,21 +11,31 @@ Two subsystems, one gate:
 * :mod:`repro.analysis.linter` — the registry contract linter: env-knob
   declaration/validation coverage, cache-tag and platform-key folds,
   calibration regime isolation, shape-key round-trips, capability pairs.
+* :mod:`repro.analysis.extension` — the extension-state sufficiency
+  verifier: a reachability fixpoint proving each family's streaming
+  resume state (DESIGN.md §11) carries every prefix value its extension
+  region's recurrence reads.
 
-``python -m repro.analysis --gate`` runs both and fails on any finding —
-the CI gate that keeps the next ``register_family()`` from silently
-reintroducing the paper's Fig.-8 hazard class.
+``python -m repro.analysis --gate`` runs all three and fails on any
+finding — the CI gate that keeps the next ``register_family()`` from
+silently reintroducing the paper's Fig.-8 hazard class (or shipping an
+undersized resume state whose tables only go wrong at larger sizes).
 """
+from repro.analysis.extension import verify_extension, verify_extensions
 from repro.analysis.findings import Finding, report, write_report
 from repro.analysis.linter import run_linter
 from repro.analysis.verifier import verify_registry, verify_schedule
 
-__all__ = ["Finding", "report", "run_all", "run_linter", "verify_registry",
+__all__ = ["Finding", "report", "run_all", "run_linter",
+           "verify_extension", "verify_extensions", "verify_registry",
            "verify_schedule", "write_report"]
 
 
 def run_all(source_root=None):
-    """Verifier + linter; returns (findings, stats)."""
+    """Verifier + extension-sufficiency proofs + linter; returns
+    (findings, stats)."""
     findings, stats = verify_registry()
+    ext_findings, ext_stats = verify_extensions()
     lint_findings, lint_stats = run_linter(source_root)
-    return findings + lint_findings, {**stats, **lint_stats}
+    return (findings + ext_findings + lint_findings,
+            {**stats, **ext_stats, **lint_stats})

@@ -36,8 +36,10 @@ def main(argv=None) -> int:
 
     print(f"repro.analysis: {stats['schedules_verified']} schedules "
           f"verified across {stats['routes']} routes / "
-          f"{stats['families']} families; {stats['knobs_declared']} env "
-          f"knobs, {stats['files_scanned']} files linted "
+          f"{stats['families']} families; "
+          f"{stats['extensions_verified']} extension-state proofs; "
+          f"{stats['knobs_declared']} env knobs, "
+          f"{stats['files_scanned']} files linted "
           f"({stats['elapsed_s']}s)")
     if findings:
         print(f"FAIL: {len(findings)} finding(s):", file=sys.stderr)

@@ -197,6 +197,8 @@ def check_regime_isolation() -> List[Finding]:
             ("batch vs reconstruct",
              key + ("batch",), key + ("reconstruct",), None),
             ("plain vs sharded", key, key + (("shard", 8),), None),
+            ("plain vs extend", key, key + ("extend",), None),
+            ("batch vs extend", key + ("batch",), key + ("extend",), None),
             ("batch vs sharded-reconstruct", key + ("batch",),
              key + (("shard", 8, "reconstruct"),), None),
             ("same regime, same shape",

@@ -181,6 +181,138 @@ def solve_grid_with_args(arrs: tuple, meta: tuple):
 
 
 # ---------------------------------------------------------------------------
+# Warm-start extension (DESIGN.md §11).
+#
+# antidiag (column append): a new-column cell reaches back at most
+# W = frontier_cols() columns (max dj over the moves), so the extension is
+# the COLD solver run on a (rows × (W + k)) sub-grid whose first W columns
+# are fully preset to the saved frontier values and whose appended columns
+# carry their original weight/init/mask slices — every move source is in
+# range (dj ≤ W), the ok-masks and weight gathers match the full grid
+# column-for-column, so the new columns are bit-identical by construction.
+#
+# spandiag (leaf append): like the triangular family the split recurrence
+# keeps the whole prefix chart live; the prefix is re-embedded host-side and
+# a windowed loop recomputes only the trailing rows of each span diagonal
+# with the cold loop's exact flat (split-major, rule-minor) candidate vector.
+# ---------------------------------------------------------------------------
+def extend_antidiag_arrays(spec: GridSpec, c_old: int, suffix: np.ndarray):
+    """``(arrs, meta)`` of the extension sub-grid for the EXTENDED
+    ``spec``; ``suffix`` is the saved ``(planes, rows, W)`` frontier."""
+    W = spec.frontier_cols()
+    k = spec.cols - c_old
+    P, R = spec.planes, spec.rows
+    suffix = np.asarray(suffix)
+    init_sub = np.empty((P, R, W + k), np.float32)
+    init_sub[:, :, :W] = suffix
+    init_sub[:, :, W:] = spec.init[:, :, c_old:]
+    mask_sub = np.ones((P, R, W + k), np.float32)
+    mask_sub[:, :, W:] = spec.init_mask[:, :, c_old:]
+    arrs = (np.asarray(spec.weights[:, :, c_old - W:], np.float32),
+            init_sub, mask_sub)
+    meta = ("antidiag", spec.op, P, R, W + k, spec.shape_key()[6], ())
+    return arrs, meta
+
+
+def embed_spandiag_prefix(spec: GridSpec, n_old: int,
+                          suffix: np.ndarray) -> np.ndarray:
+    """Full-width st0 with the prefix chart embedded and every diagonal-0
+    cell preset from init — exactly the cold loop's initial state on the
+    prefix region, semiring zero on the unfilled extension cells."""
+    P, n = spec.planes, spec.rows
+    old = np.asarray(suffix).reshape(P, num_cells(n_old))
+    out = np.full((P, num_cells(n)), semiring_zero(spec.op), old.dtype)
+    out[:, :n] = np.asarray(spec.init, old.dtype)
+    for d in range(1, n_old):
+        src, dst = lin_index(0, d, n_old), lin_index(0, d, n)
+        out[:, dst:dst + (n_old - d)] = old[:, src:src + (n_old - d)]
+    return out
+
+
+def _spandiag_extend_loop(st0, rw, meta, n_old: int):
+    _, op, P, n, _, _, rules = _meta_dims(meta)
+    zero = semiring_zero(op)
+    cells = num_cells(n)
+    k = n - n_old
+    ee = jnp.arange(max(n - 1, 1))[None, :]
+    lanes = jnp.arange(k)[:, None]
+    reduce_ = jnp.min if op == "min" else jnp.max
+    by_plane = [[(r, rule) for r, rule in enumerate(rules)
+                 if int(rule[0]) == A] for A in range(P)]
+
+    def body(d, st):
+        ii = jnp.maximum(0, n_old - d) + lanes   # trailing rows of diagonal d
+        valid = (ii < n - d) & (ee < d)
+        li = jnp.clip(lin_index(ii, ee, n), 0, cells - 1)
+        ri = jnp.clip(lin_index(ii + ee + 1, d - ee - 1, n), 0, cells - 1)
+        widx = jnp.where(ii[:, 0] < n - d, lin_index(ii[:, 0], d, n), cells)
+        for A, rl in enumerate(by_plane):
+            if not rl:
+                continue
+            cands = []
+            for r, (_, B, Cc) in rl:
+                cands.append(jnp.where(
+                    valid, st[int(B), li] + st[int(Cc), ri] + rw[r], zero))
+            cand = jnp.stack(cands, axis=-1)
+            flat = cand.reshape(cand.shape[0], -1)  # split-major, rule minor
+            best = reduce_(flat, axis=1)
+            st = st.at[A, widx].set(best, mode="drop", unique_indices=True)
+        return st
+
+    return jax.lax.fori_loop(1, n, body, st0).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def extend_grid_spandiag(st0: jnp.ndarray, rw: jnp.ndarray, meta: tuple,
+                         n_old: int) -> jnp.ndarray:
+    """Windowed spandiag extension: ``st0`` the ``(planes, cells)`` embedded
+    prefix (:func:`embed_spandiag_prefix`). Returns the full flat table."""
+    return _spandiag_extend_loop(st0, rw, meta, n_old)
+
+
+def _run_extend(spec: GridSpec, old_len: int, state: dict) -> np.ndarray:
+    """``Backend.run_extend`` for the grid_wavefront route. antidiag returns
+    the ``(planes, rows, k)`` new columns; spandiag the full flat table."""
+    old_len = int(old_len)
+    if spec.schedule == "antidiag":
+        arrs, meta = extend_antidiag_arrays(spec, old_len, state["suffix"])
+        W = spec.frontier_cols()
+        # The extension program is shaped by the sub-grid alone (rows ×
+        # (W + k)), independent of how many columns precede it — a
+        # session's steady append cadence reuses one compiled program
+        # instead of recompiling at every new total length.
+        key = ("grid_wavefront", ("extend",) + meta[:6])
+
+        def build():
+            def call(arrs):
+                _dp_backends.log_trace(key)
+                return _antidiag_loop(arrs, meta, with_args=False)
+
+            return jax.jit(call)
+
+        fn = _dp_backends.lru_cached(_dp_backends._BATCH_CACHE, key, build,
+                                     _dp_backends._BATCH_CACHE_MAX)
+        sub = np.asarray(fn(tuple(jnp.asarray(a) for a in arrs)))
+        return sub.reshape(spec.planes, spec.rows, -1)[:, :, W:]
+
+    st0 = embed_spandiag_prefix(spec, old_len, state["suffix"])
+    meta = spec.static_meta()
+    key = ("grid_wavefront", spec.shape_key(), ("extend", old_len))
+
+    def build():
+        def call(st0, rw):
+            _dp_backends.log_trace(key)
+            return _spandiag_extend_loop(st0, rw, meta, old_len)
+
+        return jax.jit(call)
+
+    fn = _dp_backends.lru_cached(_dp_backends._BATCH_CACHE, key, build,
+                                 _dp_backends._BATCH_CACHE_MAX)
+    return np.asarray(fn(jnp.asarray(st0),
+                         jnp.asarray(spec.rule_weights, np.float32)))
+
+
+# ---------------------------------------------------------------------------
 # Device traceback
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnums=(2,))
@@ -409,7 +541,7 @@ _dp_backends.register(_dp_backends.grid_backend(
     "grid_wavefront", solve_grid,
     cost=lambda s: _dp_backends.grid_costs(s)["grid_wavefront"],
     jax_arg_fn=solve_grid_with_args,
-    schedule=_schedule,
+    schedule=_schedule, run_extend=_run_extend,
     doc="jnp masked wavefront over anti-diagonals (alignment grids) or "
         "span diagonals (parse charts): one gathered combine + drop-mode "
         "scatter per frontier, vmap-batchable, arg-emitting."))

@@ -286,6 +286,56 @@ def solve_wavefront_tab(wtab: jnp.ndarray, n: int) -> jnp.ndarray:
     return _wavefront_loop(n, wtab.dtype, weight_of)
 
 
+# ---------------------------------------------------------------------------
+# Warm-start extension (DESIGN.md §11). The split recurrence keeps every
+# prefix cell live (cell (i, j ≥ n_old) reads (i, s) for every s < j), so the
+# resume state is the full prefix triangle, re-embedded into the wider
+# diagonal-major layout host-side; the device loop then recomputes only the
+# ≤ k = n - n_old trailing rows of each diagonal with the cold solver's exact
+# per-cell candidate vector (full split axis, INF-masked, same jnp.min), so
+# every new cell is bit-identical to the cold solve.
+# ---------------------------------------------------------------------------
+def embed_prefix_table(st_old: np.ndarray, n_old: int, n: int) -> np.ndarray:
+    """Re-embed a width-``n_old`` table into the width-``n`` diagonal-major
+    layout (new cells zeroed — diagonal-0 presets are 0 by the family
+    contract, and the windowed loop overwrites the rest)."""
+    out = np.zeros(num_cells(n), dtype=np.asarray(st_old).dtype)
+    for d in range(n_old):
+        src, dst = lin_index(0, d, n_old), lin_index(0, d, n)
+        out[dst:dst + (n_old - d)] = st_old[src:src + (n_old - d)]
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("n", "n_old"))
+def extend_wavefront_tab(st0: jnp.ndarray, wtab: jnp.ndarray, n: int,
+                         n_old: int) -> jnp.ndarray:
+    """Windowed wavefront over the extension region: ``st0`` the full
+    width-``n`` table with the prefix embedded (:func:`embed_prefix_table`),
+    ``wtab`` the extended spec's weight table. Returns the full table —
+    O(n²·k) work instead of the cold solve's O(n³)."""
+    cells = num_cells(n)
+    k = n - n_old
+    ee = jnp.arange(max(n - 1, 1))[None, :]
+    lanes = jnp.arange(k)[:, None]
+
+    def body(d, st):
+        ii = jnp.maximum(0, n_old - d) + lanes   # trailing rows of diagonal d
+        valid = (ii < n - d) & (ee < d)
+        li = lin_index(ii, ee, n)
+        ri = lin_index(ii + ee + 1, d - ee - 1, n)
+        ci = lin_index(ii, d, n)
+        cand = jnp.where(valid,
+                         st[jnp.clip(li, 0, cells - 1)]
+                         + st[jnp.clip(ri, 0, cells - 1)]
+                         + wtab[jnp.clip(ci, 0, cells - 1), ee],
+                         INF)
+        out = jnp.min(cand, axis=1)
+        widx = jnp.where(ii[:, 0] < n - d, lin_index(ii[:, 0], d, n), cells)
+        return st.at[widx].set(out, mode="drop", unique_indices=True)
+
+    return jax.lax.fori_loop(1, n, body, st0)
+
+
 @functools.partial(jax.jit, static_argnames=("n",))
 def solve_wavefront_tab_with_args(wtab: jnp.ndarray, n: int):
     """``solve_wavefront_tab`` + the best-split table: returns ``(st, args)``
@@ -473,6 +523,28 @@ def _pipeline_run(spec) -> np.ndarray:
     return np.asarray(st)
 
 
+def _run_extend(spec, n_old: int, state: dict) -> np.ndarray:
+    """``Backend.run_extend`` for the wavefront route: host-side prefix
+    re-embedding + the windowed device loop, traced/cached under an
+    ``("extend", n_old)`` key."""
+    n_old = int(n_old)
+    key = ("wavefront", spec.shape_key(), ("extend", n_old))
+
+    def build():
+        n = spec.n
+
+        def call(st0, wtab):
+            _dp_backends.log_trace(key)
+            return extend_wavefront_tab(st0, wtab, n, n_old)
+
+        return jax.jit(call)
+
+    fn = _dp_backends.lru_cached(_dp_backends._BATCH_CACHE, key, build,
+                                 _dp_backends._BATCH_CACHE_MAX)
+    st0 = embed_prefix_table(np.asarray(state["suffix"]), n_old, spec.n)
+    return np.asarray(fn(jnp.asarray(st0), jnp.asarray(spec.weights)))
+
+
 def _register_backends() -> None:
     from repro.dp import schedule as _sched
 
@@ -481,6 +553,7 @@ def _register_backends() -> None:
         cost=lambda s: _dp_backends.triangular_costs(s)["wavefront"],
         jax_arg_fn=solve_wavefront_tab_with_args,
         schedule=_sched.triangular_wavefront_schedule,
+        run_extend=_run_extend,
         doc="dense masked per-diagonal combine (n-1 vectorized steps)"))
     _dp_backends.register(_dp_backends.Backend(
         name="mcm_pipeline", geometry="triangular",

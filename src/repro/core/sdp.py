@@ -147,6 +147,46 @@ def solve_sequential(init: jnp.ndarray, offsets: tuple, op: str, n: int,
 
 
 # ---------------------------------------------------------------------------
+# Warm-start extension (DESIGN.md §11): resume the sequential scan from a
+# solved prefix — k = n - n_old device steps instead of n. The loop body is
+# solve_sequential's exact unrolled fold (the same op order matters for
+# non-commutative-rounding semirings like op="add"), and extension cell
+# i ≥ n_old reads only cells i - a_j ≥ n_old - a_1, all inside the saved
+# suffix — so the new cells are bit-identical to the cold solve's tail.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("offsets", "op", "k"))
+def solve_extend(suffix: jnp.ndarray, offsets: tuple, op: str, k: int,
+                 weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """``suffix`` is the prefix table's last a₁ cells; ``weights`` the
+    (k, lanes) weight rows of the appended cells. Returns the ``k`` new
+    cells. The program is shaped by the EXTENSION alone — (a₁, k), never
+    the instance length — so a session appending in a steady cadence
+    compiles once and replays, where a length-shaped program would
+    recompile on every append (recompilation costs ~100× the extension
+    solve and would erase the streaming win)."""
+    a = _check_offsets(offsets)
+    sg = SEMIGROUPS[op]
+    mul = _mul_for(op)
+    a1 = int(a[0])
+    if k < 1:
+        raise ValueError(f"need at least one appended cell, got k={k}")
+    offs = jnp.asarray(a)
+    st = jnp.zeros((a1 + k,), dtype=suffix.dtype).at[:a1].set(suffix)
+
+    def body(i, st):
+        def term(j):
+            t = st[i - offs[j]]
+            return t if weights is None else mul(t, weights[i - a1, j])
+
+        v = term(0)
+        for j in range(1, len(a)):  # unrolled over lanes (static)
+            v = sg.op(v, term(j))
+        return st.at[i].set(v)
+
+    return jax.lax.fori_loop(a1, a1 + k, body, st)[a1:]
+
+
+# ---------------------------------------------------------------------------
 # Tournament baseline (§II-B parallel prefix): per element, gather k values and
 # tree-reduce — O(log k) depth per element, n sequential elements.
 # ---------------------------------------------------------------------------
@@ -437,6 +477,41 @@ def solve_companion_scan(init: jnp.ndarray, offsets: tuple, op: str, n: int,
 from repro.dp import backends as _dp_backends  # noqa: E402
 
 
+def _run_extend(spec, n_old: int, state: dict) -> np.ndarray:
+    """``Backend.run_extend`` for the sequential route: warm-start scan
+    over the k appended cells. The program cache key carries the
+    *extension* shape (lanes, k) instead of the instance length, so a
+    session's steady append cadence traces one program and replays it for
+    every later length — an ``("extend", k)`` regime key that also keeps
+    calibration from conflating extends with cold solves."""
+    n_old = int(n_old)
+    a1 = int(spec.offsets[0])
+    k = spec.n - n_old
+    if not a1 < n_old < spec.n:
+        raise ValueError(f"need a_1={a1} < n_old={n_old} < n={spec.n}")
+    key = ("sequential", ("linear", spec.op, tuple(spec.offsets),
+                          spec.weights is not None), ("extend", k))
+
+    def build():
+        offsets, op = spec.offsets, spec.op
+        if spec.weights is None:
+            def call(suffix):
+                _dp_backends.log_trace(key)
+                return solve_extend(suffix, offsets, op, k)
+        else:
+            def call(suffix, weights):
+                _dp_backends.log_trace(key)
+                return solve_extend(suffix, offsets, op, k, weights=weights)
+        return jax.jit(call)
+
+    fn = _dp_backends.lru_cached(_dp_backends._BATCH_CACHE, key, build,
+                                 _dp_backends._BATCH_CACHE_MAX)
+    suffix = jnp.asarray(state["suffix"])
+    if spec.weights is None:
+        return np.asarray(fn(suffix))
+    return np.asarray(fn(suffix, jnp.asarray(spec.weights[n_old:])))
+
+
 def _register_backends() -> None:
     from repro.dp import schedule as _sched
 
@@ -464,6 +539,7 @@ def _register_backends() -> None:
             name, fn,
             cost=lambda s, _n=name: _dp_backends.linear_costs(s)[_n],
             supports=supports, jax_arg_fn=arg_fn, schedule=schedule,
+            run_extend=_run_extend if name == "sequential" else None,
             doc=doc))
 
 

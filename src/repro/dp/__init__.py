@@ -23,9 +23,14 @@ Layers (DESIGN.md §3, §5):
   sharding    — ShardContext / ShardedDPEngine: bucket drains shard_mapped
                 over a device mesh, observed under the ("shard", ndev)
                 regime
+  streaming   — ResumeToken / resume_solve warm starts + the chain-digest
+                longest-prefix answer cache (PrefixIndex); extends a
+                solved prefix bit-identically to the cold solve
+                (DESIGN.md §11)
   service     — DPService: submit/poll handles, admission control with
-                deadlines/priorities, content-digest answer cache, the
-                continuous scheduling loop (DESIGN.md §7)
+                deadlines/priorities, content-digest answer cache,
+                streaming sessions (open_session/append/close_session),
+                the continuous scheduling loop (DESIGN.md §7, §11)
   telemetry   — request spans, metrics registry, routing audit, exporters
                 (REPRO_TELEMETRY={off,basic,spans,profile}; DESIGN.md §8)
 
@@ -53,19 +58,20 @@ from repro.dp.problem import (  # noqa: F401
 from repro.dp.registry import get as get_problem  # noqa: F401
 from repro.dp.registry import names as problem_names  # noqa: F401
 from repro.dp.registry import problems  # noqa: F401
-from repro.dp.service import AdmissionError, DPService, ServiceResult  # noqa: F401
+from repro.dp.service import AdmissionError, DPService, ServiceResult, Session  # noqa: F401
 from repro.dp.sharding import ShardContext, ShardedDPEngine  # noqa: F401
+from repro.dp.streaming import PrefixIndex, ResumeToken, resume_solve  # noqa: F401
 from repro.dp.telemetry import Span  # noqa: F401
-from repro.dp import service, sharding, telemetry  # noqa: F401
+from repro.dp import service, sharding, streaming, telemetry  # noqa: F401
 
 __all__ = [
     "AdmissionError", "Answer", "DPEngine", "DPProblem", "DPRequest",
     "DPResponse", "DPService", "GridPath", "GridSpec", "LinearPath",
-    "LinearSpec", "ServiceResult",
+    "LinearSpec", "PrefixIndex", "ResumeToken", "ServiceResult", "Session",
     "ShardContext", "ShardedDPEngine", "Span", "Spec", "TriangularPath",
     "TriangularSpec", "autotune", "backends", "batch_solve",
     "batch_solve_specs", "calibrate", "dispatch", "route", "get_problem",
-    "problem_names", "problems", "reconstruct", "registry", "routing",
-    "routing_report", "service", "sharding", "solve", "solve_spec",
-    "spec_digest", "telemetry", "zoo",
+    "problem_names", "problems", "reconstruct", "registry", "resume_solve",
+    "routing", "routing_report", "service", "sharding", "solve",
+    "solve_spec", "spec_digest", "streaming", "telemetry", "zoo",
 ]

@@ -111,6 +111,16 @@ class Backend:
     reconstruction was requested, which is what makes ``reconstruct=True``
     a single launch on the tiled kernel tier (DESIGN.md §5).
 
+    Streaming contract (DESIGN.md §11): ``run_extend(spec, old_len, state)``
+    (optional) warm-starts the solver from a solved prefix — ``spec`` is the
+    EXTENDED spec, ``old_len`` the prefix length along the family's growth
+    axis, ``state`` the prefix's ``extension_state()`` payload — and returns
+    the family-shaped extension output (new cells / full re-laid-out table)
+    that ``spec.stitch_extension`` assembles into the full table,
+    bit-identical to a cold solve. Extend callables trace and cache under
+    their own ``("extend", old_len)``-suffixed keys so calibration and the
+    trace log never conflate extends with cold solves.
+
     Static-analysis contract (DESIGN.md §10): ``schedule`` is the route's
     schedule descriptor — ``schedule(spec) -> repro.dp.schedule
     .ScheduleModel`` declaring the symbolic consume/finalize steps the
@@ -131,6 +141,7 @@ class Backend:
     batch_run_with_args: Optional[Callable] = None
     run_fused: Optional[Callable] = None
     batch_run_fused: Optional[Callable] = None
+    run_extend: Optional[Callable] = None
     schedule: Optional[Callable] = None
     cache_tag: Optional[Callable] = None
     env_sensitive: tuple = ()
@@ -202,6 +213,7 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
                    cache_tag: Optional[Callable] = None,
                    schedule: Optional[Callable] = None,
                    env_sensitive: tuple = (),
+                   run_extend: Optional[Callable] = None,
                    doc: str = "") -> Backend:
     """Wrap a JAX S-DP solver ``fn(init, offsets, op, n, weights=None)``
     into a Backend with a single-call vmapped batch path. ``jax_arg_fn`` (same
@@ -275,7 +287,7 @@ def linear_backend(name: str, jax_fn: Callable, cost: Callable,
                    supports=supports or (lambda s: True),
                    batch_run=batch_run, run_with_args=run_with_args,
                    batch_run_with_args=batch_run_with_args,
-                   schedule=schedule, cache_tag=tag,
+                   run_extend=run_extend, schedule=schedule, cache_tag=tag,
                    env_sensitive=tuple(env_sensitive), doc=doc)
 
 
@@ -286,6 +298,7 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
                            cache_tag: Optional[Callable] = None,
                            schedule: Optional[Callable] = None,
                            env_sensitive: tuple = (),
+                           run_extend: Optional[Callable] = None,
                            doc: str = "") -> Backend:
     """Wrap a weight-table triangular solver ``fn(wtab, n)`` (e.g.
     ``core.mcm.solve_wavefront_tab``) with a vmapped batch path.
@@ -366,7 +379,7 @@ def triangular_tab_backend(name: str, jax_fn: Callable, cost: Callable,
                    run_with_args=run_with_args,
                    batch_run_with_args=batch_run_with_args,
                    run_fused=run_fused, batch_run_fused=batch_run_fused,
-                   schedule=schedule, cache_tag=tag,
+                   run_extend=run_extend, schedule=schedule, cache_tag=tag,
                    env_sensitive=tuple(env_sensitive), doc=doc)
 
 
@@ -376,6 +389,7 @@ def grid_backend(name: str, jax_fn: Callable, cost: Callable,
                  cache_tag: Optional[Callable] = None,
                  schedule: Optional[Callable] = None,
                  env_sensitive: tuple = (),
+                 run_extend: Optional[Callable] = None,
                  doc: str = "") -> Backend:
     """Wrap a grid wavefront solver ``fn(arrs, meta)`` — ``arrs`` the
     spec's ``device_arrays()`` slot tuple, ``meta`` its hashable
@@ -440,7 +454,7 @@ def grid_backend(name: str, jax_fn: Callable, cost: Callable,
                    supports=supports or (lambda s: True),
                    batch_run=batch_run, run_with_args=run_with_args,
                    batch_run_with_args=batch_run_with_args,
-                   schedule=schedule, cache_tag=tag,
+                   run_extend=run_extend, schedule=schedule, cache_tag=tag,
                    env_sensitive=tuple(env_sensitive), doc=doc)
 
 
@@ -478,9 +492,11 @@ def grid_costs(spec) -> dict:
 #: (repro.dp.sharding) append a tuple marker ``("shard", ndev)`` — or
 #: ``("shard", ndev, "reconstruct")`` for sharded arg-emitting drains — so
 #: multi-device amortization never shares entries with any single-device
-#: regime. Plain keys hold single-instance offline timings. The regimes
-#: never cross-match.
-SHAPE_KEY_REGIMES = ("batch", "reconstruct")
+#: regime. Plain keys hold single-instance offline timings. ``extend`` marks
+#: warm-start extension solves (DESIGN.md §11): an extend pays O(extension)
+#: steps, so its timings must never transfer onto cold-solve keys (or vice
+#: versa). The regimes never cross-match.
+SHAPE_KEY_REGIMES = ("batch", "reconstruct", "extend")
 
 
 def is_regime_marker(x) -> bool:

@@ -63,6 +63,13 @@ class DPRequest:
     #: content digest of the encoded spec (``problem.spec_digest``) — the
     #: intra-drain dedup key: equal digests imply bit-equal Answers
     digest: str = ""
+    #: warm-start handle (``repro.dp.streaming.ResumeToken``) — routes the
+    #: request into an extend bucket whose drain recomputes only the
+    #: extension region (DESIGN.md §11)
+    resume: Optional[Any] = None
+    #: return the solved table on the response (streaming sessions index
+    #: it for future warm starts); plain callers skip the extra reference
+    keep_table: bool = False
 
 
 @dataclasses.dataclass
@@ -76,6 +83,12 @@ class DPResponse:
     #: this rid shared another request's solve lane (intra-drain dedup
     #: fan-out) — telemetry marks its span instead of re-counting work
     deduped: bool = False
+    #: full solved table (read-only), only when the request asked for it
+    table: Optional[Any] = None
+    #: resolved by a warm-start extend drain rather than a cold solve
+    extended: bool = False
+    #: the extend drain honored the resume token's sticky backend affinity
+    affine: bool = False
 
 
 class DPEngine:
@@ -107,7 +120,9 @@ class DPEngine:
         self.stats = {"submitted": 0, "completed": 0, "device_batches": 0,
                       "batched_requests": 0, "dedup_hits": 0,
                       "device_tracebacks": 0, "host_tracebacks": 0,
-                      "explore_dispatches": 0, "feedback_observations": 0}
+                      "explore_dispatches": 0, "feedback_observations": 0,
+                      "extend_drains": 0, "extend_requests": 0,
+                      "affine_lanes": 0}
         #: :class:`repro.dp.telemetry.DrainReport` of the most recent
         #: drain (None below ``basic`` telemetry) — the service reads it to
         #: attribute span events and per-phase histograms per request
@@ -116,18 +131,25 @@ class DPEngine:
 
     # -- admission ---------------------------------------------------------
     def submit(self, problem: str, reconstruct: bool = False,
+               resume: Optional[Any] = None, keep_table: bool = False,
                **payload) -> int:
         """Encode eagerly (validates the instance) and enqueue. Returns rid.
         ``reconstruct=True`` requests land in their own (problem, shape)
-        bucket and resolve to responses carrying a decoded solution."""
+        bucket and resolve to responses carrying a decoded solution.
+        ``resume`` (a :class:`repro.dp.streaming.ResumeToken`) routes the
+        request into an extend bucket — the drain recomputes only the
+        extension region and stitches onto the token's solved prefix."""
         prob = _registry.get(problem)
         spec = prob.encode(**payload)
         return self.submit_spec(prob, spec, reconstruct=reconstruct,
-                                payload=payload)
+                                payload=payload, resume=resume,
+                                keep_table=keep_table)
 
     def submit_spec(self, problem, spec: Spec, reconstruct: bool = False,
                     payload: Optional[dict] = None,
-                    digest: Optional[str] = None) -> int:
+                    digest: Optional[str] = None,
+                    resume: Optional[Any] = None,
+                    keep_table: bool = False) -> int:
         """Admit an already-encoded spec (the :class:`repro.dp.service.
         DPService` path — the service encoded it for cache keying and must
         not pay a second encode, nor a second content hash: pass its
@@ -138,23 +160,42 @@ class DPEngine:
             # reject at admission: drain-time failure would poison the
             # bucket forever (solve-before-dequeue keeps it enqueued)
             _reconstruct.check_reconstructable(prob, spec)
+        if resume is not None and not _routing.extend_candidates(spec):
+            raise ValueError(
+                f"no extend-capable backend for spec {spec.shape_key()}; "
+                "submit without resume=")
         rid = self._next_rid
         self._next_rid += 1
-        key = self.bucket_key(prob.name, spec, reconstruct)
+        key = self.bucket_key(prob.name, spec, reconstruct,
+                              resume_len=None if resume is None
+                              else resume.old_len)
         self._buckets.setdefault(key, []).append(
             DPRequest(rid=rid, problem=prob.name, payload=payload or {},
                       spec=spec, reconstruct=reconstruct,
-                      digest=digest or spec_digest(spec)))
+                      digest=digest or spec_digest(spec), resume=resume,
+                      keep_table=keep_table))
         self.stats["submitted"] += 1
         return rid
 
     @staticmethod
-    def bucket_key(problem_name: str, spec: Spec, reconstruct: bool) -> tuple:
+    def bucket_key(problem_name: str, spec: Spec, reconstruct: bool,
+                   resume_len: Optional[int] = None) -> tuple:
         """The bucket a request lands in. The single source of truth for
         bucket keying — admission uses it, and the DPService drain
-        targeting (``step(bucket=…)``) builds its keys through it too."""
+        targeting (``step(bucket=…)``) builds its keys through it too.
+        Warm-start requests get their own ``("extend", old_len)``-marked
+        buckets: an extend drain runs a different program (and is observed
+        under a different calibration regime) than a cold batched solve of
+        the same shape."""
         key = (problem_name, spec.shape_key())
+        if resume_len is not None:
+            key += (("extend", resume_len),)
         return key + ("reconstruct",) if reconstruct else key
+
+    @staticmethod
+    def is_extend_bucket(key: tuple) -> bool:
+        return any(isinstance(m, tuple) and m and m[0] == "extend"
+                   for m in key[2:])
 
     def pending(self) -> int:
         return sum(len(v) for v in self._buckets.values())
@@ -222,6 +263,127 @@ class DPEngine:
             return _routing.run_batch_with_args(backend, specs)
         return _routing.run_batch(backend, specs), None, None, None
 
+    # -- warm-start extend drain (DESIGN.md §11) ---------------------------
+    def _extend_route(self, request, backend):
+        """Route one extend lane: explicit override > the token's sticky
+        session affinity > the ranked extend pool. Returns
+        ``(backend, affine)``."""
+        if backend is not None:
+            b = (backend if isinstance(backend, _backends.Backend)
+                 else _backends.get(backend))
+            if b.run_extend is None or not b.supports(request.spec):
+                raise ValueError(
+                    f"backend {b.name!r} cannot extend this spec")
+            return b, False
+        cands = _routing.extend_candidates(request.spec)
+        if not cands:                    # admission already checked this
+            raise RuntimeError("no extend-capable backend for "
+                               f"{request.spec.shape_key()}")
+        affinity = request.resume.affinity
+        if affinity is not None:
+            for b in cands:
+                if b.name == affinity:
+                    return b, True
+        return cands[0], False
+
+    def _step_extend(self, key: tuple,
+                     backend: Optional[str] = None) -> list:
+        """Drain one extend bucket: every lane recomputes only its
+        extension region from the resume token's solved prefix and
+        stitches a full table bit-identical to the cold solve. Lanes run
+        one device call each (warm starts are latency-bound singletons —
+        there is no cross-instance batching axis once prefixes differ),
+        but dedup still applies: equal spec digests imply bit-equal
+        extended tables *regardless of which prefix each token carries*,
+        so duplicates fan out from one lane. Reconstruction decodes from
+        host-side args on the stitched table. Realized per-lane latency
+        feeds calibration under the ``("extend",)`` regime."""
+        queue = self._buckets[key]
+        batch, rest = queue[: self.max_batch], queue[self.max_batch:]
+        prob = _registry.get(key[0])
+        reconstruct = batch[0].reconstruct
+        uniq_idx: "OrderedDict[str, int]" = OrderedDict()
+        for i, r in enumerate(batch):
+            uniq_idx.setdefault(r.digest, i)
+        lane_of = {d: j for j, d in enumerate(uniq_idx)}
+        uniq = [batch[i] for i in uniq_idx.values()]
+        obs_key = uniq[0].spec.shape_key() + _routing.EXTEND_SUFFIX
+        routes = [self._extend_route(r, backend) for r in uniq]
+        if _telemetry.audit_enabled():
+            _telemetry.record_route_decision(
+                "extend_drain", uniq[0].spec.shape_key(),
+                _routing.EXTEND_SUFFIX, [], routes[0][0].name,
+                bucket=repr(key), batch_size=len(batch), unique=len(uniq),
+                affine=any(a for _, a in routes),
+                override=backend is not None)
+        tables, answers, lane_cold = [], [], []
+        with _telemetry.drain_scope(key, routes[0][0].name, len(batch),
+                                    len(uniq)) as drain_rep:
+            extend_ms = 0.0
+            for r, (chosen, affine) in zip(uniq, routes):
+                tok = r.resume
+                traces_before = _backends.TRACE_COUNT
+                t0 = time.perf_counter()
+                ext = chosen.run_extend(r.spec, tok.old_len, tok.state())
+                table = r.spec.stitch_extension(tok.prefix_spec,
+                                                tok.prefix_table, ext)
+                lane_ms = (time.perf_counter() - t0) * 1e3
+                extend_ms += lane_ms
+                # same freezing rule as batched drains: dedup fan-out and
+                # the caches share this exact array
+                table.setflags(write=False)
+                warm_key = (chosen.name, obs_key, 1)
+                cold = (warm_key not in self._warmed
+                        or _backends.TRACE_COUNT != traces_before)
+                _backends.lru_put(self._warmed, warm_key, True,
+                                  _ROUTE_STATE_MAX)
+                lane_cold.append(cold)
+                if self.feedback and not cold:
+                    _autotune.observe(chosen.name, obs_key, lane_ms)
+                    self.stats["feedback_observations"] += 1
+                if affine:
+                    self.stats["affine_lanes"] += 1
+                tables.append(table)
+                if reconstruct:
+                    args = _reconstruct.args_from_table(table, r.spec)
+                    answers.append(_reconstruct.reconstruct_one(
+                        prob, r.spec, table, args, "host"))
+                else:
+                    answers.append(None)
+            _telemetry.add_phase("extend", extend_ms)
+            if drain_rep is not None:
+                drain_rep.cold = any(lane_cold)
+        self.last_drain = drain_rep
+        responses = []
+        for i, r in enumerate(batch):
+            j = lane_of[r.digest]
+            responses.append(DPResponse(
+                rid=r.rid, problem=r.problem,
+                answer=prob.extract(tables[j], r.spec),
+                backend=routes[j][0].name, batch_size=len(batch),
+                solution=answers[j], deduped=uniq_idx[r.digest] != i,
+                table=tables[j] if r.keep_table else None,
+                extended=True, affine=routes[j][1]))
+        if rest:
+            self._buckets[key] = rest
+        else:
+            del self._buckets[key]
+        _backends.lru_put(self._drains, key, self._drains.get(key, 0) + 1,
+                          _ROUTE_STATE_MAX)
+        self.stats["extend_drains"] += 1
+        self.stats["extend_requests"] += len(batch)
+        self.stats["completed"] += len(batch)
+        self.stats["dedup_hits"] += len(batch) - len(uniq)
+        if reconstruct:
+            self.stats["host_tracebacks"] += len(uniq)
+        if _telemetry.enabled("basic"):
+            _telemetry.count("dp_engine_extend_drains_total")
+            _telemetry.count("dp_engine_extend_requests_total", len(batch))
+            _telemetry.set_gauge("dp_engine_pending", self.pending())
+            _log.debug("extend drain %r: %d req (%d lanes) in %.3f ms",
+                       key, len(batch), len(uniq), extend_ms)
+        return responses
+
     # -- one batched device call ------------------------------------------
     def step(self, backend: Optional[str] = None,
              bucket: Optional[tuple] = None) -> list:
@@ -241,6 +403,8 @@ class DPEngine:
             key = bucket
         else:
             key = max(self._buckets, key=lambda k: len(self._buckets[k]))
+        if self.is_extend_bucket(key):
+            return self._step_extend(key, backend=backend)
         queue = self._buckets[key]
         batch, rest = queue[: self.max_batch], queue[self.max_batch:]
 
@@ -310,7 +474,8 @@ class DPEngine:
                            answer=prob.extract(tables[j], r.spec),
                            backend=chosen.name, batch_size=len(batch),
                            solution=answers[j],
-                           deduped=uniq_idx[r.digest] != i))
+                           deduped=uniq_idx[r.digest] != i,
+                           table=tables[j] if r.keep_table else None))
 
         if rest:
             self._buckets[key] = rest

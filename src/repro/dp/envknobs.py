@@ -169,3 +169,24 @@ register_knob(Knob(
     default=None,
     description="persisted calibration table auto-loaded on first "
                 "get_table(); a corrupt file degrades with a warning"))
+
+register_knob(Knob(
+    name="REPRO_SESSION_TTL_MS", kind="positive_int", what="session TTL",
+    unit="a positive integer millisecond count", default=600_000,
+    probe="120000",
+    description="idle time after which a DPService streaming session's "
+                "resume state is reclaimed (DESIGN.md §11)"))
+
+register_knob(Knob(
+    name="REPRO_SESSION_MAX", kind="positive_int", what="session limit",
+    unit="a positive integer", default=256, probe="16",
+    description="maximum concurrently retained DPService streaming "
+                "sessions; least-recently-used sessions evict past it"))
+
+register_knob(Knob(
+    name="REPRO_SESSION_PREFIX_INDEX", kind="positive_int",
+    what="prefix index capacity", unit="a positive integer", default=512,
+    probe="64",
+    description="entry capacity of the longest-prefix answer cache "
+                "(chained per-step digests -> solved tables); each entry "
+                "retains one full DP table, so size it to memory"))

@@ -51,6 +51,7 @@ def _resolve(problem: Union[str, DPProblem]) -> DPProblem:
 #: plain single-instance solves and must not share entries
 RECONSTRUCT_SUFFIX = ("reconstruct",)
 BATCH_SUFFIX = ("batch",)
+EXTEND_SUFFIX = ("extend",)
 
 
 def dispatch(spec_or_problem, reconstruct: bool = False,
@@ -171,6 +172,41 @@ def solve(problem: Union[str, DPProblem], backend: Optional[str] = None,
                                             "device", path=path)
     table, args, source = run_with_args(b, spec)
     return _reconstruct.reconstruct_one(prob, spec, table, args, source)
+
+
+def extend_candidates(spec: Spec) -> list:
+    """Extend-capable route pool for an extended spec (DESIGN.md §11):
+    backends that both support the spec and declare ``run_extend``, ranked
+    on the ``extend`` calibration regime. Warm-start drains recompute only
+    the extension region, so their latencies never share entries with cold
+    solves (``backends.SHAPE_KEY_REGIMES`` keeps the keys disjoint)."""
+    cands = [b for b in _backends.candidates(spec)
+             if b.run_extend is not None]
+    if not cands:
+        return []
+    return _autotune.rank(spec, cands, suffix=EXTEND_SUFFIX)
+
+
+def run_extend(spec: Spec, old_len: int, state, backend=None):
+    """Execute a warm-start extension solve on the cheapest extend-capable
+    route (or an explicit override, validated here). ``state`` is the
+    resume payload from ``prefix.extension_state(...)``; the return is the
+    family-shaped extension output (see :class:`backends.Backend`)."""
+    if backend is not None:
+        b = (backend if isinstance(backend, _backends.Backend)
+             else _backends.get(backend))
+        if b.run_extend is None or not (b.geometry == spec.geometry
+                                        and b.supports(spec)):
+            raise ValueError(
+                f"backend {b.name!r} cannot extend this spec")
+    else:
+        cands = extend_candidates(spec)
+        if not cands:
+            raise RuntimeError(
+                f"no extend-capable backend for spec {spec.shape_key()}")
+        b = cands[0]
+    _telemetry.count("dp_routing_extend_total")
+    return b.run_extend(spec, old_len, state)
 
 
 def run_batch(b: _backends.Backend, specs: Sequence[Spec],

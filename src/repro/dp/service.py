@@ -28,6 +28,15 @@ star lands on:
     drains run through :class:`repro.dp.sharding.ShardedDPEngine`, padding
     ragged buckets over the mesh and feeding realized latencies back under
     the ``("shard", ndev)`` regime.
+  * **Streaming sessions** (DESIGN.md §11).
+    ``open_session()/append()/close_session()`` serve incrementally
+    growing instances: each append's longest already-solved prefix is
+    found through the chain-digest :class:`repro.dp.streaming.PrefixIndex`
+    and only the extension region is recomputed (an engine extend
+    bucket), sticky to the session's affine backend; results are
+    bit-identical to cold solves. Session state is knob-bounded:
+    ``REPRO_SESSION_TTL_MS`` (idle reclaim), ``REPRO_SESSION_MAX``
+    (session count), ``REPRO_SESSION_PREFIX_INDEX`` (index capacity).
 """
 from __future__ import annotations
 
@@ -37,8 +46,10 @@ from collections import OrderedDict
 from typing import Any, Optional
 
 from repro.dp import backends as _backends
+from repro.dp import envknobs as _envknobs
 from repro.dp import reconstruct as _reconstruct
 from repro.dp import registry as _registry
+from repro.dp import streaming as _streaming
 from repro.dp import telemetry as _telemetry
 from repro.dp.engine import DPEngine
 from repro.dp.problem import Answer, Spec, spec_digest
@@ -66,6 +77,16 @@ class Ticket:
     #: ``basic`` mode and above; 0.0 when telemetry is off)
     t_enqueued: float = 0.0
     t_dispatched: float = 0.0
+    #: warm-start handle (streaming sessions) — routes into an engine
+    #: extend bucket
+    resume: Optional[_streaming.ResumeToken] = None
+    #: owning streaming session, when any
+    sid: Optional[int] = None
+    #: retain the solved table on the response (prefix-index it)
+    keep_table: bool = False
+    #: digest chain value at the instance's full length (computed once at
+    #: append time; the prefix-index put reuses it)
+    chain_full: Optional[bytes] = None
 
 
 @dataclasses.dataclass
@@ -85,6 +106,11 @@ class ServiceResult:
     cached: bool = False
     latency_ms: float = 0.0
     span: Optional[_telemetry.Span] = None
+    #: resolved by a warm-start extend drain (or a full prefix-index hit)
+    #: instead of a cold solve
+    extended: bool = False
+    #: owning streaming session, when submitted through one
+    sid: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -92,6 +118,29 @@ class _CacheEntry:
     answer: Any
     solution: Optional[Answer]
     backend: str
+
+
+@dataclasses.dataclass
+class Session:
+    """One streaming session: a lineage of growing instances served with
+    warm starts and session-affine sticky routing (DESIGN.md §11)."""
+
+    sid: int
+    problem: str
+    opened_at: float
+    last_seen: float
+    #: sticky backend: the route that served this session's first solved
+    #: instance; later extends prefer it so the session keeps hitting
+    #: programs it already traced
+    affinity: Optional[str] = None
+    appends: int = 0
+    #: appends that warm-started off a stored prefix
+    extends: int = 0
+    #: length of the session's latest solved instance (0 until one lands)
+    length: int = 0
+    #: incremental digest-chain state — appends chain only their new
+    #: steps instead of re-walking the whole instance
+    cursor: Optional[_streaming.ChainCursor] = None
 
 
 class DPService:
@@ -172,9 +221,21 @@ class DPService:
         #: ``submitted == completed + pending() + expired + shed``
         self.stats = {"submitted": 0, "completed": 0, "cache_hits": 0,
                       "cache_misses": 0, "expired": 0, "rejected": 0,
-                      "shed": 0, "admitted": 0, "service_steps": 0}
+                      "shed": 0, "admitted": 0, "service_steps": 0,
+                      "sessions_opened": 0, "sessions_closed": 0,
+                      "sessions_expired": 0, "sessions_evicted": 0,
+                      "session_appends": 0,
+                      "prefix_hits": 0, "prefix_full_hits": 0,
+                      "prefix_misses": 0}
         #: tid -> live telemetry Span (``spans`` mode only)
         self._spans: dict = {}
+        # -- streaming sessions (DESIGN.md §11): knob-bounded session map
+        # plus the cross-session longest-prefix answer cache
+        self._next_sid = 0
+        self._sessions: "OrderedDict[int, Session]" = OrderedDict()
+        self.session_ttl_ms = _envknobs.read("REPRO_SESSION_TTL_MS")
+        self.session_max = _envknobs.read("REPRO_SESSION_MAX")
+        self.prefix_index = _streaming.PrefixIndex()
         _telemetry.REGISTRY.register_source("dp_service", self)
 
     # -- admission ---------------------------------------------------------
@@ -200,20 +261,52 @@ class DPService:
         ``status="expired"``."""
         prob = _registry.get(problem)
         spec = prob.encode(**payload)
+        return self._submit(prob, spec, priority, deadline_ms, reconstruct)
+
+    def _submit(self, prob, spec: Spec, priority: int,
+                deadline_ms: Optional[float], reconstruct: bool,
+                resume: Optional[_streaming.ResumeToken] = None,
+                sid: Optional[int] = None, keep_table: bool = False,
+                chain_full: Optional[bytes] = None,
+                serve: Optional[tuple] = None) -> int:
+        """Shared admission path for ``submit`` and session ``append``.
+        ``serve`` is a precomputed ``(answer, solution, backend,
+        extended)`` resolution (a full prefix-index hit) that bypasses the
+        cache and the backlog; ``resume`` routes the ticket into an engine
+        extend bucket."""
         if reconstruct:
             _reconstruct.check_reconstructable(prob, spec)
-        digest = spec_digest(spec)
+        # A session append already carries its chain digest at full
+        # length, which commits to the seed (non-step parameters) plus
+        # every step payload — the same content commitment spec_digest
+        # makes, minus an O(n) hash pass over the instance.
+        digest = chain_full if chain_full is not None else spec_digest(spec)
         now = time.monotonic()
-        ckey = (prob.name, digest, reconstruct)
-        hit = self._cache.get(ckey)
+        hit = strip_solution = None
+        if serve is None:
+            ckey = (prob.name, digest, reconstruct)
+            hit = self._cache.get(ckey)
+            if hit is not None:
+                self._cache.move_to_end(ckey)
+            elif not reconstruct:
+                # a reconstruct=True entry is strictly richer: its digest
+                # covers the same canonical payload and its answer is the
+                # same extract — serve plain hits from it rather than
+                # re-solving (the solution is withheld so the result keeps
+                # the non-reconstruct contract)
+                rich = self._cache.get((prob.name, digest, True))
+                if rich is not None:
+                    self._cache.move_to_end((prob.name, digest, True))
+                    hit, strip_solution = rich, True
         # submitted counts every request that reached admission — including
         # shed ones — so the §8 invariant
-        # submitted == completed + pending + expired + shed always balances
+        # submitted == completed + pending() + expired + shed always balances
         self.stats["submitted"] += 1
         span = _telemetry.new_span(self._next_tid, prob.name)
         if span is not None:
             span.add("admitted")
-        if hit is None and self.backlog() >= self.max_pending:
+        if (hit is None and serve is None
+                and self.backlog() >= self.max_pending):
             self.stats["rejected"] += 1
             self.stats["shed"] += 1
             _telemetry.count("dp_service_shed_total")
@@ -225,35 +318,169 @@ class DPService:
         tid = self._next_tid
         self._next_tid += 1
         _telemetry.count("dp_service_submitted_total")
-        if hit is not None:
-            self._cache.move_to_end(ckey)
-            self.stats["cache_hits"] += 1
+        if hit is not None or serve is not None:
+            if hit is not None:
+                answer = hit.answer
+                solution = None if strip_solution else hit.solution
+                backend_name, extended = hit.backend, False
+                self.stats["cache_hits"] += 1
+                _telemetry.count("dp_service_cache_hits_total")
+                if span is not None:
+                    span.add("cache_hit")
+            else:
+                answer, solution, backend_name, extended = serve
+                if span is not None:
+                    span.add("prefix_hit")
             self.stats["completed"] += 1
-            _telemetry.count("dp_service_cache_hits_total")
             _telemetry.observe_ms("dp_service_latency_ms", 0.0)
             if span is not None:
                 span.meta.update(status="done", cached=True,
-                                 backend=hit.backend)
-                _telemetry.finish_span(span.add("cache_hit").add("resolved"))
+                                 backend=backend_name)
+                _telemetry.finish_span(span.add("resolved"))
             _backends.lru_put(self._results, tid, ServiceResult(
-                tid=tid, problem=prob.name, status="done", answer=hit.answer,
-                solution=hit.solution, backend=hit.backend, cached=True,
-                latency_ms=0.0, span=span), self.results_max)
+                tid=tid, problem=prob.name, status="done", answer=answer,
+                solution=solution, backend=backend_name, cached=True,
+                latency_ms=0.0, span=span, extended=extended, sid=sid),
+                self.results_max)
             return tid
         self.stats["cache_misses"] += 1
         deadline = None if deadline_ms is None else now + deadline_ms / 1e3
         key = (prob.name, spec.shape_key(), reconstruct)
+        if resume is not None:
+            key += (("extend", resume.old_len),)
         self._unresolved.add(tid)
         ticket = Ticket(
             tid=tid, problem=prob.name, spec=spec, digest=digest,
             reconstruct=reconstruct, priority=priority, deadline=deadline,
             submitted_at=now,
-            t_enqueued=_telemetry.clock() if _telemetry.enabled() else 0.0)
+            t_enqueued=_telemetry.clock() if _telemetry.enabled() else 0.0,
+            resume=resume, sid=sid, keep_table=keep_table,
+            chain_full=chain_full)
         self._backlog.setdefault(key, []).append(ticket)
         if span is not None:
             span.add("enqueued", ticket.t_enqueued)
             self._spans[tid] = span
         return tid
+
+    # -- streaming sessions (DESIGN.md §11) --------------------------------
+    def open_session(self, problem: str) -> int:
+        """Open a streaming session for ``problem``; returns its sid.
+        Sessions hold no device state — they carry sticky routing affinity
+        and bookkeeping; the solved tables live in the (cross-session)
+        prefix index. Idle sessions are reclaimed past
+        ``REPRO_SESSION_TTL_MS``; the LRU session evicts past
+        ``REPRO_SESSION_MAX``."""
+        prob = _registry.get(problem)       # validates the name
+        self._sweep_sessions()
+        sid = self._next_sid
+        self._next_sid += 1
+        now = time.monotonic()
+        self._sessions[sid] = Session(sid=sid, problem=prob.name,
+                                      opened_at=now, last_seen=now)
+        while len(self._sessions) > self.session_max:
+            self._sessions.popitem(last=False)
+            self.stats["sessions_evicted"] += 1
+            _telemetry.count("dp_service_sessions_evicted_total")
+        self.stats["sessions_opened"] += 1
+        _telemetry.count("dp_service_sessions_opened_total")
+        return sid
+
+    def _session(self, sid: int) -> Session:
+        s = self._sessions.get(sid)
+        if s is None:
+            raise KeyError(f"unknown or expired session {sid}")
+        self._sessions.move_to_end(sid)
+        return s
+
+    def _sweep_sessions(self) -> None:
+        if not self._sessions:
+            return
+        cutoff = time.monotonic() - self.session_ttl_ms / 1e3
+        for sid in [k for k, s in self._sessions.items()
+                    if s.last_seen < cutoff]:
+            del self._sessions[sid]
+            self.stats["sessions_expired"] += 1
+            _telemetry.count("dp_service_sessions_expired_total")
+
+    def append(self, sid: int, priority: int = 0,
+               deadline_ms: Optional[float] = None,
+               reconstruct: bool = False, **payload) -> int:
+        """Grow the session's instance; returns a ticket id like
+        ``submit``. ``payload`` is the FULL new instance (prefix plus the
+        appended steps) — the service finds the longest already-solved
+        prefix through the chain-digest index and decides how to serve:
+
+          * full-length index hit → the stored table answers outright, no
+            device work;
+          * proper-prefix hit → a warm-start ticket (engine extend bucket)
+            recomputing only the extension, sticky to the session's
+            affine backend;
+          * miss → a cold ticket.
+
+        Either ticket retains its solved table in the prefix index, so
+        the *next* append — from this session or any other — warm-starts
+        off it."""
+        s = self._session(sid)
+        s.last_seen = time.monotonic()
+        s.appends += 1
+        self.stats["session_appends"] += 1
+        _telemetry.count("dp_service_session_appends_total")
+        prob = _registry.get(s.problem)
+        spec = prob.encode(**payload)
+        chain = s.cursor.advance(spec) if s.cursor is not None else None
+        if chain is None:          # first append, or not a pure extension
+            s.cursor = _streaming.ChainCursor(spec)
+            chain = s.cursor.chain
+        n = spec.extend_length()
+        streamable = chain.get(n) is not None
+        ent = (self.prefix_index.lookup(prob.name, spec, chain)
+               if streamable else None)
+        resume = serve = None
+        if ent is not None and ent.length == n:
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_full_hits"] += 1
+            _telemetry.count("dp_service_prefix_hits_total")
+            solution = None
+            if reconstruct:
+                _reconstruct.check_reconstructable(prob, spec)
+                args = _reconstruct.args_from_table(ent.table, spec)
+                solution = _reconstruct.reconstruct_one(
+                    prob, spec, ent.table, args, "host")
+            if s.affinity is None:
+                s.affinity = ent.backend
+            s.length = max(s.length, n)
+            serve = (prob.extract(ent.table, spec), solution,
+                     ent.backend, True)
+        elif ent is not None:
+            self.stats["prefix_hits"] += 1
+            _telemetry.count("dp_service_prefix_hits_total")
+            s.extends += 1
+            resume = ent.token(affinity=s.affinity)
+        else:
+            self.stats["prefix_misses"] += 1
+            _telemetry.count("dp_service_prefix_misses_total")
+        return self._submit(prob, spec, priority, deadline_ms, reconstruct,
+                            resume=resume, sid=sid,
+                            keep_table=serve is None and streamable,
+                            chain_full=chain.get(n), serve=serve)
+
+    def close_session(self, sid: int) -> dict:
+        """Close a session; returns its summary. Its prefix-index entries
+        stay — other sessions (or a reopened one) still warm-start off
+        them until LRU eviction."""
+        s = self._sessions.pop(sid, None)
+        if s is None:
+            raise KeyError(f"unknown or expired session {sid}")
+        self.stats["sessions_closed"] += 1
+        _telemetry.count("dp_service_sessions_closed_total")
+        return {"sid": s.sid, "problem": s.problem, "appends": s.appends,
+                "extends": s.extends, "affinity": s.affinity,
+                "length": s.length}
+
+    def session_stats(self) -> dict:
+        return {"open": len(self._sessions), "capacity": self.session_max,
+                "ttl_ms": self.session_ttl_ms,
+                "prefix_index": self.prefix_index.snapshot()}
 
     def poll(self, tid: int):
         """``None`` while the ticket is queued/in flight; its
@@ -315,7 +542,9 @@ class DPService:
     @staticmethod
     def _engine_key(t: Ticket) -> tuple:
         """The engine bucket a ticket lands in."""
-        return DPEngine.bucket_key(t.problem, t.spec, t.reconstruct)
+        return DPEngine.bucket_key(
+            t.problem, t.spec, t.reconstruct,
+            resume_len=None if t.resume is None else t.resume.old_len)
 
     def _drain_target(self) -> Optional[tuple]:
         """Most urgent engine bucket among in-flight tickets — the
@@ -354,7 +583,9 @@ class DPService:
             for t in take:
                 rid = self.engine.submit_spec(t.problem, t.spec,
                                               reconstruct=t.reconstruct,
-                                              digest=t.digest)
+                                              digest=t.digest,
+                                              resume=t.resume,
+                                              keep_table=t.keep_table)
                 self._inflight[rid] = t
                 t.t_dispatched = t_dispatch
                 span = self._spans.get(t.tid)
@@ -374,6 +605,7 @@ class DPService:
         one bucket. Returns the tids resolved this step (drained + newly
         expired)."""
         resolved = self._expire()
+        self._sweep_sessions()
         self._admit()
         responses = self.engine.step(backend=backend,
                                      bucket=self._drain_target())
@@ -388,9 +620,24 @@ class DPService:
                 answer=resp.answer, solution=resp.solution,
                 backend=resp.backend,
                 latency_ms=(time.monotonic() - t.submitted_at) * 1e3,
-                span=span)
+                span=span, extended=resp.extended, sid=t.sid)
             if drain is not None:
                 self._observe_phases(t, resp, drain, span, t_done)
+            if t.keep_table and resp.table is not None:
+                # index the solved table (cold or stitched) so the next
+                # append — this session's or any other's — warm-starts here
+                self.prefix_index.put(t.problem, t.spec, resp.table,
+                                      resp.backend, chain=t.chain_full)
+            if t.sid is not None:
+                s = self._sessions.get(t.sid)
+                if s is not None:
+                    # sticky to the route serving the session's steady
+                    # state: extends re-pin, so later appends keep hitting
+                    # the extend route's already-traced programs
+                    if s.affinity is None or resp.extended:
+                        s.affinity = resp.backend
+                    s.length = max(s.length, t.spec.extend_length())
+                    s.last_seen = time.monotonic()
             _backends.lru_put(self._results, t.tid, res, self.results_max)
             resolved.append(t.tid)
             self.stats["completed"] += 1
@@ -420,9 +667,10 @@ class DPService:
         phases = {
             "queue": (t.t_dispatched - t.t_enqueued) * 1e3,
             "dispatch": (drain.t_start - t.t_dispatched) * 1e3,
-            "solve": drain.phases.get("solve", 0.0),
         }
-        for ph in ("traceback", "decode"):
+        if not resp.extended:
+            phases["solve"] = drain.phases.get("solve", 0.0)
+        for ph in ("extend", "traceback", "decode"):
             if ph in drain.phases:
                 phases[ph] = drain.phases[ph]
         for ph, ms in phases.items():
@@ -432,12 +680,18 @@ class DPService:
         span.meta.update(status="done", backend=resp.backend,
                          batch_size=resp.batch_size, bucket=repr(drain.bucket),
                          cold=drain.cold, sharded=drain.sharded)
+        if resp.extended:
+            span.meta.update(extended=True, affine=resp.affine)
         tt = drain.t_start
         span.add("batched", tt)
         if drain.cold:
             span.add("retraced", tt)
-        tt += drain.phases.get("solve", 0.0) / 1e3
-        span.add("solved", tt)
+        if resp.extended:
+            tt += drain.phases.get("extend", 0.0) / 1e3
+            span.add("extended", tt)
+        else:
+            tt += drain.phases.get("solve", 0.0) / 1e3
+            span.add("solved", tt)
         if "traceback" in drain.phases:
             tt += drain.phases["traceback"] / 1e3
             span.add("traceback", tt)

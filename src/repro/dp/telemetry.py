@@ -8,8 +8,9 @@ observability subsystem every layer reports into:
   * **Structured request spans.** In ``spans`` mode every
     ``DPService.submit()`` opens a :class:`Span` that accumulates
     timestamped events (``admitted``, ``enqueued``, ``dispatched``,
-    ``batched``, ``retraced``, ``solved``, ``traceback``, ``decoded``,
-    ``dedup_fanout``, ``cache_hit``, ``expired``, ``shed``, ``resolved``)
+    ``batched``, ``retraced``, ``solved``, ``extended``, ``traceback``,
+    ``decoded``, ``dedup_fanout``, ``cache_hit``, ``prefix_hit``,
+    ``expired``, ``shed``, ``resolved``)
     and rides back on the :class:`~repro.dp.service.ServiceResult` from
     ``poll()``. Completed spans also land in a bounded ring for snapshot
     export.
@@ -439,6 +440,7 @@ _PHASE_EDGES = (
     ("queue", "enqueued", "dispatched"),      # backlog wait
     ("dispatch", "dispatched", "batched"),    # engine bucket wait
     ("solve", "batched", "solved"),           # the batched device call
+    ("extend", "batched", "extended"),        # warm-start extension solve
     ("traceback", "solved", "traceback"),     # batched path walk
     ("decode", "traceback", "decoded"),       # problem-level decode
 )

@@ -342,7 +342,88 @@ def test_reconstruct_through_pallas_interpret(name, monkeypatch):
 
 
 # ---------------------------------------------------------------------------
-# 5. Static-analysis contract: every route declares its schedule (§10)
+# 5. Incremental equivalence: prefix solve + extend == cold solve (§11)
+# ---------------------------------------------------------------------------
+def _split_len(spec, k: int = 3) -> int:
+    """A legal prefix length ``k`` steps short of the full instance."""
+    n, lo = spec.extend_length(), spec.min_prefix_len()
+    L = max(lo, n - k)
+    if not lo <= L < n:
+        pytest.skip(f"no legal split for n={n} (min prefix {lo})")
+    return L
+
+
+@pytest.mark.parametrize("name", ALL_PROBLEMS)
+def test_incremental_equivalence(name):
+    """Solve the length-L prefix, extend k steps, and get byte-identical
+    tables — hence identical args and decoded solutions — vs the cold
+    solve of the full instance. The streaming subsystem's core invariant:
+    warm and cold results are interchangeable everywhere. Bit-identity is
+    a per-route contract (routes may differ in the last ulp), so cold,
+    prefix, and extension all run on the extend-capable route."""
+    from repro.dp import reconstruct as _reconstruct
+    from repro.dp import routing as _routing
+
+    prob = dp.get_problem(name)
+    rng = _rng(f"conf-extend/{name}")
+    for trial in range(2):
+        kw = prob.sample(rng, int(rng.integers(8, 13)))
+        spec = prob.encode(**kw)
+        ext_routes = _routing.extend_candidates(spec)
+        assert ext_routes, f"no extend-capable route for {name}"
+        route = ext_routes[0]
+        L = _split_len(spec)
+        cold = np.asarray(dp.solve_spec(spec, backend=route.name))
+        prefix = spec.split_spec(L)
+        ptab = np.asarray(dp.solve_spec(prefix, backend=route.name))
+        token = dp.ResumeToken(prefix_spec=prefix, prefix_table=ptab)
+        warm = np.asarray(dp.resume_solve(spec, token, backend=route))
+        assert warm.dtype == cold.dtype and warm.shape == cold.shape
+        assert warm.tobytes() == cold.tobytes(), \
+            f"{name} trial {trial}: warm table != cold table"
+        # identical tables induce identical args and decoded solutions;
+        # decode the warm result and check it against the raw instance
+        a_cold = np.asarray(_reconstruct.args_from_table(cold, spec))
+        a_warm = np.asarray(_reconstruct.args_from_table(warm, spec))
+        assert a_warm.tobytes() == a_cold.tobytes(), name
+        ans = _reconstruct.reconstruct_one(prob, spec, warm, a_warm, "host")
+        ref = _reconstruct.reconstruct_one(prob, spec, cold, a_cold, "host")
+        assert repr(ans.solution) == repr(ref.solution), name
+        got, want = VERIFIERS[name](kw, ans)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5,
+                                   err_msg=f"{name} trial {trial} (warm)")
+
+
+@pytest.mark.parametrize("name", ALL_PROBLEMS)
+def test_incremental_equivalence_through_pallas_interpret(name, monkeypatch):
+    """The equivalence holds across routes: a prefix solved on the
+    family's Pallas kernel route (interpret mode) extends — via the
+    extend-capable jnp route — to the byte-identical table the kernel's
+    own cold solve produces."""
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    prob = dp.get_problem(name)
+    kernel_route, _ = KERNEL_ROUTES[prob.geometry]
+    rng = _rng(f"conf-extend-pallas/{name}")
+    kw = prob.sample(rng, 6)
+    spec = prob.encode(**kw)
+    assert kernel_route in [b.name for b in dp.backends.candidates(spec)], \
+        f"{kernel_route} not offered for {name}"
+    L = _split_len(spec, k=2)
+    cold = np.asarray(dp.solve_spec(spec, backend=kernel_route))
+    prefix = spec.split_spec(L)
+    if kernel_route in [b.name for b in dp.backends.candidates(prefix)]:
+        ptab = np.asarray(dp.solve_spec(prefix, backend=kernel_route))
+    else:
+        ptab = np.asarray(dp.solve_spec(prefix))
+    token = dp.ResumeToken(prefix_spec=prefix, prefix_table=ptab)
+    warm = np.asarray(dp.resume_solve(spec, token))
+    assert warm.dtype == cold.dtype
+    assert warm.tobytes() == cold.tobytes(), \
+        f"{name}: extend off a {kernel_route} prefix != {kernel_route} cold"
+
+
+# ---------------------------------------------------------------------------
+# 6. Static-analysis contract: every route declares its schedule (§10)
 # ---------------------------------------------------------------------------
 def _all_routes():
     dp.backends.ensure_registered()

@@ -119,9 +119,15 @@ def test_reconstruct_answers_cache_and_match():
     assert res.cached
     assert res.solution.solution == first.solution.solution
     assert res.answer == first.answer
-    # plain and reconstruct never share cache entries
+    # a reconstruct entry is strictly richer: it serves a later plain hit
+    # (same answer, solution withheld) without a second device call
     tid_plain = svc.submit("mcm", dims=dims)
-    assert svc.poll(tid_plain) is None
+    res_plain = svc.poll(tid_plain)
+    assert res_plain is not None and res_plain.cached
+    assert res_plain.answer == first.answer and res_plain.solution is None
+    # the reverse direction still misses: a plain entry has no solution to
+    # serve a reconstruct request from
+    assert svc.stats["cache_misses"] == 1
     svc.run()
 
 

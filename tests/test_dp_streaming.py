@@ -1,0 +1,277 @@
+"""Streaming subsystem tests (DESIGN.md §11): resume tokens and their
+validation, the chain-digest longest-prefix index, engine extend buckets,
+service sessions (lifecycle, affinity, TTL/eviction knobs), and the
+extension-state sufficiency verifier — including its rejection of the
+classic undersized "trailing diagonals" triangular resume state.
+
+The bit-identity of warm vs cold solves themselves is the conformance
+suite's incremental-equivalence leg (`test_dp_conformance.py`); this file
+covers the machinery around it.
+"""
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro import dp
+from repro.analysis import verify_extension
+from repro.core.mcm import lin_index, mcm_weight_fn, num_cells, weight_table
+from repro.dp import routing as _routing
+from repro.dp.problem import TriangularSpec
+
+
+def _rng(tag: str) -> np.random.Generator:
+    return np.random.default_rng(zlib.crc32(tag.encode()))
+
+
+def _viterbi_pair(tag: str, t_prefix: int = 8, t_full: int = 12):
+    """A viterbi instance and a longer one sharing its prefix."""
+    prob = dp.get_problem("viterbi")
+    rng = _rng(tag)
+    kw = prob.sample(rng, t_prefix)
+    n_sym = np.asarray(kw["log_b"]).shape[1]
+    extra = rng.integers(0, n_sym, size=t_full - len(kw["obs"]))
+    kw_full = dict(kw, obs=np.concatenate([np.asarray(kw["obs"]), extra]))
+    return prob, kw, kw_full
+
+
+# ---------------------------------------------------------------------------
+# Extension-state sufficiency verifier (analysis gate, satellite 3)
+# ---------------------------------------------------------------------------
+def _mcm_spec(n: int) -> TriangularSpec:
+    dims = np.arange(2.0, n + 3.0)
+    return TriangularSpec(n=n, weights=weight_table(n, mcm_weight_fn(dims)),
+                          dims=dims)
+
+
+def test_verifier_proves_registered_family_states():
+    """Every registered family's declared resume state is sufficient at
+    every legal prefix of its probe instances (the gate's sweep, inlined
+    for one probe per family)."""
+    from repro.dp.problem import FAMILIES
+
+    for fam in sorted(FAMILIES):
+        spec = FAMILIES[fam].probe_specs()[0]
+        for L in range(spec.min_prefix_len(), spec.extend_length()):
+            assert verify_extension(spec, L) == [], (fam, L)
+
+
+def test_verifier_rejects_undersized_triangular_state():
+    """The tempting "last two diagonals" resume state for triangular
+    charts is provably insufficient: a new cell (i, j) reads split points
+    across the entire prefix chart. The verifier must reject it with an
+    unsaved-operand witness — this is the fixture that keeps the full-
+    table TriangularSpec state honest."""
+    spec, L = _mcm_spec(6), 4
+    prefix = spec.split_spec(L)
+    pmap = np.asarray(spec.prefix_cell_map(prefix))
+    rows = []
+    for d in (L - 2, L - 1):                 # trailing 2 prefix diagonals
+        start = lin_index(0, d, L)
+        rows.extend(range(start, start + (L - d)))
+    undersized = pmap[rows]
+    findings = verify_extension(spec, L, saved_cells=undersized)
+    assert findings, "undersized trailing-diagonal state must be rejected"
+    assert {f.check for f in findings} == {"insufficient_resume_state"}
+    assert all(f.detail["unsaved_operands"] for f in findings)
+    # the family's real saved state (the full prefix table) proves out
+    assert verify_extension(spec, L) == []
+
+
+def test_verifier_flags_saved_cells_outside_prefix():
+    spec, L = _mcm_spec(6), 4
+    prefix = spec.split_spec(L)
+    pmap = np.asarray(spec.prefix_cell_map(prefix))
+    ext_cell = min(set(range(num_cells(spec.n))) - set(pmap.tolist()))
+    findings = verify_extension(spec, L,
+                                saved_cells=list(pmap) + [ext_cell])
+    assert [f.check for f in findings] == ["saved_state_outside_prefix"]
+    assert ext_cell in findings[0].detail["cells"]
+
+
+# ---------------------------------------------------------------------------
+# Resume tokens and validation
+# ---------------------------------------------------------------------------
+def test_resume_token_validation_errors():
+    prob, kw, kw_full = _viterbi_pair("stream-validate")
+    spec_prefix = prob.encode(**kw)
+    spec_full = prob.encode(**kw_full)
+    tab = np.asarray(dp.solve_spec(spec_prefix))
+    tok = dp.ResumeToken(prefix_spec=spec_prefix, prefix_table=tab)
+
+    # not an extension: same length
+    with pytest.raises(ValueError, match="cannot extend"):
+        dp.streaming.check_extends(spec_prefix, tok)
+    # tampered prefix content: same shapes, different payload bytes
+    kw_bad = dict(kw_full)
+    kw_bad["obs"] = np.asarray(kw_bad["obs"]).copy()
+    kw_bad["obs"][0] = (kw_bad["obs"][0] + 1) % np.asarray(
+        kw["log_b"]).shape[1]
+    with pytest.raises(ValueError, match="chain-digest mismatch"):
+        dp.resume_solve(prob.encode(**kw_bad), tok)
+    # the honest extension validates and solves
+    warm = dp.resume_solve(spec_full, tok)
+    np.testing.assert_allclose(np.asarray(warm)[-1],
+                               np.asarray(dp.solve_spec(spec_full))[-1],
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex: longest-prefix lookup, full hits, LRU
+# ---------------------------------------------------------------------------
+def test_prefix_index_longest_prefix_and_full_hit():
+    prob, kw, kw_full = _viterbi_pair("stream-index")
+    spec_prefix = prob.encode(**kw)
+    spec_full = prob.encode(**kw_full)
+    idx = dp.PrefixIndex(capacity=8)
+
+    assert idx.lookup(prob.name, spec_full) is None      # cold miss
+    idx.put(prob.name, spec_prefix,
+            np.asarray(dp.solve_spec(spec_prefix)), backend="sequential")
+    ent = idx.lookup(prob.name, spec_full)               # proper prefix
+    assert ent is not None and ent.length == spec_prefix.extend_length()
+    assert not ent.table.flags.writeable, "stored tables must be frozen"
+
+    # extending off the hit and indexing the result gives a full hit
+    warm = dp.resume_solve(spec_full, ent.token(), validate=False)
+    idx.put(prob.name, spec_full, warm, backend="sequential")
+    ent2 = idx.lookup(prob.name, spec_full)
+    assert ent2 is not None and ent2.length == spec_full.extend_length()
+    snap = idx.snapshot()
+    assert snap["full_hits"] == 1 and snap["hits"] == 2
+    assert snap["misses"] == 1 and 0 < snap["hit_rate"] < 1
+
+
+def test_prefix_index_lru_eviction():
+    prob = dp.get_problem("viterbi")
+    rng = _rng("stream-lru")
+    idx = dp.PrefixIndex(capacity=2)
+    specs = [prob.encode(**prob.sample(rng, 7)) for _ in range(3)]
+    for s in specs:
+        idx.put(prob.name, s, np.asarray(dp.solve_spec(s)), backend="x")
+    assert len(idx) == 2
+    assert idx.lookup(prob.name, specs[0]) is None       # LRU-evicted
+    assert idx.lookup(prob.name, specs[2]) is not None
+    with pytest.raises(ValueError):
+        dp.PrefixIndex(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Engine extend buckets
+# ---------------------------------------------------------------------------
+def test_engine_extend_bucket_isolation_and_response():
+    prob, kw, kw_full = _viterbi_pair("stream-engine")
+    spec_prefix = prob.encode(**kw)
+    route = _routing.extend_candidates(prob.encode(**kw_full))[0]
+    tab = np.asarray(dp.solve_spec(spec_prefix, backend=route.name))
+    tok = dp.ResumeToken(prefix_spec=spec_prefix, prefix_table=tab,
+                         affinity=route.name)
+
+    eng = dp.DPEngine(max_batch=8)
+    rid_warm = eng.submit("viterbi", resume=tok, keep_table=True, **kw_full)
+    rid_cold = eng.submit("viterbi", **kw_full)
+    keys = list(eng._buckets)
+    assert len(keys) == 2, "extends must never share a cold bucket"
+    assert sum(eng.is_extend_bucket(k) for k in keys) == 1
+    out = eng.run()
+    warm, cold = out[rid_warm], out[rid_cold]
+    assert warm.extended and not cold.extended
+    assert warm.affine, "resume affinity names an extend route: must stick"
+    assert warm.table is not None and cold.table is None
+    np.testing.assert_allclose(np.float64(warm.answer),
+                               np.float64(cold.answer), rtol=1e-6)
+    assert eng.stats["extend_drains"] == 1
+    assert eng.stats["extend_requests"] == 1
+    assert eng.stats["affine_lanes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Service sessions
+# ---------------------------------------------------------------------------
+def test_service_session_lifecycle():
+    """open → cold append → extend append → duplicate append (full
+    prefix-index hit, no device work) → close summary."""
+    prob = dp.get_problem("unbounded_knapsack")
+    rng = _rng("stream-session")
+    kw = prob.sample(rng, 8)
+    grow = lambda c: dict(kw, capacity=int(kw["capacity"]) + c)
+
+    svc = dp.DPService(max_batch=8)
+    sid = svc.open_session("unbounded_knapsack")
+    t1 = svc.append(sid, **kw)
+    r1 = svc.run()[t1]
+    assert r1.sid == sid and not r1.extended and not r1.cached
+
+    t2 = svc.append(sid, **grow(4))
+    r2 = svc.run()[t2]
+    assert r2.extended and not r2.cached, "second append must warm-start"
+    np.testing.assert_allclose(
+        np.float64(r2.answer),
+        np.float64(dp.solve("unbounded_knapsack", **grow(4))), rtol=1e-6)
+
+    t3 = svc.append(sid, **grow(4))          # same length again
+    r3 = svc.poll(t3)                        # resolved at admission
+    assert r3 is not None and r3.cached and r3.extended
+    assert r3.answer == r2.answer
+
+    assert svc.stats["prefix_hits"] == 2
+    assert svc.stats["prefix_full_hits"] == 1
+    assert svc.stats["session_appends"] == 3
+    sstats = svc.session_stats()
+    assert sstats["open"] == 1
+    assert sstats["prefix_index"]["size"] == 2
+
+    summary = svc.close_session(sid)
+    assert summary["appends"] == 3 and summary["extends"] == 1
+    assert summary["affinity"] is not None
+    with pytest.raises(KeyError):
+        svc.append(sid, **grow(8))
+    with pytest.raises(KeyError):
+        svc.close_session(sid)
+
+
+def test_service_cross_session_warm_start():
+    """Prefix-index entries outlive their session: a second session over
+    the same growing instance extends off the first one's solves."""
+    prob = dp.get_problem("needleman_wunsch")
+    rng = _rng("stream-cross")
+    kw = prob.sample(rng, 8)
+    y = np.asarray(kw["y"])
+    kw_full = dict(kw, y=np.concatenate([y, y[:2]]))
+
+    svc = dp.DPService(max_batch=8)
+    sid1 = svc.open_session("needleman_wunsch")
+    t1 = svc.append(sid1, **kw)
+    assert not svc.run()[t1].extended
+    svc.close_session(sid1)
+
+    sid2 = svc.open_session("needleman_wunsch")
+    t2 = svc.append(sid2, **kw_full)
+    r2 = svc.run()[t2]
+    assert r2.extended, "fresh session must warm-start off the index"
+    np.testing.assert_allclose(
+        np.float64(r2.answer),
+        np.float64(dp.solve("needleman_wunsch", **kw_full)), rtol=1e-6)
+
+
+def test_service_session_capacity_and_ttl_knobs(monkeypatch):
+    monkeypatch.setenv("REPRO_SESSION_MAX", "2")
+    monkeypatch.setenv("REPRO_SESSION_TTL_MS", "1")
+    svc = dp.DPService(max_batch=4)
+    assert svc.session_max == 2 and svc.session_ttl_ms == 1
+
+    a = svc.open_session("mcm")
+    b = svc.open_session("mcm")
+    c = svc.open_session("mcm")              # evicts the LRU session (a)
+    assert svc.stats["sessions_evicted"] == 1
+    with pytest.raises(KeyError):
+        svc.close_session(a)
+
+    time.sleep(0.01)                         # both survivors idle past TTL
+    svc.step()
+    assert svc.stats["sessions_expired"] == 2
+    for sid in (b, c):
+        with pytest.raises(KeyError):
+            svc.close_session(sid)
+    assert svc.session_stats()["open"] == 0
